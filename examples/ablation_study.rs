@@ -1,0 +1,14 @@
+//! Ablation study (paper Table 3 + Table 7): runs the component ablation
+//! and the angular-loss ablation at quick scale.
+//!
+//!   cargo run --release --example ablation_study
+
+use anyhow::Result;
+use ptq161::experiments::{self, ExperimentCtx};
+
+fn main() -> Result<()> {
+    let mut ctx = ExperimentCtx::quick()?;
+    experiments::run(&mut ctx, "t3")?;
+    experiments::run(&mut ctx, "t7")?;
+    Ok(())
+}

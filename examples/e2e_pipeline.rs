@@ -1,0 +1,45 @@
+//! End-to-end driver (the repo's validation workload): pretrains the tiny
+//! transformer on the synthetic corpus while logging the loss curve, runs
+//! quantization preprocessing, quantizes with every method in Table 1, and
+//! prints the paper-shaped comparison. Results are recorded in
+//! EXPERIMENTS.md.
+//!
+//!   cargo run --release --example e2e_pipeline [-- --full]
+
+use anyhow::Result;
+use ptq161::coordinator::pretrain::{pretrain, PretrainConfig};
+use ptq161::coordinator::Pipeline;
+use ptq161::experiments::{self, ExperimentCtx};
+use ptq161::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let mut ctx = if args.flag("quick") {
+        ExperimentCtx::quick()?
+    } else {
+        ExperimentCtx::new(args.flag("full"))?
+    };
+
+    // Phase 1: pretraining with an explicit loss curve (fresh run so the
+    // curve is visible even when a cached checkpoint exists).
+    let pipe = Pipeline::new(&ctx.rt, "tiny")?;
+    let steps = if args.flag("quick") { 60 } else { 200 };
+    let res = pretrain(
+        &pipe,
+        &ctx.wiki,
+        &PretrainConfig { steps, ..Default::default() },
+    )?;
+    println!("\n== pretraining loss curve (tiny, {steps} steps) ==");
+    for (s, l) in &res.curve {
+        println!("step {s:>4}  loss {l:.4}");
+    }
+    let first = res.curve.first().unwrap().1;
+    let last = res.curve.last().unwrap().1;
+    assert!(last < first * 0.6, "training must make clear progress");
+
+    // Phase 2+3: the full Table-1 regeneration (quantize all methods,
+    // PPL on both corpora) plus the bit-accounting check.
+    experiments::run(&mut ctx, "t1")?;
+    experiments::run(&mut ctx, "appA")?;
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Quickstart: load (or pretrain) a tiny model, quantize it to 1.61-bit
+//! with PTQ1.61, and compare perplexity against the FP model — including
+//! through the fused Pallas-kernel path that a real deployment would run.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ppl::perplexity;
+use ptq161::eval::ModelEval;
+use ptq161::experiments::ExperimentCtx;
+
+fn main() -> Result<()> {
+    let mut ctx = ExperimentCtx::quick()?;
+    let model = "tiny";
+
+    // 1. a pretrained starting point (cached under runs/)
+    let fp = ctx.pretrained(model)?;
+    println!("model '{model}': {} parameters", fp.total_params());
+
+    // 2. PTQ1.61: structured mask + block-wise learned scaling factors on
+    //    the preprocessed (restorative-LoRA) checkpoint
+    let qm = ctx.quantized(model, "ptq161", true)?;
+    println!(
+        "quantized with {} -> {:.3} effective bits/weight (4096^2 layer)",
+        qm.method, qm.avg_bits
+    );
+
+    // 3. evaluate: FP vs fake-quant dense vs the fused kernel path
+    let fp_ppl = ctx.ppl(model, &fp, &ctx.wiki.clone())?;
+    let q_ppl = ctx.ppl(model, &qm.params, &ctx.wiki.clone())?;
+    let pipe = Pipeline::new(&ctx.rt, model)?;
+    let fused_ppl = perplexity(
+        &pipe,
+        &ModelEval::Fused {
+            params: &qm.params,
+            parts: qm.parts.as_ref().expect("ptq161 carries parts"),
+        },
+        &ctx.wiki,
+        ctx.ppl_batches,
+    )?;
+    println!("ppl (wiki): FP {fp_ppl:.2} | PTQ1.61 dense {q_ppl:.2} | fused kernel {fused_ppl:.2}");
+    assert!((q_ppl - fused_ppl).abs() < 0.05, "kernel path must agree");
+    Ok(())
+}

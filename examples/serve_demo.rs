@@ -1,0 +1,68 @@
+//! Serving demo: batched greedy generation from the quantized model with
+//! latency/throughput reporting (paper section F) plus the packed-memory
+//! comparison of Table 12.
+//!
+//!   cargo run --release --example serve_demo
+
+use anyhow::Result;
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::experiments::ExperimentCtx;
+use ptq161::packing::bitwidth::BitScheme;
+use ptq161::packing::memory::table12_row;
+use ptq161::serve::batcher::Batcher;
+use ptq161::serve::{generate_batch, GenRequest, ServeStats};
+
+fn main() -> Result<()> {
+    let mut ctx = ExperimentCtx::quick()?;
+    let qm = ctx.quantized("tiny", "ptq161", true)?;
+    let pipe = Pipeline::new(&ctx.rt, "tiny")?;
+
+    let prompts = [
+        "the quiet river of alda holds the ",
+        "key boris is ",
+        "3 plus 4 equals ",
+        "the golden tower of celia ",
+        "you know darin finds a ",
+        "in the end it was the ",
+        "the ancient engine of elena ",
+        "key mira is ",
+    ];
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for p in prompts {
+        batcher.submit(GenRequest { prompt: p.into(), max_new_tokens: 12 });
+    }
+    let mut stats = ServeStats::default();
+    let model = ModelEval::Dense(&qm.params);
+    while let Some(batch) = batcher.next_batch() {
+        let reqs: Vec<GenRequest> =
+            batch.iter().map(|(_, r)| r.clone()).collect();
+        let t0 = std::time::Instant::now();
+        let resps = generate_batch(&pipe, &model, &reqs)?;
+        stats.total_ms += t0.elapsed().as_secs_f64() * 1000.0;
+        for r in resps {
+            println!("-> {}", r.text.replace('\n', " "));
+            stats.requests += 1;
+            stats.total_new_tokens += r.new_tokens;
+            stats.per_request_ms.push(r.latency_ms);
+        }
+    }
+    println!(
+        "\nserved {} requests | throughput {:.1} tok/s | p50 {:.0} ms | p95 {:.0} ms",
+        stats.requests,
+        stats.throughput_tok_s(),
+        stats.p50_ms(),
+        stats.p95_ms()
+    );
+
+    println!("\npacked checkpoint sizes at real LLaMA shapes (Table 12):");
+    for (label, scheme) in [
+        ("PB-LLM ", BitScheme::PbLlm { salient_ratio: 0.1 }),
+        ("BiLLM  ", BitScheme::BiLlm),
+        ("PTQ1.61", BitScheme::Ptq161 { salient_ratio: 0.2 }),
+    ] {
+        let (gb7, gb13) = table12_row(scheme);
+        println!("  {label}  7B {gb7:.2} GiB   13B {gb13:.2} GiB");
+    }
+    Ok(())
+}

@@ -1,0 +1,256 @@
+"""AOT compiler: lower every L2 graph to HLO *text* + write the manifest.
+
+HLO text (never ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 rust crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--configs tiny,small]
+
+The manifest (artifacts/manifest.json) is the binary contract with the Rust
+runtime: canonical parameter order, every artifact's input/output names,
+shapes and dtypes, and the model configs themselves.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def i32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def _io(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def block_param_ios(cfg, prefix=""):
+    return [_io(prefix + n.split(".", 1)[1], s)
+            for n, s in M.block_param_spec(cfg, 0)]
+
+
+def qparts_ios(cfg):
+    ios = []
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        ios += [
+            _io(f"{n}.w_sal", (out, inn)),
+            _io(f"{n}.sign_ns", (out, inn)),
+            _io(f"{n}.alpha_s", (out,)),
+            _io(f"{n}.alpha_r1", (out,)),
+            _io(f"{n}.alpha_r2", (inn,)),
+            _io(f"{n}.mu", (out,)),
+        ]
+    return ios
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry: name -> (fn, input ios, output ios)
+# ---------------------------------------------------------------------------
+
+def build_artifacts(cfg):
+    d, ffn, vocab = cfg["d"], cfg["ffn"], cfg["vocab"]
+    t, be, bt = cfg["seq"], cfg["b_eval"], cfg["b_train"]
+    nl = len(M.LINEARS)
+    nlin = cfg["n_layers"] * nl
+    arts = {}
+
+    # --- embed_fwd ---
+    def embed_fn(tokens, embed):
+        return (M.embed_fwd(tokens, embed),)
+    arts["embed_fwd"] = (
+        embed_fn,
+        [_io("tokens", (be, t), "i32"), _io("embed", (vocab, d))],
+        [_io("h", (be, t, d))],
+    )
+
+    # --- block_fwd / block_capture ---
+    bp_names = [n for n, _ in M.block_param_spec(cfg, 0)]
+
+    def block_fn(h, *ps):
+        p = {n.split(".", 1)[1]: x for n, x in zip(bp_names, ps)}
+        return (M.block_fwd(h, p, cfg),)
+
+    def capture_fn(h, *ps):
+        p = {n.split(".", 1)[1]: x for n, x in zip(bp_names, ps)}
+        return M.block_capture(h, p, cfg)
+
+    bp_ios = block_param_ios(cfg)
+    arts["block_fwd"] = (
+        block_fn, [_io("h", (be, t, d))] + bp_ios, [_io("h_out", (be, t, d))]
+    )
+    arts["block_capture"] = (
+        capture_fn,
+        [_io("h", (be, t, d))] + bp_ios,
+        [
+            _io("x_attn", (be, t, d)), _io("x_o", (be, t, d)),
+            _io("x_mlp", (be, t, d)), _io("x_down", (be, t, ffn)),
+            _io("h_out", (be, t, d)),
+        ],
+    )
+
+    # --- qblock_fwd (fused Pallas kernel inside) ---
+    def qblock_fn(h, attn_norm, mlp_norm, *parts):
+        qp = {}
+        for i, n in enumerate(M.LINEARS):
+            qp[n] = tuple(parts[6 * i:6 * i + 6])
+        return (M.qblock_fwd(h, (attn_norm, mlp_norm), qp, cfg),)
+
+    arts["qblock_fwd"] = (
+        qblock_fn,
+        [_io("h", (be, t, d)), _io("attn_norm", (d,)), _io("mlp_norm", (d,))]
+        + qparts_ios(cfg),
+        [_io("h_out", (be, t, d))],
+    )
+
+    # --- qblock_w4a4_fwd (SmoothQuant, Table 13) ---
+    def w4a4_fn(h, *args):
+        p = {n.split(".", 1)[1]: x for n, x in zip(bp_names, args[:len(bp_names)])}
+        s_attn, s_o, s_mlp, s_down = args[len(bp_names):]
+        smooth = {"wq": s_attn, "wk": s_attn, "wv": s_attn, "wo": s_o,
+                  "w_gate": s_mlp, "w_up": s_mlp, "w_down": s_down}
+        return (M.qblock_w4a4_fwd(h, p, smooth, cfg),)
+
+    arts["qblock_w4a4_fwd"] = (
+        w4a4_fn,
+        [_io("h", (be, t, d))] + bp_ios
+        + [_io("s_attn", (d,)), _io("s_o", (d,)), _io("s_mlp", (d,)),
+           _io("s_down", (ffn,))],
+        [_io("h_out", (be, t, d))],
+    )
+
+    # --- head_fwd ---
+    def head_fn(h, norm_f, w_out, tokens):
+        return M.head_fwd(h, norm_f, w_out, tokens)
+
+    arts["head_fwd"] = (
+        head_fn,
+        [_io("h", (be, t, d)), _io("norm_f", (d,)),
+         _io("w_out", (vocab, d)), _io("tokens", (be, t), "i32")],
+        [_io("nll_sum", ()), _io("logits", (be, t, vocab))],
+    )
+
+    # --- lm_grad (pretraining) ---
+    spec = M.param_spec(cfg)
+    param_ios = [_io(n, s) for n, s in spec]
+    arts["lm_grad"] = (
+        M.lm_grad_fn(cfg),
+        param_ios + [_io("tokens", (bt, t), "i32")],
+        [_io("loss", ())] + [_io("g." + n, s) for n, s in spec],
+    )
+
+    # --- lora_grad (preprocessing) ---
+    ab_ios, ab_outs, mask_ios = [], [], []
+    r = cfg["lora_rank"]
+    for l in range(cfg["n_layers"]):
+        for n in M.LINEARS:
+            out, inn = M.linear_shape(cfg, n)
+            ab_ios += [_io(f"l{l}.{n}.A", (r, inn)),
+                       _io(f"l{l}.{n}.B", (out, r))]
+            ab_outs += [_io(f"g.l{l}.{n}.A", (r, inn)),
+                        _io(f"g.l{l}.{n}.B", (out, r))]
+    for l in range(cfg["n_layers"]):
+        for n in M.LINEARS:
+            _, inn = M.linear_shape(cfg, n)
+            mask_ios.append(_io(f"l{l}.{n}.mask", (inn,)))
+    arts["lora_grad"] = (
+        M.lora_grad_fn(cfg),
+        param_ios + ab_ios + mask_ios + [_io("tokens", (bt, t), "i32")],
+        [_io("loss", ())] + ab_outs,
+    )
+
+    # --- block_opt_grad (Eq. 5-7) ---
+    learn_ios, learn_outs, const_ios = [], [], []
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        learn_ios += [_io(f"{n}.alpha_s", (out,)), _io(f"{n}.alpha_r1", (out,)),
+                      _io(f"{n}.alpha_r2", (inn,)), _io(f"{n}.mu", (out,))]
+        learn_outs += [_io(f"g.{n}.alpha_s", (out,)),
+                       _io(f"g.{n}.alpha_r1", (out,)),
+                       _io(f"g.{n}.alpha_r2", (inn,)),
+                       _io(f"g.{n}.mu", (out,))]
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        const_ios += [_io(f"{n}.w_sal", (out, inn)),
+                      _io(f"{n}.sign_ns", (out, inn))]
+    arts["block_opt_grad"] = (
+        M.block_opt_grad_fn(cfg),
+        learn_ios
+        + [_io("x_q", (be, t, d)), _io("f1", (be, t, d)),
+           _io("f3", (be, t, d)), _io("attn_norm", (d,)),
+           _io("mlp_norm", (d,))]
+        + const_ios + [_io("nlc_w", ())],
+        [_io("loss", ())] + learn_outs,
+    )
+
+    return arts
+
+
+def lower_artifact(fn, in_ios):
+    specs = []
+    for io in in_ios:
+        mk = i32 if io["dtype"] == "i32" else f32
+        specs.append(mk(io["shape"]))
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--only", default=None,
+                    help="comma list of artifact base names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"configs": {}, "param_spec": {}, "linears": M.LINEARS,
+                "artifacts": []}
+    only = set(args.only.split(",")) if args.only else None
+    for cname in args.configs.split(","):
+        cfg = M.CONFIGS[cname]
+        manifest["configs"][cname] = cfg
+        manifest["param_spec"][cname] = [
+            [n, list(s)] for n, s in M.param_spec(cfg)
+        ]
+        for base, (fn, in_ios, out_ios) in build_artifacts(cfg).items():
+            if only and base not in only:
+                continue
+            name = f"{base}_{cname}"
+            path = os.path.join(args.out_dir, name + ".hlo.txt")
+            text = lower_artifact(fn, in_ios)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": name, "base": base, "config": cname,
+                "file": name + ".hlo.txt",
+                "inputs": in_ios, "outputs": out_ios,
+            })
+            print(f"  lowered {name}: {len(in_ios)} in / {len(out_ios)} out "
+                  f"({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to "
+          f"{args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: fused mixed binar/4-bit matmul (the paper's hot spot).
+
+The quantized linear layer computes y = x @ W_q'^T where W_q' is never
+materialized in HBM: each (t_blk, out_blk) tile reconstructs its slice of
+W_q' = W_sal + (a_r1 a_r2^T) o (a_s * sign_ns)     (paper Eq. 9)
+in VMEM right before the MXU matmul, the TPU analog of the fused
+dequant-GEMM a real sub-2-bit deployment would need (DESIGN.md
+#hardware-adaptation).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the kernel's tiling structure is still exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, pref: int = 128) -> int:
+    """Largest divisor of n that is <= pref (kernel tiles must divide n)."""
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(x_ref, w_sal_ref, sign_ref, a_s_ref, a_r1_ref, a_r2_ref, o_ref):
+    # Reconstruct this tile of W_q' in VMEM (Eq. 9), then one MXU matmul.
+    scale = (a_r1_ref[...] * a_s_ref[...])[:, None] * a_r2_ref[...][None, :]
+    w = w_sal_ref[...] + scale * sign_ref[...]
+    o_ref[...] = jnp.dot(
+        x_ref[...], w.T, preferred_element_type=jnp.float32
+    )
+
+
+@jax.custom_vjp
+def binary_matmul(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2):
+    """Fused quantized matmul: (t, in) x (out, in) -> (t, out).
+
+    Tiling: grid over (t / t_blk, out / out_blk); the contraction (in) axis
+    stays whole per tile — at reproduction sizes (in <= 512) a full-K tile of
+    x and W easily fits VMEM; see EXPERIMENTS.md #perf for the footprint
+    table.
+
+    Reverse-mode AD cannot trace through ``pallas_call``; the block-wise
+    scaling-factor optimization (Eq. 7) differentiates wrt the alphas, so the
+    kernel carries an analytic custom VJP (below) — the backward pass is what
+    a hand-written kernel gradient would compute.
+    """
+    t, k = x.shape
+    out, k2 = w_sal.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    tb = _pick_block(t)
+    ob = _pick_block(out)
+    grid = (t // tb, out // ob)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((ob, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((ob, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((ob,), lambda i, j: (j,)),
+            pl.BlockSpec((ob,), lambda i, j: (j,)),
+            pl.BlockSpec((k,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb, ob), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, out), jnp.float32),
+        interpret=True,
+    )(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2)
+
+
+def _bm_fwd(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2):
+    y = binary_matmul(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2)
+    return y, (x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2)
+
+
+def _bm_bwd(res, dy):
+    """Analytic gradients of y = x @ (w_sal + (r1 r2^T) o (a_s sign))^T."""
+    x, w_sal, sign, a_s, r1, r2 = res
+    scale = (r1 * a_s)[:, None] * r2[None, :]
+    wq = w_sal + scale * sign
+    dx = dy @ wq
+    dwq = dy.T @ x                       # (out, in)
+    g = dwq * sign                       # shared factor for alpha grads
+    gr2 = g * r2[None, :]
+    da_s = jnp.sum(gr2, axis=1) * r1
+    dr1 = jnp.sum(gr2, axis=1) * a_s
+    dr2 = jnp.sum(g * (r1 * a_s)[:, None], axis=0)
+    dw_sal = dwq                          # constant in practice; exact anyway
+    dsign = dwq * scale
+    return dx, dw_sal, dsign, da_s, dr1, dr2
+
+
+binary_matmul.defvjp(_bm_fwd, _bm_bwd)
+
+
+def binary_matmul_3d(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2):
+    """(b, t, in) convenience wrapper: flattens tokens, calls the kernel."""
+    b, t, k = x.shape
+    y = binary_matmul(
+        x.reshape(b * t, k), w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2
+    )
+    return y.reshape(b, t, -1)

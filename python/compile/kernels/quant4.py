@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: per-input-channel asymmetric 4-bit fake quantization.
+
+Used (a) standalone in the W4A4 SmoothQuant comparison path (paper Table 13)
+and (b) as the reference implementation the Rust packer is validated against.
+Tiled along the output dimension; each tile computes its own column min/max
+over the full row extent, so the per-column quantization parameters are
+identical to the unfused oracle in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, pref: int = 128) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _kernel(w_ref, mask_ref, o_ref):
+    w = w_ref[...]
+    w_min = jnp.min(w, axis=0, keepdims=True)
+    w_max = jnp.max(w, axis=0, keepdims=True)
+    scale = jnp.maximum((w_max - w_min) / 15.0, 1e-8)
+    q = jnp.clip(jnp.round((w - w_min) / scale), 0.0, 15.0)
+    dq = q * scale + w_min
+    o_ref[...] = jnp.where(mask_ref[...][None, :] > 0.5, dq, w)
+
+
+def quant4(w, mask):
+    """Fake-quantize salient columns of w (out, in) to 4-bit; mask (in,)."""
+    out, k = w.shape
+    kb = _pick_block(k)
+    grid = (k // kb,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((out, kb), lambda j: (0, j)),
+            pl.BlockSpec((kb,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((out, kb), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((out, k), jnp.float32),
+        interpret=True,
+    )(w, mask)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has an exact pure-jnp counterpart here;
+pytest (python/tests/test_kernels.py) asserts allclose between the two across
+a hypothesis-driven sweep of shapes and saliency ratios.
+"""
+
+import jax.numpy as jnp
+
+
+def reconstruct_wq(w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2):
+    """Eq. 9 of the paper: W_q' = (a_r1 a_r2^T) o (a_s * sign(W_ns)) + W_sal.
+
+    w_sal    (out, in)  dequantized 4-bit salient columns, zeros elsewhere
+    sign_ns  (out, in)  +-1 on non-salient columns, zeros on salient columns
+    alpha_s  (out,)     per-row magnitude scaling factor
+    alpha_r1 (out,)     per-row angular correction
+    alpha_r2 (in,)      per-column angular correction
+    """
+    bin_part = (alpha_r1[:, None] * alpha_r2[None, :]) * (
+        alpha_s[:, None] * sign_ns
+    )
+    return w_sal + bin_part
+
+
+def binary_matmul_ref(x, w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2):
+    """x @ reconstruct_wq(...)^T — oracle for the fused Pallas kernel.
+
+    x (t, in) -> (t, out).
+    """
+    wq = reconstruct_wq(w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2)
+    return x @ wq.T
+
+
+def quant4_ref(w, mask):
+    """Per-input-channel (column) asymmetric 4-bit fake quantization applied
+    to the salient columns selected by ``mask``; non-salient columns pass
+    through untouched.
+
+    w (out, in), mask (in,) in {0.0, 1.0}. Returns fake-quantized w.
+    """
+    w_min = jnp.min(w, axis=0, keepdims=True)
+    w_max = jnp.max(w, axis=0, keepdims=True)
+    scale = jnp.maximum((w_max - w_min) / 15.0, 1e-8)
+    q = jnp.clip(jnp.round((w - w_min) / scale), 0.0, 15.0)
+    dq = q * scale + w_min
+    return jnp.where(mask[None, :] > 0.5, dq, w)
+
+
+def binarize_rowwise_ref(w, mask):
+    """Row-wise analytic binarization (XNOR-Net alpha = mean |w|) restricted
+    to non-salient columns. Returns (sign_ns, alpha) where sign_ns is zeroed
+    on salient columns.
+
+    w (out, in), mask (in,) 1.0 = salient (excluded from binarization).
+    """
+    ns = 1.0 - mask
+    cnt = jnp.maximum(jnp.sum(ns), 1.0)
+    alpha = jnp.sum(jnp.abs(w) * ns[None, :], axis=1) / cnt
+    sign = jnp.where(w >= 0.0, 1.0, -1.0) * ns[None, :]
+    return sign, alpha
+
+
+def fake_quant_ptq161_ref(w, mask):
+    """Full PTQ1.61-style fake quantization with analytic scaling factors:
+    salient columns -> 4-bit per-column, non-salient -> row-wise binarized.
+    Used by the restorative-LoRA STE path (L2).
+    """
+    dq4 = quant4_ref(w, mask) * mask[None, :]
+    sign, alpha = binarize_rowwise_ref(w, mask)
+    return dq4 + alpha[:, None] * sign

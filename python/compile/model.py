@@ -1,0 +1,321 @@
+"""L2: TinyLlama-family model graphs (build-time Python, AOT-lowered).
+
+Defines every computation the Rust coordinator executes at run time:
+
+  embed_fwd        tokens -> hidden states
+  block_fwd        one FP transformer block (also used for every fake-quant
+                   baseline: the coordinator feeds dequantized weights)
+  block_capture    block fwd that also returns the inputs of each linear
+                   (activation stats for the structured mask, Hessians for
+                   GPTQ/BiLLM, AWQ grids, block-opt targets)
+  qblock_fwd       PTQ1.61 quantized block: every linear goes through the
+                   fused Pallas kernel reconstructing Eq. 9 in-tile
+  qblock_w4a4_fwd  SmoothQuant W4A4 block (paper Table 13)
+  head_fwd         final norm + lm head; returns (nll_sum, logits)
+  lm_grad          LM loss + grads wrt all params (pretraining)
+  lora_grad        restorative-LoRA loss + grads wrt (A, B) with the model
+                   fake-quantized via STE (paper section 3.4)
+  block_opt_grad   two-branch block loss (Eq. 5-7) + grads wrt the learnable
+                   scaling factors alpha_s/alpha_r1/alpha_r2 (and the
+                   optional learnable row mean mu for the Table 9 ablation)
+
+The parameter flattening order defined by ``param_spec`` is the binary
+contract with the Rust side; aot.py records it in the manifest.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.binary_matmul import binary_matmul_3d
+from . import quant_ops
+
+# Linear layers quantized inside each block, in canonical order. Embeddings
+# and the LM head stay FP16-equivalent (f32 here), as in PB-LLM/BiLLM.
+LINEARS = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+
+CONFIGS = {
+    # "tiny" plays LLaMA-7B's column in the paper's tables, "small" 13B.
+    "tiny": dict(name="tiny", vocab=256, d=128, n_heads=4, n_layers=4,
+                 ffn=352, seq=128, b_train=8, b_eval=4, rope_theta=10000.0,
+                 lora_rank=8),
+    "small": dict(name="small", vocab=256, d=192, n_heads=6, n_layers=6,
+                  ffn=512, seq=128, b_train=8, b_eval=4, rope_theta=10000.0,
+                  lora_rank=8),
+}
+
+EPS = 1e-5
+
+
+def linear_shape(cfg, name):
+    d, ffn = cfg["d"], cfg["ffn"]
+    return {
+        "wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+        "w_gate": (ffn, d), "w_up": (ffn, d), "w_down": (d, ffn),
+    }[name]
+
+
+def block_param_spec(cfg, l=0):
+    """Canonical (name, shape) list for one block's parameters."""
+    d = cfg["d"]
+    spec = [(f"l{l}.attn_norm", (d,))]
+    for n in ["wq", "wk", "wv", "wo"]:
+        spec.append((f"l{l}.{n}", linear_shape(cfg, n)))
+    spec.append((f"l{l}.mlp_norm", (d,)))
+    for n in ["w_gate", "w_up", "w_down"]:
+        spec.append((f"l{l}.{n}", linear_shape(cfg, n)))
+    return spec
+
+
+def param_spec(cfg):
+    """Canonical (name, shape) list for the full model (the Rust contract)."""
+    spec = [("embed", (cfg["vocab"], cfg["d"]))]
+    for l in range(cfg["n_layers"]):
+        spec.extend(block_param_spec(cfg, l))
+    spec.append(("norm_f", (cfg["d"],)))
+    spec.append(("w_out", (cfg["vocab"], cfg["d"])))
+    return spec
+
+
+def unflatten(spec, flat):
+    assert len(spec) == len(flat), f"{len(spec)} vs {len(flat)}"
+    return {name: x for (name, _), x in zip(spec, flat)}
+
+
+# ---------------------------------------------------------------------------
+# FP forward pieces
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, g):
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS)
+
+
+def rope(q, theta):
+    """Rotary embedding over (b, t, h, hd)."""
+    b, t, h, hd = q.shape
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    q1, q2 = q[..., :half], q[..., half:]
+    return jnp.concatenate([q1 * cos - q2 * sin, q1 * sin + q2 * cos], -1)
+
+
+def attention(q, k, v, cfg):
+    """Causal multi-head attention over projected (b, t, d) tensors.
+    Returns the pre-wo context (b, t, d) — the capture point for x_o."""
+    b, t, d = q.shape
+    h = cfg["n_heads"]
+    hd = d // h
+    q = rope(q.reshape(b, t, h, hd), cfg["rope_theta"])
+    k = rope(k.reshape(b, t, h, hd), cfg["rope_theta"])
+    v = v.reshape(b, t, h, hd)
+    scores = jnp.einsum("bthc,bshc->bhts", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    scores = jnp.where(causal[None, None] > 0.5, scores, -1e9)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhts,bshc->bthc", probs, v)
+    return ctx.reshape(b, t, d)
+
+
+def _block_pieces(h, p, cfg, lin):
+    """Shared block body; ``lin(name, x)`` performs the named linear on x.
+    Returns (x_attn, x_o, x_mlp, x_down, h_out) — the 4 linear-input capture
+    tensors plus the block output."""
+    x_attn = rmsnorm(h, p["attn_norm"])
+    q = lin("wq", x_attn)
+    k = lin("wk", x_attn)
+    v = lin("wv", x_attn)
+    x_o = attention(q, k, v, cfg)
+    h = h + lin("wo", x_o)
+    x_mlp = rmsnorm(h, p["mlp_norm"])
+    x_down = jax.nn.silu(lin("w_gate", x_mlp)) * lin("w_up", x_mlp)
+    h_out = h + lin("w_down", x_down)
+    return x_attn, x_o, x_mlp, x_down, h_out
+
+
+def block_fwd(h, p, cfg):
+    def lin(name, x):
+        return x @ p[name].T
+    return _block_pieces(h, p, cfg, lin)[-1]
+
+
+def block_capture(h, p, cfg):
+    def lin(name, x):
+        return x @ p[name].T
+    return _block_pieces(h, p, cfg, lin)
+
+
+def qblock_fwd(h, norms, qparts, cfg):
+    """PTQ1.61 quantized block. qparts[name] = (w_sal, sign_ns, a_s, a_r1,
+    a_r2, mu); every linear runs through the fused Pallas kernel, with the
+    optional learnable row-mean mu (Table 9 ablation) added afterwards."""
+    p = {"attn_norm": norms[0], "mlp_norm": norms[1]}
+
+    def lin(name, x):
+        w_sal, sign_ns, a_s, a_r1, a_r2, mu = qparts[name]
+        y = binary_matmul_3d(x, w_sal, sign_ns, a_s, a_r1, a_r2)
+        # mu is a learnable per-row mean added to every *binarized* weight
+        # element (QA-LoRA group-size=1 analog, Table 9 ablation); it is
+        # identically zero in the standard PTQ1.61 configuration. Adding mu
+        # to each non-salient weight of row o contributes
+        # mu[o] * sum_{i in ns} x[., i], so it folds into one extra GEMV.
+        ns_col = jnp.abs(sign_ns)[0]  # (in,) 1.0 exactly on binarized cols
+        xs = x @ ns_col               # (b, t)
+        return y + xs[..., None] * mu[None, None, :]
+
+    return _block_pieces(h, p, cfg, lin)[-1]
+
+
+def qblock_w4a4_fwd(h, p, smooth, cfg):
+    """SmoothQuant W4A4 block (Table 13). smooth[name] is the per-input
+    smoothing vector; q/k/v share one, gate/up share one."""
+    def lin(name, x):
+        return quant_ops.w4a4_linear(x, p[name], smooth[name])
+    return _block_pieces(h, p, cfg, lin)[-1]
+
+
+def embed_fwd(tokens, embed):
+    return embed[tokens]
+
+
+def head_fwd(h, norm_f, w_out, tokens):
+    """Returns (nll_sum, logits). nll_sum = sum of next-token NLL over all
+    (b, t-1) positions; the coordinator divides by token count for PPL."""
+    logits = rmsnorm(h, norm_f) @ w_out.T
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll), logits
+
+
+def lm_loss(params, tokens, cfg):
+    spec = param_spec(cfg)
+    p = unflatten(spec, params)
+    h = embed_fwd(tokens, p["embed"])
+    for l in range(cfg["n_layers"]):
+        bp = {k.split(".", 1)[1]: p[k] for k, _ in block_param_spec(cfg, l)}
+        h = block_fwd(h, bp, cfg)
+    nll_sum, _ = head_fwd(h, p["norm_f"], p["w_out"], tokens)
+    b, t = tokens.shape
+    return nll_sum / (b * (t - 1))
+
+
+# ---------------------------------------------------------------------------
+# Restorative-LoRA preprocessing (section 3.4)
+# ---------------------------------------------------------------------------
+
+def lora_loss(ab_flat, params, masks, tokens, cfg):
+    """LM loss of the STE-fake-quantized model with LoRA deltas merged.
+
+    ab_flat: [A, B] per (layer, linear) in canonical order; A (r, in),
+    B (out, r). masks: per (layer, linear) salient-channel vectors (in,).
+    Only block linears get LoRA + fake quant; embeddings/norms/head stay FP.
+    """
+    spec = param_spec(cfg)
+    p = unflatten(spec, params)
+    r = cfg["lora_rank"]
+    i = 0
+    h = embed_fwd(tokens, p["embed"])
+    for l in range(cfg["n_layers"]):
+        bp = {k.split(".", 1)[1]: p[k] for k, _ in block_param_spec(cfg, l)}
+        for n in LINEARS:
+            a, b_ = ab_flat[2 * i], ab_flat[2 * i + 1]
+            mask = masks[i]
+            w_eff = bp[n] + (b_ @ a) / float(r)
+            bp[n] = quant_ops.fake_quant_ptq161_ste(w_eff, mask)
+            i += 1
+        h = block_fwd(h, bp, cfg)
+    nll_sum, _ = head_fwd(h, p["norm_f"], p["w_out"], tokens)
+    b, t = tokens.shape
+    return nll_sum / (b * (t - 1))
+
+
+# ---------------------------------------------------------------------------
+# Block-wise scaling-factor optimization (section 3.3, Eq. 5-7)
+# ---------------------------------------------------------------------------
+
+def _distance(f1, f2, nlc_w):
+    """Eq. 5: E(f1, f2) = MSE + nlc_w * (-log cosine-similarity)."""
+    mse = jnp.mean((f1 - f2) ** 2)
+    a = f1.reshape(-1)
+    b = f2.reshape(-1)
+    cos = jnp.sum(a * b) / jnp.maximum(
+        jnp.linalg.norm(a) * jnp.linalg.norm(b), 1e-8
+    )
+    nlc = -jnp.log(jnp.clip(cos, 1e-3, 1.0))
+    return mse + nlc_w * nlc
+
+
+def block_opt_loss(learn_flat, x_q, f1, f3, norms, consts_flat, nlc_w, cfg):
+    """Two-branch objective (Eq. 7) for one block.
+
+    learn_flat : per linear [a_s, a_r1, a_r2, mu] (4 x 7 arrays, learnable)
+    x_q        : input activations of the quantized block
+    f1         : F(X, W)   — FP block on FP inputs (precomputed by Rust)
+    f3         : F(X_q, W) — FP block on quantized inputs (precomputed)
+    consts_flat: per linear [w_sal, sign_ns] (2 x 7 arrays, fixed)
+    nlc_w      : scalar weight on the angular term (0.0 for Table 7 w/o row)
+    """
+    qparts = {}
+    for i, n in enumerate(LINEARS):
+        a_s, a_r1, a_r2, mu = learn_flat[4 * i:4 * i + 4]
+        w_sal, sign_ns = consts_flat[2 * i:2 * i + 2]
+        qparts[n] = (w_sal, sign_ns, a_s, a_r1, a_r2, mu)
+    f2 = qblock_fwd(x_q, norms, qparts, cfg)
+    return _distance(f1, f2, nlc_w) + _distance(f3, f2, nlc_w)
+
+
+# ---------------------------------------------------------------------------
+# Grad wrappers (what aot.py actually lowers)
+# ---------------------------------------------------------------------------
+
+def lm_grad_fn(cfg):
+    spec = param_spec(cfg)
+    n = len(spec)
+
+    def fn(*args):
+        params = list(args[:n])
+        tokens = args[n]
+        loss, grads = jax.value_and_grad(
+            lambda ps: lm_loss(ps, tokens, cfg)
+        )(params)
+        return tuple([loss] + list(grads))
+
+    return fn
+
+
+def lora_grad_fn(cfg):
+    spec = param_spec(cfg)
+    n = len(spec)
+    nlin = cfg["n_layers"] * len(LINEARS)
+
+    def fn(*args):
+        params = list(args[:n])
+        ab = list(args[n:n + 2 * nlin])
+        masks = list(args[n + 2 * nlin:n + 3 * nlin])
+        tokens = args[n + 3 * nlin]
+        loss, grads = jax.value_and_grad(
+            lambda abf: lora_loss(abf, params, masks, tokens, cfg)
+        )(ab)
+        return tuple([loss] + list(grads))
+
+    return fn
+
+
+def block_opt_grad_fn(cfg):
+    nl = len(LINEARS)
+
+    def fn(*args):
+        learn = list(args[:4 * nl])
+        x_q, f1, f3, attn_norm, mlp_norm = args[4 * nl:4 * nl + 5]
+        consts = list(args[4 * nl + 5:4 * nl + 5 + 2 * nl])
+        nlc_w = args[4 * nl + 5 + 2 * nl]
+        loss, grads = jax.value_and_grad(
+            lambda lf: block_opt_loss(
+                lf, x_q, f1, f3, (attn_norm, mlp_norm), consts, nlc_w, cfg
+            )
+        )(learn)
+        return tuple([loss] + list(grads))
+
+    return fn

@@ -1,0 +1,49 @@
+"""L2 quantization ops shared by the model graphs (build-time only).
+
+Contains the straight-through estimator used by the restorative-LoRA
+preprocessing path and the W4A4 SmoothQuant fake-quant ops for the paper's
+Table 13 comparison. The PTQ1.61 reconstruction itself lives in
+kernels/ref.py (oracle) and kernels/binary_matmul.py (fused Pallas kernel).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def ste(fq, w):
+    """Straight-through estimator: forward = fq, gradient = identity on w."""
+    return w + jax.lax.stop_gradient(fq - w)
+
+
+def fake_quant_ptq161_ste(w, mask):
+    """PTQ1.61 fake quantization (analytic alphas) wrapped in an STE so the
+    restorative LoRA can backprop through it (paper section 3.4 / D.5)."""
+    return ste(ref.fake_quant_ptq161_ref(w, mask), w)
+
+
+def quant_sym(x, bits, axis=None):
+    """Symmetric fake quantization to ``bits`` with per-axis or per-tensor
+    max-abs scaling. axis=None -> per-tensor."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax / qmax, 1e-8)
+    return jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+
+
+def w4a4_linear(x, w, smooth):
+    """SmoothQuant-style W4A4 fake-quant linear for Table 13.
+
+    x (b, t, in), w (out, in), smooth (in,): activation outliers are migrated
+    into the weights (x/s)(w*s), then weights are quantized per-output-channel
+    to 4-bit and activations per-tensor (dynamic) to 4-bit.
+    """
+    xs = x / smooth[None, None, :]
+    ws = w * smooth[None, :]
+    xq = quant_sym(xs, 4, axis=None)
+    wq = quant_sym(ws, 4, axis=1)
+    return xq @ wq.T

@@ -1,0 +1,74 @@
+"""AOT contract tests: the manifest must exactly describe the lowered HLO."""
+
+import json
+import os
+import re
+
+import pytest
+
+from compile import aot, model as M
+
+
+def test_artifact_registry_complete():
+    arts = aot.build_artifacts(M.CONFIGS["tiny"])
+    assert set(arts) == {
+        "embed_fwd", "block_fwd", "block_capture", "qblock_fwd",
+        "qblock_w4a4_fwd", "head_fwd", "lm_grad", "lora_grad",
+        "block_opt_grad",
+    }
+
+
+@pytest.mark.parametrize("cname", ["tiny", "small"])
+def test_io_counts(cname):
+    cfg = M.CONFIGS[cname]
+    arts = aot.build_artifacts(cfg)
+    n_params = len(M.param_spec(cfg))
+    nlin = cfg["n_layers"] * len(M.LINEARS)
+    _, ins, outs = arts["lm_grad"]
+    assert len(ins) == n_params + 1 and len(outs) == n_params + 1
+    _, ins, outs = arts["lora_grad"]
+    assert len(ins) == n_params + 3 * nlin + 1
+    assert len(outs) == 1 + 2 * nlin
+    _, ins, outs = arts["block_opt_grad"]
+    assert len(ins) == 4 * 7 + 5 + 2 * 7 + 1
+    assert len(outs) == 1 + 4 * 7
+    _, ins, outs = arts["qblock_fwd"]
+    assert len(ins) == 3 + 6 * 7
+
+
+def test_lowered_entry_layout_matches_manifest(tmp_path):
+    """Lower one artifact and check the HLO entry layout agrees with the
+    manifest's declared shapes (the contract the Rust loader relies on)."""
+    cfg = M.CONFIGS["tiny"]
+    arts = aot.build_artifacts(cfg)
+    fn, ins, outs = arts["block_fwd"]
+    text = aot.lower_artifact(fn, ins)
+    header = text.splitlines()[0]
+    m = re.search(r"entry_computation_layout=\{\((.*)\)->", header)
+    assert m, header
+    arg_types = re.findall(r"(f32|s32)\[([0-9,]*)\]", m.group(1))
+    assert len(arg_types) == len(ins)
+    for (ty, dims), io in zip(arg_types, ins):
+        want = "s32" if io["dtype"] == "i32" else "f32"
+        assert ty == want
+        got = [int(x) for x in dims.split(",")] if dims else []
+        assert got == io["shape"]
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` has run, the manifest must list every HLO file."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(root, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    man = json.load(open(mpath))
+    assert man["linears"] == M.LINEARS
+    for art in man["artifacts"]:
+        assert os.path.exists(os.path.join(root, art["file"])), art["name"]
+        header = open(os.path.join(root, art["file"])).readline()
+        n_args = len(re.findall(r"(?:f32|s32|pred)\[", header.split("->")[0]))
+        assert n_args == len(art["inputs"]), art["name"]
+    for cname, spec in man["param_spec"].items():
+        cfg = M.CONFIGS[cname]
+        assert [tuple(s) for _, s in spec] == \
+            [tuple(s) for _, s in M.param_spec(cfg)]

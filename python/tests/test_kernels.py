@@ -1,0 +1,123 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and saliency ratios; these tests are the core
+correctness signal for the kernel that every quantized forward runs through.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.binary_matmul import binary_matmul, binary_matmul_3d
+from compile.kernels.quant4 import quant4
+
+DIMS = st.sampled_from([8, 16, 24, 32, 48, 64, 96, 128])
+
+
+def make_case(seed, t, out, k, ratio):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(out, k)).astype(np.float32))
+    n_sal = int(round(ratio * k))
+    mask = np.zeros(k, np.float32)
+    mask[rng.choice(k, n_sal, replace=False)] = 1.0
+    mask = jnp.asarray(mask)
+    sign, alpha = ref.binarize_rowwise_ref(w, mask)
+    w_sal = ref.quant4_ref(w, mask) * mask[None, :]
+    r1 = jnp.asarray(rng.uniform(0.5, 1.5, out).astype(np.float32))
+    r2 = jnp.asarray(rng.uniform(0.5, 1.5, k).astype(np.float32))
+    return x, w, mask, w_sal, sign, alpha, r1, r2
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), t=DIMS, out=DIMS, k=DIMS,
+       ratio=st.sampled_from([0.0, 0.1, 0.2, 0.3, 0.5]))
+def test_binary_matmul_matches_ref(seed, t, out, k, ratio):
+    x, _, _, w_sal, sign, alpha, r1, r2 = make_case(seed, t, out, k, ratio)
+    got = binary_matmul(x, w_sal, sign, alpha, r1, r2)
+    want = ref.binary_matmul_ref(x, w_sal, sign, alpha, r1, r2)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), out=DIMS, k=DIMS,
+       ratio=st.sampled_from([0.1, 0.2, 0.4]))
+def test_quant4_matches_ref(seed, out, k, ratio):
+    _, w, mask, *_ = make_case(seed, 8, out, k, ratio)
+    np.testing.assert_allclose(
+        quant4(w, mask), ref.quant4_ref(w, mask), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_quant4_error_bound():
+    """4-bit RTN error on salient columns is bounded by scale/2."""
+    _, w, mask, *_ = make_case(7, 8, 64, 64, 0.3)
+    dq = np.asarray(ref.quant4_ref(w, mask))
+    w = np.asarray(w)
+    span = (w.max(0) - w.min(0)) / 15.0
+    err = np.abs(dq - w)
+    sal = np.asarray(mask) > 0.5
+    assert (err[:, sal] <= span[sal] / 2 + 1e-6).all()
+    assert (err[:, ~sal] == 0).all()
+
+
+def test_reconstruct_identity_when_unit_factors():
+    """With a_s=|w| row means, r1=r2=1, Eq. 9 equals classic XNOR scaling."""
+    _, w, mask, w_sal, sign, alpha, _, _ = make_case(3, 8, 32, 32, 0.2)
+    ones_o, ones_k = jnp.ones(32), jnp.ones(32)
+    wq = ref.reconstruct_wq(w_sal, sign, alpha, ones_o, ones_k)
+    want = w_sal + alpha[:, None] * sign
+    np.testing.assert_allclose(wq, want, rtol=1e-6)
+
+
+def test_binarize_zeroes_salient_columns():
+    _, w, mask, *_ = make_case(11, 8, 48, 64, 0.25)
+    sign, alpha = ref.binarize_rowwise_ref(w, mask)
+    sign = np.asarray(sign)
+    sal = np.asarray(mask) > 0.5
+    assert (sign[:, sal] == 0).all()
+    assert set(np.unique(sign[:, ~sal])) <= {-1.0, 1.0}
+    assert (np.asarray(alpha) > 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_custom_vjp_matches_ref_grads(seed):
+    """The kernel's analytic backward == autodiff through the oracle."""
+    x, _, _, w_sal, sign, alpha, r1, r2 = make_case(seed, 16, 24, 32, 0.2)
+
+    def loss_k(a_s, a_r1, a_r2, xx):
+        return jnp.sum(binary_matmul(xx, w_sal, sign, a_s, a_r1, a_r2) ** 2)
+
+    def loss_r(a_s, a_r1, a_r2, xx):
+        return jnp.sum(
+            ref.binary_matmul_ref(xx, w_sal, sign, a_s, a_r1, a_r2) ** 2
+        )
+
+    gk = jax.grad(loss_k, argnums=(0, 1, 2, 3))(alpha, r1, r2, x)
+    gr = jax.grad(loss_r, argnums=(0, 1, 2, 3))(alpha, r1, r2, x)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+def test_binary_matmul_3d_reshape():
+    x, _, _, w_sal, sign, alpha, r1, r2 = make_case(5, 32, 24, 32, 0.2)
+    x3 = x.reshape(4, 8, 32)
+    got = binary_matmul_3d(x3, w_sal, sign, alpha, r1, r2)
+    want = ref.binary_matmul_ref(x, w_sal, sign, alpha, r1, r2)
+    np.testing.assert_allclose(got.reshape(32, 24), want, rtol=1e-4, atol=1e-4)
+
+
+def test_fake_quant_ptq161_composition():
+    """Salient columns get the 4-bit values, non-salient get alpha*sign."""
+    _, w, mask, *_ = make_case(13, 8, 40, 56, 0.25)
+    fq = np.asarray(ref.fake_quant_ptq161_ref(w, mask))
+    dq4 = np.asarray(ref.quant4_ref(w, mask))
+    sign, alpha = ref.binarize_rowwise_ref(w, mask)
+    sal = np.asarray(mask) > 0.5
+    np.testing.assert_allclose(fq[:, sal], dq4[:, sal], rtol=1e-6)
+    want_ns = (np.asarray(alpha)[:, None] * np.asarray(sign))[:, ~sal]
+    np.testing.assert_allclose(fq[:, ~sal], want_ns, rtol=1e-6)

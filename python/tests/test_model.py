@@ -1,0 +1,231 @@
+"""L2 correctness: model graphs, losses, and gradient plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = dict(M.CONFIGS["tiny"])
+CFG.update(seq=16, b_eval=2, b_train=2)  # small shapes for test speed
+
+
+def init_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in M.param_spec(cfg):
+        if len(shape) == 1:
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            std = 0.4 / np.sqrt(shape[-1])
+            out.append(jnp.asarray(
+                rng.normal(0, std, shape).astype(np.float32)))
+    return out
+
+
+def block_params(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    p = {}
+    for name, shape in M.block_param_spec(cfg, 0):
+        short = name.split(".", 1)[1]
+        if len(shape) == 1:
+            p[short] = jnp.ones(shape, jnp.float32)
+        else:
+            p[short] = jnp.asarray(
+                rng.normal(0, 0.05, shape).astype(np.float32))
+    return p
+
+
+def test_param_spec_counts():
+    spec = M.param_spec(M.CONFIGS["tiny"])
+    # embed + 4 layers x 9 + norm_f + w_out
+    assert len(spec) == 1 + 4 * 9 + 2
+    names = [n for n, _ in spec]
+    assert names[0] == "embed" and names[-1] == "w_out"
+    assert "l3.w_down" in names
+
+
+def test_block_fwd_shapes_and_residual():
+    p = block_params(CFG)
+    h = jnp.asarray(np.random.default_rng(1).normal(
+        size=(2, 16, CFG["d"])).astype(np.float32))
+    out = M.block_fwd(h, p, CFG)
+    assert out.shape == h.shape
+    # residual path: zero weights => identity block
+    pz = {k: (v if v.ndim == 1 else jnp.zeros_like(v)) for k, v in p.items()}
+    np.testing.assert_allclose(M.block_fwd(h, pz, CFG), h, atol=1e-6)
+
+
+def test_block_capture_consistent_with_fwd():
+    p = block_params(CFG)
+    h = jnp.asarray(np.random.default_rng(2).normal(
+        size=(2, 16, CFG["d"])).astype(np.float32))
+    x_attn, x_o, x_mlp, x_down, h_out = M.block_capture(h, p, CFG)
+    np.testing.assert_allclose(h_out, M.block_fwd(h, p, CFG), rtol=1e-6)
+    assert x_attn.shape == (2, 16, CFG["d"])
+    assert x_down.shape == (2, 16, CFG["ffn"])
+
+
+def exact_qparts(p, cfg):
+    """Quant parts that reconstruct W exactly: sign_ns := W, a=r=1, mu=0.
+    (sign_ns is just a matrix input to the kernel — using W validates the
+    qblock plumbing against the FP block bit-for-bit.)"""
+    qp = {}
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        qp[n] = (jnp.zeros((out, inn)), p[n], jnp.ones(out), jnp.ones(out),
+                 jnp.ones(inn), jnp.zeros(out))
+    return qp
+
+
+def test_qblock_equals_block_when_exact():
+    p = block_params(CFG)
+    h = jnp.asarray(np.random.default_rng(3).normal(
+        size=(2, 16, CFG["d"])).astype(np.float32))
+    qp = exact_qparts(p, CFG)
+    got = M.qblock_fwd(h, (p["attn_norm"], p["mlp_norm"]), qp, CFG)
+    want = M.block_fwd(h, p, CFG)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_qblock_mu_shifts_output():
+    """Non-zero mu must change the output (Table 9 knob is live)."""
+    p = block_params(CFG)
+    h = jnp.asarray(np.random.default_rng(4).normal(
+        size=(2, 16, CFG["d"])).astype(np.float32))
+    rng = np.random.default_rng(5)
+    qp = {}
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(CFG, n)
+        w = jnp.asarray(rng.normal(0, 0.05, (out, inn)).astype(np.float32))
+        mask = jnp.zeros(inn)
+        sign, alpha = ref.binarize_rowwise_ref(w, mask)
+        qp[n] = (jnp.zeros((out, inn)), sign, alpha, jnp.ones(out),
+                 jnp.ones(inn), jnp.zeros(out))
+    norms = (p["attn_norm"], p["mlp_norm"])
+    y0 = M.qblock_fwd(h, norms, qp, CFG)
+    qp2 = {n: v[:5] + (jnp.full(v[5].shape, 0.01),) for n, v in qp.items()}
+    y1 = M.qblock_fwd(h, norms, qp2, CFG)
+    assert float(jnp.max(jnp.abs(y1 - y0))) > 1e-4
+
+
+def test_head_fwd_nll_matches_manual():
+    rng = np.random.default_rng(6)
+    h = jnp.asarray(rng.normal(size=(2, 16, CFG["d"])).astype(np.float32))
+    norm_f = jnp.ones(CFG["d"])
+    w_out = jnp.asarray(
+        rng.normal(0, 0.05, (CFG["vocab"], CFG["d"])).astype(np.float32))
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)
+    nll_sum, logits = M.head_fwd(h, norm_f, w_out, tokens)
+    logp = jax.nn.log_softmax(np.asarray(logits)[:, :-1], axis=-1)
+    manual = -sum(
+        logp[b, t, int(tokens[b, t + 1])]
+        for b in range(2) for t in range(15)
+    )
+    np.testing.assert_allclose(float(nll_sum), manual, rtol=1e-5)
+    assert logits.shape == (2, 16, CFG["vocab"])
+
+
+def test_lm_loss_near_uniform_at_init():
+    """Tiny random init => loss ~ log(vocab)."""
+    params = init_params(CFG)
+    rng = np.random.default_rng(7)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)
+    loss = float(M.lm_loss(params, tokens, CFG))
+    assert abs(loss - np.log(256)) < 0.5
+
+
+def test_lm_grad_fn_descends():
+    params = init_params(CFG)
+    rng = np.random.default_rng(8)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)
+    fn = M.lm_grad_fn(CFG)
+    outs = fn(*params, tokens)
+    loss0, grads = float(outs[0]), outs[1:]
+    assert len(grads) == len(params)
+    stepped = [p - 0.5 * g for p, g in zip(params, grads)]
+    loss1 = float(M.lm_loss(stepped, tokens, CFG))
+    assert loss1 < loss0
+
+
+def test_block_opt_grad_finite_difference():
+    """Analytic alpha gradients (through the Pallas custom VJP) match FD."""
+    cfg = CFG
+    p = block_params(cfg, seed=10)
+    rng = np.random.default_rng(11)
+    h = jnp.asarray(rng.normal(size=(2, 16, cfg["d"])).astype(np.float32))
+    learn, consts = [], []
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        w = p[n]
+        mask = np.zeros(inn, np.float32)
+        mask[rng.choice(inn, inn // 5, replace=False)] = 1.0
+        mask = jnp.asarray(mask)
+        sign, alpha = ref.binarize_rowwise_ref(w, mask)
+        w_sal = ref.quant4_ref(w, mask) * mask[None, :]
+        learn += [alpha, jnp.ones(out), jnp.ones(inn), jnp.zeros(out)]
+        consts += [w_sal, sign]
+    f1 = M.block_fwd(h, p, cfg)
+    x_q = h + 0.01
+    f3 = M.block_fwd(x_q, p, cfg)
+    norms = (p["attn_norm"], p["mlp_norm"])
+
+    def loss(lf):
+        return M.block_opt_loss(lf, x_q, f1, f3, norms, consts, 1.0, cfg)
+
+    g = jax.grad(loss)(learn)
+    # finite-difference two entries of alpha_s of wq (learn[0])
+    eps = 1e-3
+    for idx in [0, 3]:
+        lp = [x for x in learn]
+        lp[0] = learn[0].at[idx].add(eps)
+        lm_ = [x for x in learn]
+        lm_[0] = learn[0].at[idx].add(-eps)
+        fd = (float(loss(lp)) - float(loss(lm_))) / (2 * eps)
+        np.testing.assert_allclose(float(g[0][idx]), fd, rtol=0.08, atol=5e-4)
+
+
+def test_block_opt_nlc_weight_zero_drops_angular_term():
+    cfg = CFG
+    p = block_params(cfg, seed=12)
+    rng = np.random.default_rng(13)
+    h = jnp.asarray(rng.normal(size=(2, 16, cfg["d"])).astype(np.float32))
+    learn, consts = [], []
+    for n in M.LINEARS:
+        out, inn = M.linear_shape(cfg, n)
+        mask = jnp.zeros(inn)
+        sign, alpha = ref.binarize_rowwise_ref(p[n], mask)
+        learn += [alpha, jnp.ones(out), jnp.ones(inn), jnp.zeros(out)]
+        consts += [jnp.zeros((out, inn)), sign]
+    f1 = M.block_fwd(h, p, cfg)
+    norms = (p["attn_norm"], p["mlp_norm"])
+    l1 = float(M.block_opt_loss(learn, h, f1, f1, norms, consts, 1.0, cfg))
+    l0 = float(M.block_opt_loss(learn, h, f1, f1, norms, consts, 0.0, cfg))
+    assert l1 > l0  # angular term adds a positive -log(cos) penalty
+
+
+def test_lora_loss_grad_nonzero_and_descends():
+    cfg = CFG
+    params = init_params(cfg, seed=14)
+    rng = np.random.default_rng(15)
+    tokens = jnp.asarray(rng.integers(0, 256, (2, 16)), jnp.int32)
+    r = cfg["lora_rank"]
+    ab, masks = [], []
+    for l in range(cfg["n_layers"]):
+        for n in M.LINEARS:
+            out, inn = M.linear_shape(cfg, n)
+            ab += [jnp.asarray(rng.normal(0, 0.01, (r, inn)), jnp.float32),
+                   jnp.zeros((out, r), jnp.float32)]
+            m = np.zeros(inn, np.float32)
+            m[rng.choice(inn, inn // 5, replace=False)] = 1.0
+            masks.append(jnp.asarray(m))
+
+    loss0, grads = jax.value_and_grad(
+        lambda abf: M.lora_loss(abf, params, masks, tokens, cfg))(ab)
+    gnorm = sum(float(jnp.sum(g * g)) for g in grads)
+    assert gnorm > 0.0  # STE lets gradient flow through the fake quant
+    stepped = [x - 2.0 * g for x, g in zip(ab, grads)]
+    loss1 = float(M.lora_loss(stepped, params, masks, tokens, cfg))
+    assert loss1 < float(loss0)

@@ -1,0 +1,52 @@
+//! End-to-end bench (Table 1 regeneration at smoke scale): quantize + PPL
+//! of the headline methods on a briefly-trained tiny model. One iteration
+//! per method — this is a minutes-scale end-to-end measurement, reported
+//! once, not a statistical microbench.
+
+use std::time::Instant;
+
+use ptq161::coordinator::capture::capture;
+use ptq161::coordinator::pretrain::lm_grad;
+use ptq161::coordinator::quantize::quantize_model;
+use ptq161::coordinator::Pipeline;
+use ptq161::data::{calib, Corpus, Style};
+use ptq161::eval::ppl::perplexity;
+use ptq161::eval::ModelEval;
+use ptq161::runtime::Runtime;
+use ptq161::util::rng::Rng;
+
+fn main() {
+    let dir = ptq161::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_e2e: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    let pipe = Pipeline::new(&rt, "tiny").unwrap();
+    let corpus = Corpus::build(Style::Wiki, 200_000, 60);
+    let mut params = pipe.init_params(61);
+    let mut opt = ptq161::opt::AdamW::new(3e-3, params.tensors.len());
+    let mut rng = Rng::new(62);
+    for _ in 0..40 {
+        let batch = corpus.batch(pipe.cfg.b_train, pipe.cfg.seq, &mut rng);
+        let (_, grads) = lm_grad(&pipe, &params, &batch).unwrap();
+        opt.step(&mut params.tensors, &grads);
+    }
+    let cal = calib::sample(&corpus, 8, pipe.cfg.b_eval, pipe.cfg.seq, 63);
+    let mc = capture(&pipe, &params, &cal, true).unwrap();
+    println!("# e2e: quantize + 2-batch PPL per method (one-shot timings)");
+    for method in ["rtn1", "gptq2", "pbllm", "billm", "ptq161"] {
+        let t0 = Instant::now();
+        let q = ptq161::quant::by_name(method).unwrap();
+        let qm = quantize_model(&pipe, &params, &mc, q.as_ref()).unwrap();
+        let quant_s = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let ppl =
+            perplexity(&pipe, &ModelEval::Dense(&qm.params), &corpus, 2)
+                .unwrap();
+        println!(
+            "{method:<10} quantize {quant_s:>6.2}s  eval {:>5.2}s  ppl {ppl:>9.2}",
+            t1.elapsed().as_secs_f64()
+        );
+    }
+}

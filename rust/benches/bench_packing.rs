@@ -1,0 +1,22 @@
+//! Packing benches: the bit-exact containers on a real LLaMA layer slice —
+//! pack/unpack throughput bounds the (de)serialization cost of a deployed
+//! 1.61-bit checkpoint.
+
+use ptq161::packing::bitpack::BitVec;
+use ptq161::packing::nibble::{quantize_column, NibbleVec};
+use ptq161::util::bench::Bencher;
+use ptq161::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let n = 4096 * 64; // 64 rows of a 4096-wide layer
+    let weights: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+    let b = Bencher::quick();
+    b.run("packing/bitpack_signs_256k", || BitVec::from_signs(&weights));
+    let bv = BitVec::from_signs(&weights);
+    b.run("packing/unpack_signs_256k", || bv.to_signs());
+    let col: Vec<f32> = weights[..4096].to_vec();
+    b.run("packing/quant4_column_4096", || quantize_column(&col));
+    let (codes, _, _) = quantize_column(&col);
+    b.run("packing/nibble_pack_4096", || NibbleVec::from_codes(&codes));
+}

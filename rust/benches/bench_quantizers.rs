@@ -1,0 +1,24 @@
+//! Quantizer micro-benchmarks (Table-8 resource shape at layer scale):
+//! per-linear cost of every method on a realistic (ffn x d) weight.
+
+use ptq161::quant::{by_name, LinearCalib, BASELINE_METHODS};
+use ptq161::tensor::Tensor;
+use ptq161::util::bench::Bencher;
+use ptq161::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let (out, inn) = (352, 128); // tiny's w_gate shape
+    let w = Tensor::randn(&[out, inn], 0.1, &mut rng);
+    let x = Tensor::randn(&[512, inn], 1.0, &mut rng);
+    let mut calib = LinearCalib::empty(inn);
+    calib.accumulate(&x, true);
+    let b = Bencher::quick();
+    println!("# quantize one {out}x{inn} linear");
+    for m in BASELINE_METHODS {
+        let q = by_name(m).unwrap();
+        b.run(&format!("quantize/{m}"), || {
+            q.quantize_linear(&w, &calib)
+        });
+    }
+}

@@ -1,0 +1,45 @@
+//! Runtime benches: PJRT executable dispatch for each pipeline stage —
+//! the numbers behind the end-to-end latency model (EXPERIMENTS.md §Perf).
+//! Skips cleanly when artifacts are not built.
+
+use ptq161::coordinator::Pipeline;
+use ptq161::runtime::Runtime;
+use ptq161::util::bench::Bencher;
+use ptq161::util::rng::Rng;
+
+fn main() {
+    let dir = ptq161::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built, skipping");
+        return;
+    }
+    let rt = Runtime::open(&dir).unwrap();
+    let pipe = Pipeline::new(&rt, "tiny").unwrap();
+    let params = pipe.init_params(1);
+    let mut rng = Rng::new(2);
+    let tokens: Vec<i32> = (0..pipe.cfg.b_eval * pipe.cfg.seq)
+        .map(|_| rng.below(256) as i32)
+        .collect();
+    let b = Bencher::quick();
+    let h = pipe.embed(&params, &tokens).unwrap();
+    b.run("runtime/embed_fwd", || pipe.embed(&params, &tokens).unwrap());
+    b.run("runtime/block_fwd", || {
+        pipe.block_fwd(&h, &params.block(0)).unwrap()
+    });
+    b.run("runtime/block_capture", || {
+        pipe.block_capture(&h, &params.block(0)).unwrap()
+    });
+    b.run("runtime/head_fwd", || {
+        pipe.head(&params, &h, &tokens).unwrap()
+    });
+    b.run("runtime/full_eval_fwd", || {
+        pipe.nll_sum(&params, &tokens).unwrap()
+    });
+    let train_tokens: Vec<i32> = (0..pipe.cfg.b_train * pipe.cfg.seq)
+        .map(|_| rng.below(256) as i32)
+        .collect();
+    b.run("runtime/lm_grad_step", || {
+        ptq161::coordinator::pretrain::lm_grad(&pipe, &params, &train_tokens)
+            .unwrap()
+    });
+}

@@ -1,0 +1,214 @@
+//! Block-wise scaling-factor optimization (paper section 3.3).
+//!
+//! For each transformer block in order, the coordinator:
+//!   1. precomputes the two FP branches of Eq. 7 per calibration batch:
+//!      f1 = F(X, W) on FP inputs, f3 = F(X_q, W) on quantized-prefix
+//!      inputs (error-propagation branch),
+//!   2. runs the AOT `block_opt_grad` executable (loss Eq. 5-7, gradients
+//!      wrt alpha_s / alpha_r1 / alpha_r2 / mu through the Pallas kernel's
+//!      custom VJP) for `epochs` passes over the batches with AdamW on the
+//!      host,
+//!   3. writes the learned factors back into the `Ptq161Parts` and
+//!      propagates the quantized-prefix inputs through the optimized
+//!      quantized block (fused-kernel artifact).
+//!
+//! `nlc_w = 0` drops the angular (-log cos) term (Table 7 ablation);
+//! `learn_mu` enables the QA-LoRA-style learnable row mean (Table 9).
+
+use anyhow::Result;
+
+use super::capture::ModelCalib;
+use super::quantize::QuantModel;
+use super::Pipeline;
+use crate::model::{Params, LINEARS};
+use crate::opt::AdamW;
+use crate::quant::ptq161::{initial_parts, structured_mask, MaskCriterion};
+use crate::quant::Ptq161Parts;
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct BlockOptCfg {
+    pub epochs: usize,
+    pub lr: f32,
+    /// weight of the angular loss term (paper: on; Table 7 w/o: 0.0)
+    pub nlc_w: f32,
+    /// learn the per-row mean mu (Table 9; off in standard PTQ1.61)
+    pub learn_mu: bool,
+    pub salient_ratio: f64,
+    pub criterion: MaskCriterion,
+    pub verbose: bool,
+}
+
+impl Default for BlockOptCfg {
+    fn default() -> Self {
+        BlockOptCfg {
+            epochs: 12,
+            lr: 1e-3,
+            nlc_w: 1.0,
+            learn_mu: false,
+            salient_ratio: 0.2,
+            criterion: MaskCriterion::ActivationMagnitude,
+            verbose: false,
+        }
+    }
+}
+
+fn parts_to_qparts(parts: &[Ptq161Parts]) -> Vec<[Tensor; 6]> {
+    parts
+        .iter()
+        .map(|p| {
+            let out = p.alpha_s.len();
+            let inn = p.alpha_r2.len();
+            [
+                p.w_sal.clone(),
+                p.sign_ns.clone(),
+                Tensor::from_vec(&[out], p.alpha_s.clone()),
+                Tensor::from_vec(&[out], p.alpha_r1.clone()),
+                Tensor::from_vec(&[inn], p.alpha_r2.clone()),
+                Tensor::from_vec(&[out], p.mu.clone()),
+            ]
+        })
+        .collect()
+}
+
+/// Full PTQ1.61 with block-wise optimization. Returns the QuantModel with
+/// learned scaling factors and the per-block final losses.
+pub fn ptq161_optimize(
+    pipe: &Pipeline,
+    params: &Params,
+    calib: &ModelCalib,
+    cfg: &BlockOptCfg,
+) -> Result<(QuantModel, Vec<f32>)> {
+    let n_layers = pipe.cfg.n_layers;
+    let n_batches = calib.block_inputs[0].len();
+    // initial analytic decomposition per layer
+    let mut parts_all: Vec<Vec<Ptq161Parts>> = (0..n_layers)
+        .map(|l| {
+            LINEARS
+                .iter()
+                .map(|lin| {
+                    let c = calib.get(l, lin);
+                    let mask = structured_mask(
+                        &c.act_abs_mean,
+                        &c.act_sq_mean,
+                        cfg.salient_ratio,
+                        cfg.criterion,
+                    );
+                    initial_parts(params.get(&format!("l{l}.{lin}")), &mask)
+                })
+                .collect()
+        })
+        .collect();
+
+    // FP and quantized-prefix block-input streams
+    let mut h_fp: Vec<Tensor> = calib.block_inputs[0].clone();
+    let mut h_q: Vec<Tensor> = h_fp.clone();
+    let mut final_losses = Vec::new();
+
+    for l in 0..n_layers {
+        let block = params.block(l);
+        let attn_norm = block[0].clone();
+        let mlp_norm = block[5].clone();
+        // precompute the FP branches once per batch
+        let mut f1 = Vec::with_capacity(n_batches);
+        let mut f3 = Vec::with_capacity(n_batches);
+        for b in 0..n_batches {
+            f1.push(pipe.block_fwd(&h_fp[b], &block)?);
+            f3.push(pipe.block_fwd(&h_q[b], &block)?);
+        }
+        // learnable tensors in artifact order: per linear [a_s, r1, r2, mu]
+        let mut learn: Vec<Tensor> = Vec::with_capacity(4 * LINEARS.len());
+        for p in &parts_all[l] {
+            let out = p.alpha_s.len();
+            let inn = p.alpha_r2.len();
+            learn.push(Tensor::from_vec(&[out], p.alpha_s.clone()));
+            learn.push(Tensor::from_vec(&[out], p.alpha_r1.clone()));
+            learn.push(Tensor::from_vec(&[inn], p.alpha_r2.clone()));
+            learn.push(Tensor::from_vec(&[out], p.mu.clone()));
+        }
+        let consts: Vec<Tensor> = parts_all[l]
+            .iter()
+            .flat_map(|p| [p.w_sal.clone(), p.sign_ns.clone()])
+            .collect();
+        let mut opt = AdamW::new(cfg.lr, learn.len());
+        let mut last_loss = 0.0;
+        for epoch in 0..cfg.epochs {
+            let mut epoch_loss = 0.0;
+            for b in 0..n_batches {
+                let mut inputs: Vec<Value> =
+                    learn.iter().map(Value::from).collect();
+                inputs.push((&h_q[b]).into());
+                inputs.push((&f1[b]).into());
+                inputs.push((&f3[b]).into());
+                inputs.push((&attn_norm).into());
+                inputs.push((&mlp_norm).into());
+                inputs.extend(consts.iter().map(Value::from));
+                inputs.push(Tensor::from_vec(&[], vec![cfg.nlc_w]).into());
+                let mut out =
+                    pipe.rt.run_cfg("block_opt_grad", pipe.cname(), &inputs)?;
+                let grads = out.split_off(1);
+                epoch_loss += out[0].data[0];
+                let mut grads = grads;
+                if !cfg.learn_mu {
+                    // freeze mu at zero: kill its gradient slots (every 4th)
+                    for (i, g) in grads.iter_mut().enumerate() {
+                        if i % 4 == 3 {
+                            for x in g.data.iter_mut() {
+                                *x = 0.0;
+                            }
+                        }
+                    }
+                }
+                opt.step(&mut learn, &grads);
+            }
+            last_loss = epoch_loss / n_batches as f32;
+            if cfg.verbose {
+                eprintln!(
+                    "[blockopt l{l}] epoch {epoch:>3} loss {last_loss:.5}"
+                );
+            }
+        }
+        final_losses.push(last_loss);
+        // write back learned factors
+        for (i, p) in parts_all[l].iter_mut().enumerate() {
+            p.alpha_s = learn[4 * i].data.clone();
+            p.alpha_r1 = learn[4 * i + 1].data.clone();
+            p.alpha_r2 = learn[4 * i + 2].data.clone();
+            p.mu = learn[4 * i + 3].data.clone();
+        }
+        // propagate both streams past this block
+        let qparts = parts_to_qparts(&parts_all[l]);
+        for b in 0..n_batches {
+            h_q[b] =
+                pipe.qblock_fwd(&h_q[b], &attn_norm, &mlp_norm, &qparts)?;
+            h_fp[b] = f1[b].clone();
+        }
+    }
+
+    // materialize the dense fake-quant model
+    let mut out_params = params.clone();
+    for (l, layer) in parts_all.iter().enumerate() {
+        for (i, lin) in LINEARS.iter().enumerate() {
+            *out_params.get_mut(&format!("l{l}.{lin}")) =
+                layer[i].dequantize();
+        }
+    }
+    let avg_bits = crate::packing::bitwidth::average_bits(
+        crate::packing::bitwidth::BitScheme::Ptq161 {
+            salient_ratio: cfg.salient_ratio,
+        },
+        4096,
+        4096,
+    );
+    Ok((
+        QuantModel {
+            method: "PTQ1.61".into(),
+            bits_label: "1.61".into(),
+            params: out_params,
+            parts: Some(parts_all),
+            avg_bits,
+        },
+        final_losses,
+    ))
+}

@@ -1,0 +1,86 @@
+//! Calibration capture: runs the FP model over the calibration set with the
+//! `block_capture` artifact and accumulates per-(layer, linear) activation
+//! statistics — the inputs to the structured mask (Eq. 4), AWQ/SmoothQuant
+//! scaling, and the GPTQ/BiLLM Hessians.
+//!
+//! Also provides the block-input streams (FP and quantized-prefix) the
+//! block-wise optimizer consumes.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::Pipeline;
+use crate::data::calib::CalibSet;
+use crate::model::{Params, LINEARS};
+use crate::quant::LinearCalib;
+use crate::tensor::Tensor;
+
+/// Which capture tensor feeds which linear.
+pub fn capture_index(linear: &str) -> usize {
+    match linear {
+        "wq" | "wk" | "wv" => 0,  // x_attn
+        "wo" => 1,                // x_o
+        "w_gate" | "w_up" => 2,   // x_mlp
+        "w_down" => 3,            // x_down
+        other => panic!("unknown linear {other}"),
+    }
+}
+
+/// Per-layer, per-linear calibration statistics.
+pub struct ModelCalib {
+    /// calib["l{l}.{lin}"]
+    pub linears: HashMap<String, LinearCalib>,
+    /// FP inputs of each block per calibration batch: h_fp[layer][batch]
+    pub block_inputs: Vec<Vec<Tensor>>,
+}
+
+/// Run capture over the whole calibration set.
+pub fn capture(
+    pipe: &Pipeline,
+    params: &Params,
+    calib: &CalibSet,
+    with_hessian: bool,
+) -> Result<ModelCalib> {
+    let cfg = &pipe.cfg;
+    let mut linears: HashMap<String, LinearCalib> = HashMap::new();
+    for l in 0..cfg.n_layers {
+        for lin in LINEARS {
+            let in_dim = crate::model::linear_shape(cfg, lin).1;
+            linears.insert(
+                format!("l{l}.{lin}"),
+                LinearCalib::empty(in_dim),
+            );
+        }
+    }
+    let mut block_inputs: Vec<Vec<Tensor>> =
+        vec![Vec::new(); cfg.n_layers];
+    for batch in &calib.batches {
+        let mut h = pipe.embed(params, batch)?;
+        for l in 0..cfg.n_layers {
+            block_inputs[l].push(h.clone());
+            let caps = pipe.block_capture(&h, &params.block(l))?;
+            // caps = [x_attn, x_o, x_mlp, x_down, h_out]
+            for lin in LINEARS {
+                let cap = &caps[capture_index(lin)];
+                let rows = cap.shape[0] * cap.shape[1];
+                let flat = Tensor::from_vec(
+                    &[rows, cap.shape[2]],
+                    cap.data.clone(),
+                );
+                linears
+                    .get_mut(&format!("l{l}.{lin}"))
+                    .unwrap()
+                    .accumulate(&flat, with_hessian);
+            }
+            h = caps.into_iter().last().unwrap();
+        }
+    }
+    Ok(ModelCalib { linears, block_inputs })
+}
+
+impl ModelCalib {
+    pub fn get(&self, l: usize, lin: &str) -> &LinearCalib {
+        &self.linears[&format!("l{l}.{lin}")]
+    }
+}

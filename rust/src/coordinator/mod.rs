@@ -1,0 +1,171 @@
+//! L3 coordinator: owns the full lifecycle — pretraining, calibration
+//! capture, quantization dispatch, block-wise scaling-factor optimization,
+//! and restorative-LoRA preprocessing — by sequencing AOT executables
+//! through the PJRT runtime. Python never runs here.
+
+pub mod blockopt;
+pub mod capture;
+pub mod preprocess;
+pub mod pretrain;
+pub mod quantize;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{Params, LINEARS};
+use crate::runtime::manifest::ModelConfig;
+use crate::runtime::{Runtime, Value};
+use crate::tensor::Tensor;
+
+/// A runtime bound to one model config: the layer-pipeline primitive every
+/// higher stage (eval, capture, blockopt, serve) is built from.
+pub struct Pipeline<'a> {
+    pub rt: &'a Runtime,
+    pub cfg: ModelConfig,
+}
+
+impl<'a> Pipeline<'a> {
+    pub fn new(rt: &'a Runtime, cname: &str) -> Result<Pipeline<'a>> {
+        let cfg = rt
+            .manifest
+            .configs
+            .get(cname)
+            .ok_or_else(|| anyhow!("unknown config {cname}"))?
+            .clone();
+        Ok(Pipeline { rt, cfg })
+    }
+
+    pub fn cname(&self) -> &str {
+        &self.cfg.name
+    }
+
+    pub fn param_spec(&self) -> &[(String, Vec<usize>)] {
+        &self.rt.manifest.param_spec[&self.cfg.name]
+    }
+
+    pub fn init_params(&self, seed: u64) -> Params {
+        Params::init(self.param_spec(), seed)
+    }
+
+    /// tokens (b_eval, t) -> hidden states
+    pub fn embed(&self, params: &Params, tokens: &[i32]) -> Result<Tensor> {
+        let (b, t) = (self.cfg.b_eval, self.cfg.seq);
+        let out = self.rt.run_cfg(
+            "embed_fwd",
+            &self.cfg.name,
+            &[
+                Value::tokens(&[b, t], tokens.to_vec()),
+                params.get("embed").into(),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// One FP (or dense-dequantized) block forward.
+    pub fn block_fwd(&self, h: &Tensor, block: &[&Tensor]) -> Result<Tensor> {
+        let mut inputs: Vec<Value> = vec![h.into()];
+        inputs.extend(block.iter().map(|&t| Value::from(t)));
+        let out = self.rt.run_cfg("block_fwd", &self.cfg.name, &inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Block forward that also returns the four linear-input captures:
+    /// (x_attn, x_o, x_mlp, x_down, h_out).
+    pub fn block_capture(
+        &self,
+        h: &Tensor,
+        block: &[&Tensor],
+    ) -> Result<Vec<Tensor>> {
+        let mut inputs: Vec<Value> = vec![h.into()];
+        inputs.extend(block.iter().map(|&t| Value::from(t)));
+        self.rt.run_cfg("block_capture", &self.cfg.name, &inputs)
+    }
+
+    /// Quantized block via the fused Pallas kernel artifact. `qparts` is
+    /// ordered per LINEARS: (w_sal, sign_ns, alpha_s, alpha_r1, alpha_r2, mu).
+    pub fn qblock_fwd(
+        &self,
+        h: &Tensor,
+        attn_norm: &Tensor,
+        mlp_norm: &Tensor,
+        qparts: &[[Tensor; 6]],
+    ) -> Result<Tensor> {
+        assert_eq!(qparts.len(), LINEARS.len());
+        let mut inputs: Vec<Value> =
+            vec![h.into(), attn_norm.into(), mlp_norm.into()];
+        for parts in qparts {
+            for p in parts {
+                inputs.push(p.into());
+            }
+        }
+        let out = self.rt.run_cfg("qblock_fwd", &self.cfg.name, &inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// SmoothQuant W4A4 block (Table 13). smooth = (s_attn, s_o, s_mlp,
+    /// s_down).
+    pub fn qblock_w4a4(
+        &self,
+        h: &Tensor,
+        block: &[&Tensor],
+        smooth: &[Tensor; 4],
+    ) -> Result<Tensor> {
+        let mut inputs: Vec<Value> = vec![h.into()];
+        inputs.extend(block.iter().map(|&t| Value::from(t)));
+        inputs.extend(smooth.iter().map(Value::from));
+        let out = self.rt.run_cfg("qblock_w4a4_fwd", &self.cfg.name, &inputs)?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Final norm + head: returns (nll_sum, logits).
+    pub fn head(
+        &self,
+        params: &Params,
+        h: &Tensor,
+        tokens: &[i32],
+    ) -> Result<(f32, Tensor)> {
+        let (b, t) = (self.cfg.b_eval, self.cfg.seq);
+        let out = self.rt.run_cfg(
+            "head_fwd",
+            &self.cfg.name,
+            &[
+                h.into(),
+                params.get("norm_f").into(),
+                params.get("w_out").into(),
+                Value::tokens(&[b, t], tokens.to_vec()),
+            ],
+        )?;
+        let mut it = out.into_iter();
+        let nll = it.next().unwrap().data[0];
+        let logits = it.next().unwrap();
+        Ok((nll, logits))
+    }
+
+    /// Full forward over dense params (FP or fake-quantized): sum NLL.
+    pub fn nll_sum(&self, params: &Params, tokens: &[i32]) -> Result<f32> {
+        let mut h = self.embed(params, tokens)?;
+        for l in 0..self.cfg.n_layers {
+            h = self.block_fwd(&h, &params.block(l))?;
+        }
+        Ok(self.head(params, &h, tokens)?.0)
+    }
+
+    /// Tokens predicted per eval batch (for PPL normalization).
+    pub fn tokens_per_batch(&self) -> usize {
+        self.cfg.b_eval * (self.cfg.seq - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Pipeline methods are integration-tested in rust/tests/ (they need
+    // built artifacts); here we only check pure helper wiring.
+    use crate::model::LINEARS;
+
+    #[test]
+    fn linears_order_is_the_manifest_order() {
+        assert_eq!(
+            LINEARS,
+            ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"]
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Quantization preprocessing (paper section 3.4): restorative LoRA.
+//!
+//! A rank-r LoRA delta is trained on the *pretraining* distribution while
+//! the effective weights W + BA/r pass through a PTQ1.61-style fake
+//! quantization with a straight-through estimator (the `lora_grad` AOT
+//! artifact). Merging the deltas concentrates salient weights into the
+//! row-wise pattern per-channel PTQ can represent (Fig. 4); the returned
+//! model is then quantized by any method.
+
+use anyhow::Result;
+
+use super::capture::ModelCalib;
+use super::Pipeline;
+use crate::data::Corpus;
+use crate::model::{Params, LINEARS};
+use crate::opt::AdamW;
+use crate::quant::ptq161::{structured_mask, MaskCriterion};
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PreprocessCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub salient_ratio: f64,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for PreprocessCfg {
+    fn default() -> Self {
+        PreprocessCfg {
+            steps: 120,
+            lr: 2e-3,
+            salient_ratio: 0.2,
+            seed: 23,
+            verbose: false,
+        }
+    }
+}
+
+pub struct PreprocessResult {
+    pub params: Params,
+    /// (step, restorative loss) curve
+    pub curve: Vec<(usize, f32)>,
+}
+
+/// Train the restorative LoRA and merge it into the weights.
+pub fn preprocess(
+    pipe: &Pipeline,
+    params: &Params,
+    calib: &ModelCalib,
+    corpus: &Corpus,
+    cfg: &PreprocessCfg,
+) -> Result<PreprocessResult> {
+    let mcfg = &pipe.cfg;
+    let r = mcfg.lora_rank;
+    let mut rng = Rng::new(cfg.seed);
+    // masks per (layer, linear) from the FP activation stats — the same
+    // criterion the quantizer will use afterwards
+    let mut masks: Vec<Tensor> = Vec::new();
+    for l in 0..mcfg.n_layers {
+        for lin in LINEARS {
+            let c = calib.get(l, lin);
+            let m = structured_mask(
+                &c.act_abs_mean,
+                &c.act_sq_mean,
+                cfg.salient_ratio,
+                MaskCriterion::ActivationMagnitude,
+            );
+            masks.push(Tensor::from_vec(
+                &[m.len()],
+                m.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+            ));
+        }
+    }
+    // LoRA state: A ~ N(0, 0.02), B = 0 (standard init; grads flow to B
+    // immediately, to A once B is nonzero)
+    let mut ab: Vec<Tensor> = Vec::new();
+    for l in 0..mcfg.n_layers {
+        for lin in LINEARS {
+            let (out, inn) = crate::model::linear_shape(mcfg, lin);
+            let _ = l;
+            ab.push(Tensor::randn(&[r, inn], 0.02, &mut rng));
+            ab.push(Tensor::zeros(&[out, r]));
+        }
+    }
+    let mut opt = AdamW::new(cfg.lr, ab.len());
+    let mut curve = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = corpus.batch(mcfg.b_train, mcfg.seq, &mut rng);
+        let mut inputs: Vec<Value> =
+            params.tensors.iter().map(Value::from).collect();
+        inputs.extend(ab.iter().map(Value::from));
+        inputs.extend(masks.iter().map(Value::from));
+        inputs.push(Value::tokens(&[mcfg.b_train, mcfg.seq], batch));
+        let mut out = pipe.rt.run_cfg("lora_grad", pipe.cname(), &inputs)?;
+        let grads = out.split_off(1);
+        let loss = out[0].data[0];
+        opt.step(&mut ab, &grads);
+        if step % 20 == 0 || step + 1 == cfg.steps {
+            curve.push((step, loss));
+            if cfg.verbose {
+                eprintln!("[preprocess] step {step:>4} loss {loss:.4}");
+            }
+        }
+    }
+    // merge: W <- W + B A / r
+    let mut merged = params.clone();
+    let mut i = 0;
+    for l in 0..mcfg.n_layers {
+        for lin in LINEARS {
+            let a = &ab[2 * i];
+            let b = &ab[2 * i + 1];
+            let delta = b.matmul(a).scale(1.0 / r as f32);
+            let name = format!("l{l}.{lin}");
+            *merged.get_mut(&name) = merged.get(&name).add(&delta);
+            i += 1;
+        }
+    }
+    Ok(PreprocessResult { params: merged, curve })
+}
+
+/// Fig. 4 metric: row-concentration of salient weights. For each linear we
+/// mark the top-q fraction of |W| entries as salient and measure what
+/// fraction falls in the top-`row_frac` rows by salient count — 1.0 means
+/// perfectly row-concentrated, ~row_frac means scattered.
+pub fn row_concentration(w: &Tensor, q: f64, row_frac: f64) -> f64 {
+    let (n, m) = (w.rows(), w.cols());
+    let total = n * m;
+    let k = ((total as f64) * q).round() as usize;
+    let mut idx: Vec<usize> = (0..total).collect();
+    idx.sort_by(|&a, &b| {
+        w.data[b].abs().partial_cmp(&w.data[a].abs()).unwrap()
+    });
+    let mut per_row = vec![0usize; n];
+    for &i in &idx[..k] {
+        per_row[i / m] += 1;
+    }
+    let mut counts = per_row.clone();
+    counts.sort_unstable_by(|a, b| b.cmp(a));
+    let top_rows = ((n as f64) * row_frac).round() as usize;
+    let in_top: usize = counts[..top_rows.min(n)].iter().sum();
+    in_top as f64 / k.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn row_concentration_detects_pattern() {
+        let mut rng = Rng::new(1);
+        // scattered: iid weights
+        let scattered = Tensor::randn(&[32, 64], 1.0, &mut rng);
+        // concentrated: a few rows carry all the big weights
+        let mut conc = Tensor::randn(&[32, 64], 0.1, &mut rng);
+        for r in 0..6 {
+            for x in conc.row_mut(r * 5) {
+                *x *= 20.0;
+            }
+        }
+        let cs = row_concentration(&scattered, 0.2, 0.2);
+        let cc = row_concentration(&conc, 0.2, 0.2);
+        assert!(cc > 0.75, "concentrated: {cc}");
+        assert!(cs < 0.6, "scattered: {cs}");
+        assert!(cc > cs);
+    }
+
+    #[test]
+    fn row_concentration_bounds() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let c = row_concentration(&w, 0.3, 0.25);
+        assert!((0.0..=1.0).contains(&c));
+    }
+}

@@ -1,0 +1,90 @@
+//! Pretraining loop: the Rust coordinator drives the AOT `lm_grad`
+//! executable (whole-model fwd+bwd in one XLA module) and applies AdamW on
+//! the host. Produces the "pretrained model" every PTQ experiment starts
+//! from and logs the loss curve (the e2e example records it in
+//! EXPERIMENTS.md).
+
+use anyhow::Result;
+
+use super::Pipeline;
+use crate::data::Corpus;
+use crate::model::Params;
+use crate::opt::AdamW;
+use crate::runtime::Value;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct PretrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for PretrainConfig {
+    fn default() -> Self {
+        PretrainConfig { steps: 400, lr: 3e-3, seed: 7, log_every: 25 }
+    }
+}
+
+pub struct PretrainResult {
+    pub params: Params,
+    /// (step, loss) curve
+    pub curve: Vec<(usize, f32)>,
+}
+
+/// One lm_grad execution: returns (loss, grads in param order).
+pub fn lm_grad(
+    pipe: &Pipeline,
+    params: &Params,
+    tokens: &[i32],
+) -> Result<(f32, Vec<crate::tensor::Tensor>)> {
+    let (b, t) = (pipe.cfg.b_train, pipe.cfg.seq);
+    let mut inputs: Vec<Value> =
+        params.tensors.iter().map(Value::from).collect();
+    inputs.push(Value::tokens(&[b, t], tokens.to_vec()));
+    let mut out = pipe.rt.run_cfg("lm_grad", pipe.cname(), &inputs)?;
+    let grads = out.split_off(1);
+    Ok((out[0].data[0], grads))
+}
+
+pub fn pretrain(
+    pipe: &Pipeline,
+    corpus: &Corpus,
+    cfg: &PretrainConfig,
+) -> Result<PretrainResult> {
+    let mut params = pipe.init_params(cfg.seed);
+    let mut opt = AdamW::new(cfg.lr, params.tensors.len());
+    let mut rng = Rng::new(cfg.seed ^ 0xBEEF);
+    let mut curve = Vec::new();
+    for step in 0..cfg.steps {
+        let batch = corpus.batch(pipe.cfg.b_train, pipe.cfg.seq, &mut rng);
+        let (loss, grads) = lm_grad(pipe, &params, &batch)?;
+        opt.step(&mut params.tensors, &grads);
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            curve.push((step, loss));
+            eprintln!("[pretrain {}] step {step:>4} loss {loss:.4}", pipe.cname());
+        }
+    }
+    Ok(PretrainResult { params, curve })
+}
+
+/// Load a cached pretrained checkpoint or train + save one.
+pub fn pretrain_cached(
+    pipe: &Pipeline,
+    corpus: &Corpus,
+    cfg: &PretrainConfig,
+) -> Result<PretrainResult> {
+    let path = crate::runs_dir()
+        .join(format!("pretrained_{}_{}steps.bin", pipe.cname(), cfg.steps));
+    if path.exists() {
+        eprintln!("[pretrain] loading cached {}", path.display());
+        return Ok(PretrainResult {
+            params: Params::load(&path)?,
+            curve: Vec::new(),
+        });
+    }
+    let res = pretrain(pipe, corpus, cfg)?;
+    res.params.save(&path)?;
+    Ok(res)
+}

@@ -1,0 +1,74 @@
+//! Whole-model quantization driver: applies a layer-wise quantizer to every
+//! block linear, producing a dense fake-quantized model (the paper's eval
+//! contract) plus storage accounting and, for PTQ1.61, the structured parts
+//! for the fused-kernel path and the block-wise optimizer.
+
+use anyhow::Result;
+
+use super::capture::ModelCalib;
+use super::Pipeline;
+use crate::model::{Params, LINEARS};
+use crate::quant::{Ptq161Parts, Quantizer};
+
+pub struct QuantModel {
+    pub method: String,
+    pub bits_label: String,
+    /// dense fake-quantized model (norms/embeddings/head untouched)
+    pub params: Params,
+    /// PTQ1.61 structured parts per [layer][linear]
+    pub parts: Option<Vec<Vec<Ptq161Parts>>>,
+    /// weight-count-weighted average effective bits over quantized linears
+    pub avg_bits: f64,
+}
+
+pub fn quantize_model(
+    pipe: &Pipeline,
+    params: &Params,
+    calib: &ModelCalib,
+    method: &dyn Quantizer,
+) -> Result<QuantModel> {
+    let cfg = &pipe.cfg;
+    let mut out = params.clone();
+    let mut parts_all: Vec<Vec<Ptq161Parts>> = Vec::new();
+    let mut bits_acc = 0.0f64;
+    let mut weights_acc = 0.0f64;
+    let mut have_parts = true;
+    for l in 0..cfg.n_layers {
+        let mut layer_parts = Vec::new();
+        for lin in LINEARS {
+            let name = format!("l{l}.{lin}");
+            let w = params.get(&name);
+            let q = method.quantize_linear(w, calib.get(l, lin));
+            bits_acc += q.avg_bits() * w.numel() as f64;
+            weights_acc += w.numel() as f64;
+            if let Some(p) = &q.parts {
+                layer_parts.push(p.clone());
+            } else {
+                have_parts = false;
+            }
+            *out.get_mut(&name) = q.deq;
+        }
+        parts_all.push(layer_parts);
+    }
+    Ok(QuantModel {
+        method: method.name().to_string(),
+        bits_label: method.bits_label(),
+        params: out,
+        parts: if have_parts { Some(parts_all) } else { None },
+        avg_bits: bits_acc / weights_acc,
+    })
+}
+
+impl QuantModel {
+    /// Rebuild the dense params from (possibly optimizer-updated) parts.
+    pub fn refresh_dense_from_parts(&mut self) {
+        if let Some(parts) = &self.parts {
+            for (l, layer) in parts.iter().enumerate() {
+                for (i, lin) in LINEARS.iter().enumerate() {
+                    let name = format!("l{l}.{lin}");
+                    *self.params.get_mut(&name) = layer[i].dequantize();
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Data substrate: synthetic corpus ("wiki" / "c4" styles), calibration
+//! sampling, and zero-shot task generators.
+//!
+//! The corpus is a deterministic synthetic language with learnable
+//! regularities that mirror what the paper's benchmarks probe:
+//!   1. name -> preferred-verb agreement        (ARC-style 4-choice)
+//!   2. noun -> fixed-adjective collocation     (PIQA-style 2-choice)
+//!   3. paragraph topic repetition              (LAMBADA-style cloze)
+//!   4. "key K is V" facts                      (LongBench-style retrieval)
+//!   5. digit arithmetic lines                  (GSM8K-analog, near-chance)
+//! "wiki" (in-domain held-out) and "c4" (shifted function words) splits play
+//! WikiText2 / C4 in every perplexity table.
+
+pub mod calib;
+pub mod tasks;
+
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::rng::{zipf_cdf, Rng};
+
+pub const NOUNS: [&str; 24] = [
+    "river", "stone", "garden", "engine", "book", "tower", "forest", "lamp",
+    "bridge", "cloud", "market", "violin", "harbor", "signal", "meadow",
+    "mirror", "anchor", "castle", "barrel", "comet", "valley", "copper",
+    "falcon", "orchid",
+];
+
+pub const VERBS: [&str; 16] = [
+    "holds", "turns", "guards", "lifts", "draws", "keeps", "moves", "finds",
+    "shapes", "brings", "carries", "watches", "builds", "counts", "marks",
+    "sees",
+];
+
+pub const ADJS: [&str; 24] = [
+    "quiet", "bright", "heavy", "ancient", "narrow", "golden", "distant",
+    "hollow", "gentle", "frozen", "crimson", "silent", "steep", "velvet",
+    "amber", "pale", "sturdy", "misty", "lively", "somber", "vivid", "stark",
+    "mellow", "brisk",
+];
+
+pub const NAMES: [&str; 16] = [
+    "alda", "boris", "celia", "darin", "elena", "felix", "greta", "henry",
+    "iris", "jonas", "karla", "leo", "mira", "nils", "opal", "petra",
+];
+
+pub const VALUES: [&str; 12] = [
+    "red", "blue", "green", "black", "white", "gray", "gold", "pink",
+    "teal", "rust", "jade", "plum",
+];
+
+/// High-entropy filler vocabulary (Zipf-sampled). This is what separates
+/// methods: a heavily damaged model keeps the deterministic grammar but
+/// loses the memorized filler distribution, exactly like real LLMs losing
+/// long-tail knowledge under extreme quantization.
+pub const FILLERS: [&str; 48] = [
+    "able", "band", "cost", "dawn", "edge", "fact", "gain", "hint", "idea",
+    "joke", "kind", "loan", "mood", "note", "oath", "pace", "quest", "rank",
+    "seed", "tide", "unit", "vote", "wave", "yarn", "zone", "arch", "bloom",
+    "craft", "drift", "ember", "flock", "grain", "haze", "inlet", "jolt",
+    "knack", "ledge", "motif", "nook", "orbit", "plume", "quirk", "ridge",
+    "slope", "trail", "urge", "vault", "wisp",
+];
+
+/// name i prefers verb (i mod VERBS); noun j takes adjective (j mod ADJS).
+pub fn preferred_verb(name_idx: usize) -> &'static str {
+    VERBS[name_idx % VERBS.len()]
+}
+
+pub fn collocated_adj(noun_idx: usize) -> &'static str {
+    ADJS[noun_idx % ADJS.len()]
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Style {
+    Wiki,
+    C4,
+}
+
+/// One paragraph of the synthetic language.
+fn paragraph(style: Style, rng: &mut Rng, noun_cdf: &[f64], fill_cdf: &[f64]) -> String {
+    let topic = rng.zipf(NOUNS.len(), 1.05, noun_cdf);
+    let mut out = String::new();
+    let n_sent = 3 + rng.below(4);
+    let filler = |rng: &mut Rng| -> &'static str {
+        FILLERS[rng.zipf(FILLERS.len(), 1.15, fill_cdf)]
+    };
+    for s in 0..n_sent {
+        let name_i = rng.below(NAMES.len());
+        let noun_i = if s == 0 { topic } else { rng.zipf(NOUNS.len(), 1.05, noun_cdf) };
+        let verb = preferred_verb(name_i);
+        let adj = collocated_adj(noun_i);
+        let sent = match (style, rng.below(4)) {
+            // 25%: key-value fact line (regularity 4)
+            (_, 0) => {
+                let k = rng.below(NAMES.len());
+                let v = rng.below(VALUES.len());
+                match style {
+                    Style::Wiki => format!(
+                        "key {} is {} near the {} .",
+                        NAMES[k], VALUES[v], filler(rng)
+                    ),
+                    Style::C4 => format!(
+                        "note : key {} is {} by the {} !",
+                        NAMES[k], VALUES[v], filler(rng)
+                    ),
+                }
+            }
+            // 25%: arithmetic line (regularity 5)
+            (_, 1) => {
+                let a = rng.below(9) + 1;
+                let b = rng.below(9) + 1;
+                match style {
+                    Style::Wiki => format!("{} plus {} equals {} .", a, b, a + b),
+                    Style::C4 => format!("so {} plus {} equals {} ok .", a, b, a + b),
+                }
+            }
+            // 50%: agreement sentence (regularities 1+2) carrying two
+            // Zipf-sampled filler slots and a number (entropy the model
+            // must spend capacity on)
+            (Style::Wiki, _) => format!(
+                "the {} {} of {} {} the {} {} with a {} {} over {} .",
+                adj, NOUNS[noun_i], NAMES[name_i], verb,
+                collocated_adj(topic), NOUNS[topic],
+                filler(rng), filler(rng), rng.below(90) + 10,
+            ),
+            (Style::C4, _) => format!(
+                "you know {} {} a {} {} like some {} {} around {} !",
+                NAMES[name_i], verb, adj, NOUNS[noun_i],
+                filler(rng), filler(rng), rng.below(90) + 10,
+            ),
+        };
+        out.push_str(&sent);
+        out.push(' ');
+    }
+    // topic repetition close (regularity 3, the cloze signal)
+    match style {
+        Style::Wiki => out.push_str(&format!(
+            "in the end it was the {} .\n", NOUNS[topic]
+        )),
+        Style::C4 => out.push_str(&format!(
+            "and yes folks it was the {} !\n", NOUNS[topic]
+        )),
+    }
+    out
+}
+
+/// Generate at least `n_chars` of corpus text, deterministic in `seed`.
+pub fn gen_text(style: Style, n_chars: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed ^ match style {
+        Style::Wiki => 0x5757,
+        Style::C4 => 0xC4C4,
+    });
+    let noun_cdf = zipf_cdf(NOUNS.len(), 1.05);
+    let fill_cdf = zipf_cdf(FILLERS.len(), 1.15);
+    let mut out = String::with_capacity(n_chars + 256);
+    while out.len() < n_chars {
+        out.push_str(&paragraph(style, &mut rng, &noun_cdf, &fill_cdf));
+    }
+    out
+}
+
+/// Tokenized corpus with train/test split (test plays the held-out PPL set).
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub style: Style,
+    pub train: Vec<i32>,
+    pub test: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn build(style: Style, n_chars: usize, seed: u64) -> Corpus {
+        let tk = ByteTokenizer;
+        let tokens = tk.encode(&gen_text(style, n_chars, seed));
+        let split = tokens.len() * 9 / 10;
+        Corpus {
+            style,
+            train: tokens[..split].to_vec(),
+            test: tokens[split..].to_vec(),
+        }
+    }
+
+    /// Random training batch (b, t) of contiguous windows.
+    pub fn batch(&self, b: usize, t: usize, rng: &mut Rng) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            let start = rng.below(self.train.len() - t);
+            out.extend_from_slice(&self.train[start..start + t]);
+        }
+        out
+    }
+
+    /// Deterministic eval windows covering the test split: k batches of
+    /// (b, t) tokens, non-overlapping stride.
+    pub fn eval_batches(&self, b: usize, t: usize, max_batches: usize) -> Vec<Vec<i32>> {
+        let mut out = Vec::new();
+        let mut pos = 0;
+        while out.len() < max_batches && pos + b * t <= self.test.len() {
+            out.push(self.test[pos..pos + b * t].to_vec());
+            pos += b * t;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        assert_eq!(gen_text(Style::Wiki, 2000, 7), gen_text(Style::Wiki, 2000, 7));
+        assert_ne!(gen_text(Style::Wiki, 2000, 7), gen_text(Style::Wiki, 2000, 8));
+    }
+
+    #[test]
+    fn styles_differ() {
+        let w = gen_text(Style::Wiki, 4000, 1);
+        let c = gen_text(Style::C4, 4000, 1);
+        assert!(w.contains("in the end it was the"));
+        assert!(c.contains("and yes folks it was the"));
+        assert!(!w.contains("folks"));
+    }
+
+    #[test]
+    fn corpus_split_and_batches() {
+        let c = Corpus::build(Style::Wiki, 50_000, 3);
+        assert!(c.train.len() > 8 * c.test.len() - 4096);
+        let mut rng = Rng::new(1);
+        let b = c.batch(4, 128, &mut rng);
+        assert_eq!(b.len(), 4 * 128);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+        let evs = c.eval_batches(4, 128, 8);
+        assert!(!evs.is_empty());
+        assert_eq!(evs[0].len(), 4 * 128);
+        // non-overlapping
+        assert_ne!(evs[0], evs[1]);
+    }
+
+    #[test]
+    fn agreement_regularity_present() {
+        // every "of NAME VERB" in wiki style uses the preferred verb
+        let text = gen_text(Style::Wiki, 30_000, 11);
+        for (i, name) in NAMES.iter().enumerate() {
+            let pat = format!("of {} ", name);
+            if let Some(pos) = text.find(&pat) {
+                let after = &text[pos + pat.len()..];
+                let verb = after.split_whitespace().next().unwrap();
+                assert_eq!(verb, preferred_verb(i), "name {name}");
+            }
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Zero-shot task generators — synthetic analogs of the paper's reasoning
+//! benchmarks, each keyed to one regularity the corpus actually teaches
+//! (see data/mod.rs). Scoring (length-normalized choice log-prob, as in
+//! lm-evaluation-harness) lives in eval/zeroshot.rs.
+
+use super::{collocated_adj, preferred_verb, ADJS, NAMES, NOUNS, VALUES, VERBS};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// 4-choice: which verb follows a name (ARC-analog, regularity 1)
+    VerbAgreement,
+    /// 2-choice: correct collocated adjective vs wrong one (PIQA-analog)
+    Collocation,
+    /// cloze: paragraph-final topic noun (LAMBADA-analog, regularity 3)
+    Cloze,
+    /// key-value retrieval with distractor facts (LongBench-analog)
+    Retrieval,
+    /// held-out digit arithmetic (GSM8K-analog; expected near chance)
+    Arithmetic,
+}
+
+impl TaskKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::VerbAgreement => "ARC-a (verb)",
+            TaskKind::Collocation => "PIQA-a (adj)",
+            TaskKind::Cloze => "LAMB-a (cloze)",
+            TaskKind::Retrieval => "Long-a (kv)",
+            TaskKind::Arithmetic => "GSM-a (arith)",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub prompt: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+impl Task {
+    pub fn n_choices(&self) -> usize {
+        self.choices.len()
+    }
+}
+
+/// Generate `n` task instances, deterministic in `seed`.
+pub fn generate(kind: TaskKind, n: usize, seed: u64) -> Vec<Task> {
+    let tk = ByteTokenizer;
+    let mut rng = Rng::new(seed ^ 0x7A5C);
+    (0..n).map(|_| one(kind, &mut rng, &tk)).collect()
+}
+
+fn pick_distinct(rng: &mut Rng, n: usize, k: usize, correct: usize) -> Vec<usize> {
+    // k distractors != correct
+    let mut out = Vec::new();
+    while out.len() < k {
+        let c = rng.below(n);
+        if c != correct && !out.contains(&c) {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn shuffled_choices(
+    rng: &mut Rng,
+    correct: String,
+    distractors: Vec<String>,
+) -> (Vec<String>, usize) {
+    let mut all = vec![correct];
+    all.extend(distractors);
+    let mut order: Vec<usize> = (0..all.len()).collect();
+    rng.shuffle(&mut order);
+    let answer = order.iter().position(|&i| i == 0).unwrap();
+    let choices = order.into_iter().map(|i| all[i].clone()).collect();
+    (choices, answer)
+}
+
+fn one(kind: TaskKind, rng: &mut Rng, tk: &ByteTokenizer) -> Task {
+    match kind {
+        TaskKind::VerbAgreement => {
+            let name_i = rng.below(NAMES.len());
+            let noun_i = rng.below(NOUNS.len());
+            let prompt = format!(
+                "the {} {} of {} ",
+                collocated_adj(noun_i), NOUNS[noun_i], NAMES[name_i]
+            );
+            let correct = preferred_verb(name_i).to_string();
+            let dis = pick_distinct(rng, VERBS.len(), 3, name_i % VERBS.len())
+                .into_iter()
+                .map(|v| VERBS[v].to_string())
+                .collect();
+            let (choices, answer) = shuffled_choices(rng, correct, dis);
+            Task {
+                prompt: tk.encode(&prompt),
+                choices: choices.iter().map(|c| tk.encode(c)).collect(),
+                answer,
+            }
+        }
+        TaskKind::Collocation => {
+            let noun_i = rng.below(NOUNS.len());
+            let prompt = "the ".to_string();
+            let correct = format!("{} {}", collocated_adj(noun_i), NOUNS[noun_i]);
+            let wrong_adj = pick_distinct(rng, ADJS.len(), 1, noun_i % ADJS.len());
+            let wrong = format!("{} {}", ADJS[wrong_adj[0]], NOUNS[noun_i]);
+            let (choices, answer) = shuffled_choices(rng, correct, vec![wrong]);
+            Task {
+                prompt: tk.encode(&prompt),
+                choices: choices.iter().map(|c| tk.encode(c)).collect(),
+                answer,
+            }
+        }
+        TaskKind::Cloze => {
+            let topic = rng.below(NOUNS.len());
+            let name_i = rng.below(NAMES.len());
+            let mut p = format!(
+                "the {} {} of {} {} the {} {} . ",
+                collocated_adj(topic), NOUNS[topic], NAMES[name_i],
+                preferred_verb(name_i), collocated_adj(topic), NOUNS[topic],
+            );
+            p.push_str("in the end it was the ");
+            let correct = NOUNS[topic].to_string();
+            let dis = pick_distinct(rng, NOUNS.len(), 3, topic)
+                .into_iter()
+                .map(|i| NOUNS[i].to_string())
+                .collect();
+            let (choices, answer) = shuffled_choices(rng, correct, dis);
+            Task {
+                prompt: tk.encode(&p),
+                choices: choices.iter().map(|c| tk.encode(c)).collect(),
+                answer,
+            }
+        }
+        TaskKind::Retrieval => {
+            let key_i = rng.below(NAMES.len());
+            let val_i = rng.below(VALUES.len());
+            let mut p = format!("key {} is {} . ", NAMES[key_i], VALUES[val_i]);
+            // distractor facts about *other* keys
+            for _ in 0..3 {
+                let k = pick_distinct(rng, NAMES.len(), 1, key_i)[0];
+                let v = rng.below(VALUES.len());
+                p.push_str(&format!("key {} is {} . ", NAMES[k], VALUES[v]));
+            }
+            p.push_str(&format!("key {} is ", NAMES[key_i]));
+            let correct = VALUES[val_i].to_string();
+            let dis = pick_distinct(rng, VALUES.len(), 3, val_i)
+                .into_iter()
+                .map(|i| VALUES[i].to_string())
+                .collect();
+            let (choices, answer) = shuffled_choices(rng, correct, dis);
+            Task {
+                prompt: tk.encode(&p),
+                choices: choices.iter().map(|c| tk.encode(c)).collect(),
+                answer,
+            }
+        }
+        TaskKind::Arithmetic => {
+            let a = rng.below(9) + 1;
+            let b = rng.below(9) + 1;
+            let p = format!("{} plus {} equals ", a, b);
+            let correct = format!("{}", a + b);
+            let mut dis = Vec::new();
+            while dis.len() < 3 {
+                let w = rng.below(17) + 2;
+                if w != a + b && !dis.contains(&format!("{w}")) {
+                    dis.push(format!("{w}"));
+                }
+            }
+            let (choices, answer) = shuffled_choices(rng, correct, dis);
+            Task {
+                prompt: tk.encode(&p),
+                choices: choices.iter().map(|c| tk.encode(c)).collect(),
+                answer,
+            }
+        }
+    }
+}
+
+pub const ALL_KINDS: [TaskKind; 5] = [
+    TaskKind::Collocation,
+    TaskKind::VerbAgreement,
+    TaskKind::Cloze,
+    TaskKind::Retrieval,
+    TaskKind::Arithmetic,
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_well_formed() {
+        for kind in ALL_KINDS {
+            let a = generate(kind, 20, 3);
+            let b = generate(kind, 20, 3);
+            assert_eq!(a.len(), 20);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.answer, y.answer);
+                assert!(x.answer < x.choices.len());
+                assert!(!x.prompt.is_empty());
+                assert!(x.choices.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn choice_counts() {
+        assert_eq!(generate(TaskKind::Collocation, 5, 1)[0].n_choices(), 2);
+        assert_eq!(generate(TaskKind::VerbAgreement, 5, 1)[0].n_choices(), 4);
+        assert_eq!(generate(TaskKind::Cloze, 5, 1)[0].n_choices(), 4);
+    }
+
+    #[test]
+    fn answers_not_always_first() {
+        let tasks = generate(TaskKind::Cloze, 50, 5);
+        assert!(tasks.iter().any(|t| t.answer != 0));
+    }
+
+    #[test]
+    fn retrieval_prompt_contains_distractors() {
+        let t = &generate(TaskKind::Retrieval, 1, 2)[0];
+        let text = ByteTokenizer.decode(&t.prompt);
+        assert!(text.matches("key ").count() >= 4);
+    }
+}

@@ -1,0 +1,72 @@
+//! Evaluation: perplexity (the paper's core metric) and zero-shot task
+//! scoring (lm-evaluation-harness-style length-normalized choice scoring).
+
+pub mod ppl;
+pub mod zeroshot;
+
+use crate::coordinator::Pipeline;
+use crate::model::{Params, LINEARS};
+use crate::quant::Ptq161Parts;
+use crate::tensor::Tensor;
+
+use anyhow::Result;
+
+/// How to run the model forward — dense fake-quant (paper's eval contract),
+/// the fused Pallas-kernel path (proves the packed representation), or the
+/// SmoothQuant W4A4 block (Table 13).
+pub enum ModelEval<'a> {
+    Dense(&'a Params),
+    Fused { params: &'a Params, parts: &'a [Vec<Ptq161Parts>] },
+    W4A4 { params: &'a Params, smooth: &'a [[Tensor; 4]] },
+}
+
+impl<'a> ModelEval<'a> {
+    pub fn params(&self) -> &Params {
+        match self {
+            ModelEval::Dense(p) => p,
+            ModelEval::Fused { params, .. } => params,
+            ModelEval::W4A4 { params, .. } => params,
+        }
+    }
+
+    /// Hidden states after all blocks for one (b_eval, t) token batch.
+    pub fn forward_h(&self, pipe: &Pipeline, tokens: &[i32]) -> Result<Tensor> {
+        let params = self.params();
+        let mut h = pipe.embed(params, tokens)?;
+        for l in 0..pipe.cfg.n_layers {
+            h = match self {
+                ModelEval::Dense(p) => pipe.block_fwd(&h, &p.block(l))?,
+                ModelEval::Fused { params, parts } => {
+                    let qp: Vec<[Tensor; 6]> = parts[l]
+                        .iter()
+                        .map(|p| {
+                            let out = p.alpha_s.len();
+                            let inn = p.alpha_r2.len();
+                            [
+                                p.w_sal.clone(),
+                                p.sign_ns.clone(),
+                                Tensor::from_vec(&[out], p.alpha_s.clone()),
+                                Tensor::from_vec(&[out], p.alpha_r1.clone()),
+                                Tensor::from_vec(&[inn], p.alpha_r2.clone()),
+                                Tensor::from_vec(&[out], p.mu.clone()),
+                            ]
+                        })
+                        .collect();
+                    let attn_norm = params.get(&format!("l{l}.attn_norm"));
+                    let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
+                    pipe.qblock_fwd(&h, attn_norm, mlp_norm, &qp)?
+                }
+                ModelEval::W4A4 { params, smooth } => {
+                    pipe.qblock_w4a4(&h, &params.block(l), &smooth[l])?
+                }
+            };
+        }
+        Ok(h)
+    }
+}
+
+/// Helper: PTQ1.61 parts for the fused path in LINEARS order sanity check.
+pub fn parts_shape_ok(parts: &[Vec<Ptq161Parts>], n_layers: usize) -> bool {
+    parts.len() == n_layers
+        && parts.iter().all(|l| l.len() == LINEARS.len())
+}

@@ -1,0 +1,39 @@
+//! Perplexity evaluation over the held-out corpus splits, matching the
+//! paper's protocol (windowed NLL over the test set, exp of mean).
+
+use anyhow::Result;
+
+use super::ModelEval;
+use crate::coordinator::Pipeline;
+use crate::data::Corpus;
+
+/// PPL over up to `max_batches` deterministic eval windows.
+pub fn perplexity(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    corpus: &Corpus,
+    max_batches: usize,
+) -> Result<f64> {
+    let batches =
+        corpus.eval_batches(pipe.cfg.b_eval, pipe.cfg.seq, max_batches);
+    assert!(!batches.is_empty(), "test split too small for eval window");
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for batch in &batches {
+        let h = model.forward_h(pipe, batch)?;
+        let (nll_sum, _) = pipe.head(model.params(), &h, batch)?;
+        nll += nll_sum as f64;
+        count += pipe.tokens_per_batch() as f64;
+    }
+    Ok((nll / count).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn ppl_formula_sanity() {
+        // uniform model over 256 symbols -> ppl == 256
+        let nll_per_token = (256f64).ln();
+        assert!(((nll_per_token).exp() - 256.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,113 @@
+//! Zero-shot task scoring: length-normalized choice log-probability, the
+//! lm-evaluation-harness convention the paper's Table 2 uses.
+
+use anyhow::Result;
+
+use super::ModelEval;
+use crate::coordinator::Pipeline;
+use crate::data::tasks::{Task, TaskKind};
+
+/// Log-softmax over one vocab slice (host side; vocab = 256).
+fn log_softmax_at(logits: &[f32], token: i32) -> f32 {
+    let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+    logits[token as usize] - lse
+}
+
+/// Mean log-prob of `choice` tokens following `prompt` in a scored batch.
+/// Sequences are right-padded to the pipeline window; scoring only reads
+/// positions inside the prompt+choice span.
+pub fn score_choices(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    prompt: &[i32],
+    choices: &[Vec<i32>],
+) -> Result<Vec<f32>> {
+    let (b, t, vocab) = (pipe.cfg.b_eval, pipe.cfg.seq, pipe.cfg.vocab);
+    let mut scores = Vec::with_capacity(choices.len());
+    for chunk in choices.chunks(b) {
+        let mut tokens = vec![0i32; b * t];
+        for (i, choice) in chunk.iter().enumerate() {
+            let mut seq = prompt.to_vec();
+            seq.extend_from_slice(choice);
+            seq.truncate(t);
+            tokens[i * t..i * t + seq.len()].copy_from_slice(&seq);
+        }
+        let h = model.forward_h(pipe, &tokens)?;
+        let (_, logits) = pipe.head(model.params(), &h, &tokens)?;
+        for (i, choice) in chunk.iter().enumerate() {
+            let start = prompt.len().min(t - 1);
+            let end = (prompt.len() + choice.len()).min(t);
+            let mut lp = 0.0f32;
+            let mut n = 0;
+            for pos in start..end {
+                // token at `pos` predicted from logits at `pos - 1`
+                let row =
+                    &logits.data[(i * t + pos - 1) * vocab..(i * t + pos) * vocab];
+                lp += log_softmax_at(row, tokens[i * t + pos]);
+                n += 1;
+            }
+            scores.push(lp / n.max(1) as f32);
+        }
+    }
+    Ok(scores)
+}
+
+/// Accuracy (%) of the model on a task set.
+pub fn accuracy(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    tasks: &[Task],
+) -> Result<f64> {
+    let mut correct = 0usize;
+    for task in tasks {
+        let scores = score_choices(pipe, model, &task.prompt, &task.choices)?;
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if best == task.answer {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / tasks.len().max(1) as f64)
+}
+
+/// Run a full suite: (kind, accuracy) rows.
+pub fn run_suite(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    kinds: &[TaskKind],
+    n_per_task: usize,
+    seed: u64,
+) -> Result<Vec<(TaskKind, f64)>> {
+    let mut rows = Vec::new();
+    for &kind in kinds {
+        let tasks = crate::data::tasks::generate(kind, n_per_task, seed);
+        rows.push((kind, accuracy(pipe, model, &tasks)?));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let logits: Vec<f32> = (0..256).map(|i| (i % 7) as f32 * 0.1).collect();
+        let total: f32 = (0..256)
+            .map(|t| log_softmax_at(&logits, t).exp())
+            .sum();
+        assert!((total - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn log_softmax_prefers_bigger_logit() {
+        let mut logits = vec![0.0f32; 256];
+        logits[42] = 5.0;
+        assert!(log_softmax_at(&logits, 42) > log_softmax_at(&logits, 41));
+    }
+}

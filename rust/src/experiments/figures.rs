@@ -1,0 +1,252 @@
+//! Figure regenerators (paper Figures 1, 3a, 4/10, 5/8, 6, 7 + Appendix A).
+//! Each prints the series and dumps a CSV under runs/ for plotting.
+
+use anyhow::Result;
+
+use super::ExperimentCtx;
+use crate::coordinator::blockopt::{ptq161_optimize, BlockOptCfg};
+use crate::coordinator::preprocess::row_concentration;
+use crate::data::tasks::TaskKind;
+use crate::eval::zeroshot::run_suite;
+use crate::eval::ModelEval;
+use crate::packing::bitwidth::{average_bits, BitScheme};
+use crate::report::{fmt_ppl, write_csv, Table};
+
+/// Figure 1: PPL vs effective bit-width scatter.
+pub fn f1_ppl_vs_bits(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let mut tbl = Table::new(
+        "Figure 1: PPL (wiki) vs effective bits",
+        &["Method", "Bits/weight", "PPL"],
+    );
+    let mut rows = Vec::new();
+    for (method, scheme) in [
+        ("gptq2", BitScheme::Uniform { bits: 2.0 }),
+        ("omniquant2", BitScheme::Uniform { bits: 2.0 }),
+        ("pbllm", BitScheme::PbLlm { salient_ratio: 0.1 }),
+        ("billm", BitScheme::BiLlm),
+        ("ptq161", BitScheme::Ptq161 { salient_ratio: 0.2 }),
+    ] {
+        let bits = average_bits(scheme, 4096, 4096);
+        let qm = ctx.quantized(&m, method, method == "ptq161")?;
+        let ppl = ctx.ppl(&m, &qm.params, &ctx.wiki.clone())?;
+        tbl.row(vec![
+            method.to_string(),
+            format!("{bits:.2}"),
+            fmt_ppl(ppl),
+        ]);
+        rows.push(format!("{method},{bits:.3},{ppl:.4}"));
+    }
+    tbl.print();
+    write_csv(&crate::runs_dir().join("f1.csv"), "method,bits,ppl", &rows)?;
+    Ok(())
+}
+
+/// Figure 3a: activation vs weight channel magnitudes (layer 0, wq input).
+pub fn f3_activation_stats(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let params = ctx.pretrained(&m)?;
+    let mc = ctx.calib(&m, false)?;
+    let c = mc.get(0, "wq");
+    let w = params.get("l0.wq");
+    let mut rows = Vec::new();
+    let mut act_sorted = c.act_abs_mean.clone();
+    act_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let wmag = w.col_abs_mean();
+    let mut w_sorted = wmag.clone();
+    w_sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    for j in 0..c.act_abs_mean.len() {
+        rows.push(format!(
+            "{j},{:.6},{:.6}",
+            act_sorted[j], w_sorted[j]
+        ));
+    }
+    let top20 = (act_sorted.len() as f64 * 0.2) as usize;
+    let hot: f32 = act_sorted[..top20].iter().sum::<f32>() / top20 as f32;
+    let wavg: f32 = wmag.iter().sum::<f32>() / wmag.len() as f32;
+    println!("\n== Figure 3a: channel magnitudes (l0.wq) ==");
+    println!("top-20% activation channel mean |x| = {hot:.4}");
+    println!("weight mean |w|                     = {wavg:.4}");
+    println!("ratio                               = {:.1}x", hot / wavg);
+    ctx.cache_calib(&m, false, mc);
+    write_csv(
+        &crate::runs_dir().join("f3a.csv"),
+        "rank,act_abs_mean,weight_abs_mean",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Figures 4/10: salient-weight row concentration before/after preprocess.
+pub fn f4_row_concentration(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let pre = ctx.pretrained(&m)?;
+    let post = ctx.preprocessed(&m)?;
+    let mut tbl = Table::new(
+        "Figure 4: salient-weight row concentration (top-20% rows share)",
+        &["Linear", "Pretrained", "Preprocessed"],
+    );
+    let mut rows = Vec::new();
+    let n_layers = ctx.pipeline(&m)?.cfg.n_layers;
+    for l in 0..n_layers {
+        for lin in ["wq", "w_gate"] {
+            let name = format!("l{l}.{lin}");
+            let a = row_concentration(pre.get(&name), 0.2, 0.2);
+            let b = row_concentration(post.get(&name), 0.2, 0.2);
+            tbl.row(vec![
+                name.clone(),
+                format!("{a:.3}"),
+                format!("{b:.3}"),
+            ]);
+            rows.push(format!("{name},{a:.4},{b:.4}"));
+        }
+    }
+    tbl.print();
+    write_csv(
+        &crate::runs_dir().join("f4.csv"),
+        "linear,pretrained,preprocessed",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Figures 5/8: preprocessing applied under the baselines.
+pub fn f5_preprocess_baselines(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let mut tbl = Table::new(
+        "Figure 5: baselines with/without preprocessing (PPL wiki)",
+        &["Method", "Pretrained", "Preprocessed"],
+    );
+    let mut rows = Vec::new();
+    for method in ["gptq2", "omniquant2", "pbllm", "billm"] {
+        let q0 = ctx.quantized(&m, method, false)?;
+        let q1 = ctx.quantized(&m, method, true)?;
+        let a = ctx.ppl(&m, &q0.params, &ctx.wiki.clone())?;
+        let b = ctx.ppl(&m, &q1.params, &ctx.wiki.clone())?;
+        tbl.row(vec![method.to_string(), fmt_ppl(a), fmt_ppl(b)]);
+        rows.push(format!("{method},{a:.4},{b:.4}"));
+    }
+    tbl.print();
+    write_csv(
+        &crate::runs_dir().join("f5.csv"),
+        "method,pretrained,preprocessed",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Figure 6: salient-ratio sweep with achieved bit-width.
+pub fn f6_ratio_sweep(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let params = ctx.pretrained(&m)?;
+    let mc = ctx.calib(&m, false)?;
+    let pipe = ctx.pipeline(&m)?;
+    let mut tbl = Table::new(
+        "Figure 6: salient ratio sweep",
+        &["Ratio", "Bits/weight", "PPL wiki"],
+    );
+    let mut rows = Vec::new();
+    for ratio in [0.0, 0.1, 0.2, 0.3] {
+        let (qm, _) = ptq161_optimize(
+            &pipe,
+            &params,
+            &mc,
+            &BlockOptCfg {
+                epochs: ctx.blockopt_epochs,
+                salient_ratio: ratio,
+                ..Default::default()
+            },
+        )?;
+        let bits =
+            average_bits(BitScheme::Ptq161 { salient_ratio: ratio }, 4096, 4096);
+        let ppl = ctx.ppl(&m, &qm.params, &ctx.wiki.clone())?;
+        tbl.row(vec![
+            format!("{:.0}%", ratio * 100.0),
+            format!("{bits:.2}"),
+            fmt_ppl(ppl),
+        ]);
+        rows.push(format!("{ratio},{bits:.3},{ppl:.4}"));
+    }
+    ctx.cache_calib(&m, false, mc);
+    tbl.print();
+    write_csv(&crate::runs_dir().join("f6.csv"), "ratio,bits,ppl", &rows)?;
+    Ok(())
+}
+
+/// Figure 7: zero-shot with vs without preprocessing (PTQ1.61).
+pub fn f7_zeroshot_preprocess(ctx: &mut ExperimentCtx) -> Result<()> {
+    let m = ctx.models[0].clone();
+    let kinds = [
+        TaskKind::Collocation,
+        TaskKind::VerbAgreement,
+        TaskKind::Cloze,
+        TaskKind::Retrieval,
+    ];
+    let mut header = vec!["Variant"];
+    header.extend(kinds.iter().map(|k| k.label()));
+    let mut tbl = Table::new("Figure 7: PTQ1.61 zero-shot, preprocessing", &header);
+    let mut rows = Vec::new();
+    let mut variants = Vec::new();
+    for (label, pre) in [("pretrained", false), ("preprocessed", true)] {
+        variants.push((label, ctx.quantized(&m, "ptq161", pre)?.params));
+    }
+    let n_tasks = ctx.tasks_per_suite;
+    let pipe = ctx.pipeline(&m)?;
+    for (label, params) in &variants {
+        let accs = run_suite(
+            &pipe,
+            &ModelEval::Dense(params),
+            &kinds,
+            n_tasks,
+            81,
+        )?;
+        let mut cells = vec![label.to_string()];
+        cells.extend(accs.iter().map(|(_, a)| format!("{a:.1}")));
+        tbl.row(cells);
+        rows.push(format!(
+            "{label},{}",
+            accs.iter()
+                .map(|(_, a)| format!("{a:.2}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+    }
+    tbl.print();
+    write_csv(
+        &crate::runs_dir().join("f7.csv"),
+        "variant,colloc,verb,cloze,retrieval",
+        &rows,
+    )?;
+    Ok(())
+}
+
+/// Appendix A: the closed-form bit accounting at real LLaMA size.
+pub fn app_a_bitwidth(_ctx: &mut ExperimentCtx) -> Result<()> {
+    let mut tbl = Table::new(
+        "Appendix A: average bits/weight, 4096x4096 layer",
+        &["Method", "Bits", "Paper"],
+    );
+    for (label, scheme, paper) in [
+        (
+            "PTQ1.61 (20% @ 4-bit)",
+            BitScheme::Ptq161 { salient_ratio: 0.2 },
+            "1.61",
+        ),
+        ("PB-LLM (10% @ 8-bit)", BitScheme::PbLlm { salient_ratio: 0.1 }, "2.7"),
+        ("BiLLM", BitScheme::BiLlm, "2.1"),
+        (
+            "PTQ1.61 @ 30% salient",
+            BitScheme::Ptq161 { salient_ratio: 0.3 },
+            "1.91",
+        ),
+    ] {
+        tbl.row(vec![
+            label.to_string(),
+            format!("{:.3}", average_bits(scheme, 4096, 4096)),
+            paper.to_string(),
+        ]);
+    }
+    tbl.print();
+    tbl.save_csv(&crate::runs_dir().join("appA.csv"))?;
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Experiment harness: one entry per table/figure of the paper (DESIGN.md
+//! section 5 maps each ID to its modules). `run(id, ...)` is what the CLI's
+//! `experiment` subcommand and the e2e example dispatch to.
+
+pub mod ctx;
+pub mod figures;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+pub use ctx::ExperimentCtx;
+
+pub const ALL_IDS: [&str; 17] = [
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11",
+    "t12", "t13", "f1", "f3", "f4", "f6",
+];
+// f5 == t6-style sweep over baselines and f7 reuse t2 machinery; they are
+// runnable individually as well:
+pub const EXTRA_IDS: [&str; 2] = ["f5", "f7"];
+
+pub fn run(ctx: &mut ExperimentCtx, id: &str) -> Result<()> {
+    match id {
+        "t1" => tables::t1_perplexity(ctx),
+        "t2" => tables::t2_reasoning(ctx),
+        "t3" => tables::t3_ablation(ctx),
+        "t4" => tables::t4_owq(ctx),
+        "t5" => tables::t5_mask_criterion(ctx),
+        "t6" => tables::t6_preprocess_gain(ctx),
+        "t7" => tables::t7_angular(ctx),
+        "t8" => tables::t8_resources(ctx),
+        "t9" => tables::t9_learnable_mean(ctx),
+        "t10" => tables::t10_hard_tasks(ctx),
+        "t11" => tables::t11_long_context(ctx),
+        "t12" => tables::t12_memory(ctx),
+        "t13" => tables::t13_w4a4(ctx),
+        "f1" => figures::f1_ppl_vs_bits(ctx),
+        "f3" => figures::f3_activation_stats(ctx),
+        "f4" => figures::f4_row_concentration(ctx),
+        "f5" => figures::f5_preprocess_baselines(ctx),
+        "f6" => figures::f6_ratio_sweep(ctx),
+        "f7" => figures::f7_zeroshot_preprocess(ctx),
+        "appA" => figures::app_a_bitwidth(ctx),
+        other => bail!("unknown experiment id '{other}'"),
+    }
+}

@@ -1,0 +1,46 @@
+//! PTQ1.61 — reproduction of "PTQ1.61: Push the Real Limit of Extremely
+//! Low-Bit Post-Training Quantization Methods for Large Language Models"
+//! (Zhao et al., ACL 2025) as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) owns everything at run time: pretraining the target
+//! models, calibration capture, the structured mask, GPTQ/AWQ/PB-LLM/BiLLM/
+//! OmniQuant/QuIP/RTN baselines, the block-wise scaling-factor optimizer,
+//! restorative-LoRA preprocessing, bit-exact packing, perplexity/zero-shot
+//! evaluation, serving, and the experiment harness regenerating every table
+//! and figure of the paper. Layers 2 (JAX) and 1 (Pallas) are build-time
+//! Python, AOT-lowered to HLO text and executed through `runtime::Runtime`.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod experiments;
+pub mod model;
+pub mod opt;
+pub mod packing;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Repo-standard artifact directory (overridable with PTQ161_ARTIFACTS).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PTQ161_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Repo-standard run directory for checkpoints/reports (created on demand).
+pub fn runs_dir() -> PathBuf {
+    let p = std::env::var("PTQ161_RUNS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("runs"));
+    std::fs::create_dir_all(&p).ok();
+    p
+}

@@ -1,0 +1,138 @@
+//! PTQ1.61 CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   pretrain    --model tiny --steps 400
+//!   preprocess  --model tiny --steps 120
+//!   quantize    --model tiny --method ptq161 [--preprocessed]
+//!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
+//!   serve       --model tiny --method ptq161 --requests 8
+//!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
+//!   all         run every experiment (EXPERIMENTS.md regeneration)
+
+use anyhow::Result;
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::experiments::{self, ExperimentCtx};
+use ptq161::serve::{generate_batch, GenRequest};
+use ptq161::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "pretrain" => {
+            let mut ctx = ctx_from(&args)?;
+            ctx.pretrain_steps = args.usize_opt("steps", ctx.pretrain_steps);
+            let model = args.str_opt("model", "tiny");
+            let p = ctx.pretrained(&model)?;
+            println!("pretrained {model}: {} params", p.total_params());
+        }
+        "preprocess" => {
+            let mut ctx = ctx_from(&args)?;
+            ctx.preprocess_steps = args.usize_opt("steps", ctx.preprocess_steps);
+            let model = args.str_opt("model", "tiny");
+            let p = ctx.preprocessed(&model)?;
+            println!("preprocessed {model}: {} params", p.total_params());
+        }
+        "quantize" | "eval" => {
+            let mut ctx = ctx_from(&args)?;
+            let model = args.str_opt("model", "tiny");
+            let method = args.str_opt("method", "ptq161");
+            let pre = args.flag("preprocessed") || method == "ptq161";
+            let qm = ctx.quantized(&model, &method, pre)?;
+            println!(
+                "quantized {model} with {} ({}): {:.3} bits/weight at 4096^2",
+                qm.method, qm.bits_label, qm.avg_bits
+            );
+            if sub == "eval" {
+                let wiki = ctx.ppl(&model, &qm.params, &ctx.wiki.clone())?;
+                let c4 = ctx.ppl(&model, &qm.params, &ctx.c4.clone())?;
+                println!("ppl wiki {wiki:.2}  c4 {c4:.2}");
+                if args.flag("fused") {
+                    let parts = qm.parts.as_ref().expect("fused path needs ptq161");
+                    let pipe = Pipeline::new(&ctx.rt, &model)?;
+                    let p = ptq161::eval::ppl::perplexity(
+                        &pipe,
+                        &ModelEval::Fused { params: &qm.params, parts },
+                        &ctx.wiki,
+                        ctx.ppl_batches,
+                    )?;
+                    println!("ppl wiki via fused Pallas-kernel path: {p:.2}");
+                }
+            }
+        }
+        "serve" => {
+            let mut ctx = ctx_from(&args)?;
+            let model = args.str_opt("model", "tiny");
+            let method = args.str_opt("method", "ptq161");
+            let n = args.usize_opt("requests", 8);
+            let qm = ctx.quantized(&model, &method, method == "ptq161")?;
+            let pipe = Pipeline::new(&ctx.rt, &model)?;
+            let mut batcher = ptq161::serve::batcher::Batcher::new(pipe.cfg.b_eval);
+            for i in 0..n {
+                batcher.submit(GenRequest {
+                    prompt: format!("the quiet river of alda {}", i % 3),
+                    max_new_tokens: 16,
+                });
+            }
+            let mut stats = ptq161::serve::ServeStats::default();
+            while let Some(batch) = batcher.next_batch() {
+                let reqs: Vec<GenRequest> =
+                    batch.iter().map(|(_, r)| r.clone()).collect();
+                let t0 = std::time::Instant::now();
+                let resps =
+                    generate_batch(&pipe, &ModelEval::Dense(&qm.params), &reqs)?;
+                let ms = t0.elapsed().as_secs_f64() * 1000.0;
+                for r in &resps {
+                    stats.requests += 1;
+                    stats.total_new_tokens += r.new_tokens;
+                    stats.per_request_ms.push(r.latency_ms);
+                    println!("-> {:?}", &r.text[..r.text.len().min(72)]);
+                }
+                stats.total_ms += ms;
+            }
+            println!(
+                "served {} reqs: {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms",
+                stats.requests,
+                stats.throughput_tok_s(),
+                stats.p50_ms(),
+                stats.p95_ms()
+            );
+        }
+        "experiment" | "all" => {
+            let mut ctx = ctx_from(&args)?;
+            let ids: Vec<String> = if sub == "all"
+                || args.positional.first().map(String::as_str) == Some("all")
+            {
+                let mut v: Vec<String> = experiments::ALL_IDS
+                    .iter()
+                    .map(|s| s.to_string())
+                    .collect();
+                v.extend(experiments::EXTRA_IDS.iter().map(|s| s.to_string()));
+                v.push("appA".into());
+                v
+            } else {
+                args.positional.clone()
+            };
+            for id in ids {
+                eprintln!("\n##### experiment {id} #####");
+                experiments::run(&mut ctx, &id)?;
+            }
+        }
+        _ => {
+            println!(
+                "usage: ptq161 <pretrain|preprocess|quantize|eval|serve|experiment|all> \
+                 [--model tiny|small] [--method NAME] [--quick] [--full] ..."
+            );
+        }
+    }
+    Ok(())
+}
+
+fn ctx_from(args: &Args) -> Result<ExperimentCtx> {
+    if args.flag("quick") {
+        ExperimentCtx::quick()
+    } else {
+        ExperimentCtx::new(args.flag("full"))
+    }
+}

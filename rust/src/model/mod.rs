@@ -1,0 +1,229 @@
+//! Model store: parameter container in the canonical manifest order, byte
+//! tokenizer, initialization, and an own binary save/load format (no
+//! safetensors offline).
+
+pub mod tokenizer;
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Block-linear names in canonical order (must match python model.LINEARS).
+pub const LINEARS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// Full model parameters in canonical (manifest) order with name lookup.
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub spec: Vec<(String, Vec<usize>)>,
+    pub tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
+}
+
+impl Params {
+    pub fn new(spec: Vec<(String, Vec<usize>)>, tensors: Vec<Tensor>) -> Params {
+        assert_eq!(spec.len(), tensors.len());
+        for ((n, s), t) in spec.iter().zip(&tensors) {
+            assert_eq!(s, &t.shape, "param {n} shape mismatch");
+        }
+        let index =
+            spec.iter().enumerate().map(|(i, (n, _))| (n.clone(), i)).collect();
+        Params { spec, tensors, index }
+    }
+
+    /// LLaMA-style init: norms at 1, matrices ~ N(0, 0.4/sqrt(fan_in)).
+    pub fn init(spec: &[(String, Vec<usize>)], seed: u64) -> Params {
+        let mut rng = Rng::new(seed);
+        let tensors = spec
+            .iter()
+            .map(|(_, shape)| {
+                if shape.len() == 1 {
+                    Tensor::ones(shape)
+                } else {
+                    let fan_in = *shape.last().unwrap() as f32;
+                    Tensor::randn(shape, 0.4 / fan_in.sqrt(), &mut rng)
+                }
+            })
+            .collect();
+        Params::new(spec.to_vec(), tensors)
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.index[name]]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        &mut self.tensors[self.index[name]]
+    }
+
+    pub fn try_get(&self, name: &str) -> Option<&Tensor> {
+        self.index.get(name).map(|&i| &self.tensors[i])
+    }
+
+    /// The 9 per-block tensors of layer `l` in block-artifact order
+    /// (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down).
+    pub fn block(&self, l: usize) -> Vec<&Tensor> {
+        let names = block_param_names(l);
+        names.iter().map(|n| self.get(n)).collect()
+    }
+
+    pub fn linear_name(l: usize, lin: &str) -> String {
+        format!("l{l}.{lin}")
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    // ---------------- binary save/load ----------------
+    // format: magic "PTQ1" | u32 count | per tensor:
+    //   u32 name_len | name | u32 ndim | u64 dims... | f32 data (LE)
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(b"PTQ1")?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for ((name, _), t) in self.spec.iter().zip(&self.tensors) {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data.as_ptr() as *const u8,
+                    t.data.len() * 4,
+                )
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Params> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != b"PTQ1" {
+            bail!("bad magic in {}", path.display());
+        }
+        let count = read_u32(&mut f)? as usize;
+        let mut spec = Vec::with_capacity(count);
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            let nlen = read_u32(&mut f)? as usize;
+            let mut nbuf = vec![0u8; nlen];
+            f.read_exact(&mut nbuf)?;
+            let name = String::from_utf8(nbuf)
+                .map_err(|_| anyhow!("bad name utf8"))?;
+            let ndim = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    data.as_mut_ptr() as *mut u8,
+                    n * 4,
+                )
+            };
+            f.read_exact(bytes)?;
+            spec.push((name, shape.clone()));
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        Ok(Params::new(spec, tensors))
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn block_param_names(l: usize) -> Vec<String> {
+    let mut v = vec![format!("l{l}.attn_norm")];
+    for n in ["wq", "wk", "wv", "wo"] {
+        v.push(format!("l{l}.{n}"));
+    }
+    v.push(format!("l{l}.mlp_norm"));
+    for n in ["w_gate", "w_up", "w_down"] {
+        v.push(format!("l{l}.{n}"));
+    }
+    v
+}
+
+pub fn linear_shape(cfg: &ModelConfig, lin: &str) -> (usize, usize) {
+    match lin {
+        "wq" | "wk" | "wv" | "wo" => (cfg.d, cfg.d),
+        "w_gate" | "w_up" => (cfg.ffn, cfg.d),
+        "w_down" => (cfg.d, cfg.ffn),
+        other => panic!("unknown linear {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_spec() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("embed".into(), vec![16, 8]),
+            ("l0.attn_norm".into(), vec![8]),
+            ("l0.wq".into(), vec![8, 8]),
+        ]
+    }
+
+    #[test]
+    fn init_norms_ones_weights_small() {
+        let p = Params::init(&demo_spec(), 1);
+        assert!(p.get("l0.attn_norm").data.iter().all(|&x| x == 1.0));
+        let w = p.get("l0.wq");
+        assert!(w.data.iter().any(|&x| x != 0.0));
+        assert!(w.data.iter().all(|&x| x.abs() < 1.0));
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let p = Params::init(&demo_spec(), 2);
+        let dir = std::env::temp_dir().join("ptq161_test_params.bin");
+        p.save(&dir).unwrap();
+        let q = Params::load(&dir).unwrap();
+        assert_eq!(p.spec, q.spec);
+        for (a, b) in p.tensors.iter().zip(&q.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn block_names_order_matches_python() {
+        let names = block_param_names(2);
+        assert_eq!(
+            names,
+            vec![
+                "l2.attn_norm", "l2.wq", "l2.wk", "l2.wv", "l2.wo",
+                "l2.mlp_norm", "l2.w_gate", "l2.w_up", "l2.w_down"
+            ]
+        );
+    }
+
+    #[test]
+    fn total_params_counts() {
+        let p = Params::init(&demo_spec(), 3);
+        assert_eq!(p.total_params(), 16 * 8 + 8 + 64);
+    }
+}

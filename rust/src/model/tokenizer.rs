@@ -1,0 +1,47 @@
+//! Byte-level tokenizer (vocab = 256): each UTF-8 byte is a token, exactly
+//! the id space the models are lowered with. Deliberately lossless and
+//! dependency-free — the synthetic corpus is ASCII so byte==char.
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> =
+            tokens.iter().map(|&t| (t.clamp(0, 255)) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_ascii() {
+        let tk = ByteTokenizer;
+        let s = "the quick brown fox 123.";
+        assert_eq!(tk.decode(&tk.encode(s)), s);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let tk = ByteTokenizer;
+        assert!(tk.encode("hello\n").iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn clamps_out_of_range_on_decode() {
+        let tk = ByteTokenizer;
+        // 999 clamps to byte 255 which is invalid UTF-8 alone -> U+FFFD
+        assert_eq!(tk.decode(&[104, 105, 999, -5]), "hi\u{fffd}\u{0}");
+    }
+}

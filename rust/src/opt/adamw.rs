@@ -1,0 +1,115 @@
+//! AdamW (Loshchilov & Hutter) over host tensors. The gradient itself comes
+//! from an AOT-lowered XLA executable; the optimizer state and update rule
+//! live here in the coordinator, one state slot per parameter tensor.
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct AdamW {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl AdamW {
+    /// Paper setting: zero weight decay; lr supplied per use (5e-4 / 1e-3).
+    pub fn new(lr: f32, n_params: usize) -> AdamW {
+        AdamW {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            step: 0,
+            m: vec![Vec::new(); n_params],
+            v: vec![Vec::new(); n_params],
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    /// One update over parallel slices of params and grads.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len(), "optimizer sized differently");
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            assert_eq!(p.shape, g.shape, "param/grad {i} shape mismatch");
+            if self.m[i].is_empty() {
+                self.m[i] = vec![0.0; p.data.len()];
+                self.v[i] = vec![0.0; p.data.len()];
+            }
+            let (m, v) = (&mut self.m[i], &mut self.v[i]);
+            for j in 0..p.data.len() {
+                let gj = g.data[j];
+                m[j] = self.beta1 * m[j] + (1.0 - self.beta1) * gj;
+                v[j] = self.beta2 * v[j] + (1.0 - self.beta2) * gj * gj;
+                let mhat = m[j] / bc1;
+                let vhat = v[j] / bc2;
+                p.data[j] -= self.lr
+                    * (mhat / (vhat.sqrt() + self.eps)
+                        + self.weight_decay * p.data[j]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_matches_hand_computation() {
+        // With m=v=0 and bias correction, the first step is lr * sign(g)
+        // (up to eps): mhat = g, vhat = g^2, update = lr * g/|g|.
+        let mut opt = AdamW::new(0.1, 1);
+        let mut p = vec![Tensor::from_vec(&[2], vec![1.0, -2.0])];
+        let g = vec![Tensor::from_vec(&[2], vec![0.5, -0.25])];
+        opt.step(&mut p, &g);
+        assert!((p[0].data[0] - (1.0 - 0.1)).abs() < 1e-4);
+        assert!((p[0].data[1] - (-2.0 + 0.1)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f(x) = (x - 3)^2, grad = 2(x-3)
+        let mut opt = AdamW::new(0.05, 1);
+        let mut p = vec![Tensor::from_vec(&[1], vec![0.0])];
+        for _ in 0..500 {
+            let g = vec![Tensor::from_vec(&[1], vec![2.0 * (p[0].data[0] - 3.0)])];
+            opt.step(&mut p, &g);
+        }
+        assert!((p[0].data[0] - 3.0).abs() < 0.05, "x={}", p[0].data[0]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks() {
+        let mut opt = AdamW::new(0.01, 1);
+        opt.weight_decay = 0.1;
+        let mut p = vec![Tensor::from_vec(&[1], vec![5.0])];
+        let g = vec![Tensor::from_vec(&[1], vec![0.0])];
+        for _ in 0..10 {
+            opt.step(&mut p, &g);
+        }
+        assert!(p[0].data[0] < 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_checked() {
+        let mut opt = AdamW::new(0.01, 1);
+        let mut p = vec![Tensor::zeros(&[2])];
+        let g = vec![Tensor::zeros(&[3])];
+        opt.step(&mut p, &g);
+    }
+}

@@ -1,0 +1,6 @@
+//! Optimizers. The paper uses AdamW for the learnable scaling factors; the
+//! same implementation drives pretraining and restorative-LoRA training.
+
+pub mod adamw;
+
+pub use adamw::AdamW;

@@ -1,0 +1,133 @@
+//! 1-bit packing: sign matrices and channel bitmaps as u64 words.
+//! This is the container a real sub-2-bit deployment ships; the fake-quant
+//! eval path round-trips through it in tests to prove the dense and packed
+//! representations agree bit-for-bit.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BitVec {
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+impl BitVec {
+    pub fn zeros(len: usize) -> BitVec {
+        BitVec { len, words: vec![0; len.div_ceil(64)] }
+    }
+
+    pub fn from_bools(bits: &[bool]) -> BitVec {
+        let mut v = BitVec::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Pack the sign pattern of a float slice (>= 0 -> 1).
+    pub fn from_signs(xs: &[f32]) -> BitVec {
+        let mut v = BitVec::zeros(xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            if x >= 0.0 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, b: bool) {
+        debug_assert!(i < self.len);
+        let (w, o) = (i / 64, i % 64);
+        if b {
+            self.words[w] |= 1 << o;
+        } else {
+            self.words[w] &= !(1 << o);
+        }
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Unpack to +-1.0 floats (sign reconstruction).
+    pub fn to_signs(&self) -> Vec<f32> {
+        (0..self.len)
+            .map(|i| if self.get(i) { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Storage in bits (what the accounting layer charges).
+    pub fn storage_bits(&self) -> usize {
+        self.len
+    }
+
+    pub fn storage_bytes_padded(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn set_get_round_trip() {
+        let mut v = BitVec::zeros(130);
+        v.set(0, true);
+        v.set(64, true);
+        v.set(129, true);
+        assert!(v.get(0) && v.get(64) && v.get(129));
+        assert!(!v.get(1) && !v.get(63) && !v.get(128));
+        assert_eq!(v.count_ones(), 3);
+    }
+
+    #[test]
+    fn signs_round_trip_property() {
+        check(
+            "bitpack-sign-roundtrip",
+            60,
+            |r: &mut Rng| {
+                let n = r.below(300) + 1;
+                (0..n).map(|_| r.normal()).collect::<Vec<f32>>()
+            },
+            |xs| {
+                let v = BitVec::from_signs(xs);
+                let back = v.to_signs();
+                for (x, s) in xs.iter().zip(&back) {
+                    let want = if *x >= 0.0 { 1.0 } else { -1.0 };
+                    if *s != want {
+                        return Err(format!("{x} -> {s}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bools_round_trip() {
+        let bits: Vec<bool> =
+            (0..97).map(|i| i % 3 == 0 || i % 7 == 0).collect();
+        assert_eq!(BitVec::from_bools(&bits).to_bools(), bits);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let v = BitVec::zeros(4096);
+        assert_eq!(v.storage_bits(), 4096);
+        assert_eq!(v.storage_bytes_padded(), 4096 / 8);
+    }
+}

@@ -1,0 +1,131 @@
+//! Appendix-A average bit-width calculator.
+//!
+//! Paper Eq. 8: b = 1*r_b + b_salient*(1-r_b) + b_index + b_additional,
+//! reproduced with the paper's own accounting conventions so the closed
+//! forms land on the published numbers for a 4096x4096 layer:
+//! PTQ1.61 -> 1.61, PB-LLM -> 2.7, BiLLM -> 2.1.
+
+/// Quantization scheme for storage accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BitScheme {
+    /// PTQ1.61: salient input channels at 4-bit (ratio), rest binarized,
+    /// 1-bit-per-channel structured mask, 3 fp16 scaling-factor vectors +
+    /// fp16 zero/scale pairs on salient columns.
+    Ptq161 { salient_ratio: f64 },
+    /// PB-LLM: unstructured element mask (1 bit/weight), salient at 8-bit.
+    PbLlm { salient_ratio: f64 },
+    /// BiLLM: weight bits 1.0, additional 0.1, unstructured mask 1.0
+    /// (the paper's own accounting of their scheme).
+    BiLlm,
+    /// Uniform b-bit RTN/GPTQ/AWQ/... with per-row fp16 scale+zero.
+    Uniform { bits: f64 },
+    /// OWQ: 2-bit + ratio of columns kept in fp16.
+    Owq { fp16_ratio: f64 },
+}
+
+/// Average bits per weight for an (out=n, in=m) linear layer.
+pub fn average_bits(scheme: BitScheme, n: usize, m: usize) -> f64 {
+    let n = n as f64;
+    let m = m as f64;
+    let weights = n * m;
+    match scheme {
+        BitScheme::Ptq161 { salient_ratio: r } => {
+            // weight payload: (1-r) binarized + r at 4-bit
+            let weight_bits = (1.0 - r) * 1.0 + r * 4.0;
+            let total_weight_bits = weights * weight_bits;
+            // one-dimensional mask: 1 bit per input channel
+            let b_index = m / total_weight_bits;
+            // 3 fp16 scaling-factor vectors (alpha_s, alpha_r1 over rows,
+            // alpha_r2 over cols ~ paper counts 3 x 4096) + fp16 quant
+            // params on the salient columns
+            let b_additional =
+                (3.0 * n * 16.0 + r * m * 16.0) / total_weight_bits;
+            weight_bits + b_index + b_additional
+        }
+        BitScheme::PbLlm { salient_ratio: r } => {
+            // Appendix A: b = 0.1*8 + 0.9*1 + 1 (element mask)
+            r * 8.0 + (1.0 - r) * 1.0 + 1.0
+        }
+        BitScheme::BiLlm => 1.0 + 0.1 + 1.0,
+        BitScheme::Uniform { bits } => {
+            // per-row fp16 scale + zero-point
+            bits + (2.0 * n * 16.0) / weights
+        }
+        BitScheme::Owq { fp16_ratio: r } => {
+            (1.0 - r) * 2.0 + r * 16.0 + (2.0 * n * 16.0) / weights
+        }
+    }
+}
+
+/// Exact packed storage in bits for a PTQ1.61 layer (what the containers in
+/// this module actually occupy) — used by the Table 12 memory model.
+pub fn ptq161_packed_bits(n: usize, m: usize, n_salient: usize) -> u64 {
+    let n = n as u64;
+    let m = m as u64;
+    let sal = n_salient as u64;
+    let binarized = (m - sal) * n; // sign bits
+    let salient = sal * n * 4; // nibbles
+    let mask = m; // channel bitmap
+    let scaling = 3 * n * 16; // alpha_s, alpha_r1 (n) + alpha_r2 counted as n-ish vector (paper convention)
+    let salient_params = sal * 2 * 16; // per-column scale+min fp16
+    binarized + salient + mask + scaling + salient_params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const N: usize = 4096;
+
+    #[test]
+    fn ptq161_matches_paper_appendix_a() {
+        let b = average_bits(BitScheme::Ptq161 { salient_ratio: 0.2 }, N, N);
+        // paper: 1.6 + 0.0002 + 0.008 ~= 1.61
+        assert!((b - 1.61).abs() < 0.005, "b = {b}");
+    }
+
+    #[test]
+    fn pbllm_matches_paper() {
+        let b = average_bits(BitScheme::PbLlm { salient_ratio: 0.1 }, N, N);
+        assert!((b - 2.7).abs() < 1e-9, "b = {b}");
+    }
+
+    #[test]
+    fn billm_matches_paper() {
+        assert!((average_bits(BitScheme::BiLlm, N, N) - 2.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mask_overhead_is_negligible() {
+        // the structured mask itself: m bits over n*m*1.6 weight bits
+        let with = average_bits(BitScheme::Ptq161 { salient_ratio: 0.2 }, N, N);
+        let weight_only = 0.8 + 0.2 * 4.0;
+        let overhead = with - weight_only;
+        assert!(overhead < 0.01, "overhead = {overhead}");
+        // and the index term alone is ~0.0002
+        let b_index = N as f64 / (N as f64 * N as f64 * 1.6);
+        assert!((b_index - 0.00015).abs() < 0.0001);
+    }
+
+    #[test]
+    fn salient_ratio_30_exceeds_190() {
+        // Fig. 6 rationale: 30% salient pushes avg bits to ~1.9 — the paper
+        // rejects it to stay sub-2-bit.
+        let b = average_bits(BitScheme::Ptq161 { salient_ratio: 0.3 }, N, N);
+        assert!(b > 1.89 && b < 2.0, "b = {b}");
+    }
+
+    #[test]
+    fn uniform_2bit_close_to_2() {
+        let b = average_bits(BitScheme::Uniform { bits: 2.0 }, N, N);
+        assert!(b > 2.0 && b < 2.01);
+    }
+
+    #[test]
+    fn packed_bits_consistent_with_average() {
+        let bits = ptq161_packed_bits(N, N, N / 5) as f64;
+        let avg = bits / (N * N) as f64;
+        let formula = average_bits(BitScheme::Ptq161 { salient_ratio: 0.2 }, N, N);
+        assert!((avg - formula).abs() < 0.02, "{avg} vs {formula}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Table 12 inference-memory model: packed size of quantized LLaMA-family
+//! checkpoints under PB-LLM / BiLLM / PTQ1.61 accounting, computed from the
+//! real layer shapes (this is an analytic experiment — exact, no GPU).
+
+use super::bitwidth::{average_bits, BitScheme};
+
+/// (hidden, ffn, layers) for real LLaMA models.
+#[derive(Debug, Clone, Copy)]
+pub struct LlamaShape {
+    pub hidden: usize,
+    pub ffn: usize,
+    pub layers: usize,
+}
+
+pub const LLAMA_7B: LlamaShape =
+    LlamaShape { hidden: 4096, ffn: 11008, layers: 32 };
+pub const LLAMA_13B: LlamaShape =
+    LlamaShape { hidden: 5120, ffn: 13824, layers: 40 };
+
+/// Quantized linear-weight bits of one transformer block.
+fn block_bits(shape: LlamaShape, scheme: BitScheme) -> f64 {
+    let d = shape.hidden;
+    let f = shape.ffn;
+    // q, k, v, o: (d, d); gate, up: (f, d); down: (d, f)
+    let linears: [(usize, usize); 7] =
+        [(d, d), (d, d), (d, d), (d, d), (f, d), (f, d), (d, f)];
+    linears
+        .iter()
+        .map(|&(n, m)| average_bits(scheme, n, m) * (n as f64) * (m as f64))
+        .sum()
+}
+
+/// Total packed model size in GiB. Block linears quantized per `scheme`;
+/// embedding + head counted at 4-bit (the paper's Table 12 numbers are
+/// only reproducible with compressed embeddings — fp16 embeddings alone
+/// exceed the gap between its methods).
+pub fn model_gib(shape: LlamaShape, scheme: BitScheme, vocab: usize) -> f64 {
+    let quantized_bits = block_bits(shape, scheme) * shape.layers as f64;
+    let embed_bits = 2.0 * (vocab * shape.hidden) as f64 * 4.0;
+    let norm_bits =
+        ((2 * shape.layers + 1) * shape.hidden) as f64 * 16.0;
+    (quantized_bits + embed_bits + norm_bits) / 8.0 / (1u64 << 30) as f64
+}
+
+pub fn table12_row(scheme: BitScheme) -> (f64, f64) {
+    (
+        model_gib(LLAMA_7B, scheme, 32000),
+        model_gib(LLAMA_13B, scheme, 32000),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ptq161_7b_matches_paper_table12() {
+        // paper: 1.41 GB for LLaMA-7B, 2.68 GB for 13B (±10%: the paper
+        // does not spell out its embedding/zero-point accounting)
+        let (gb7, gb13) =
+            table12_row(BitScheme::Ptq161 { salient_ratio: 0.2 });
+        assert!((gb7 - 1.41).abs() < 0.15, "7B: {gb7}");
+        assert!((gb13 - 2.68).abs() < 0.27, "13B: {gb13}");
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        let ptq = table12_row(BitScheme::Ptq161 { salient_ratio: 0.2 }).0;
+        let billm = table12_row(BitScheme::BiLlm).0;
+        let pbllm = table12_row(BitScheme::PbLlm { salient_ratio: 0.1 }).0;
+        assert!(ptq < billm && billm < pbllm, "{ptq} {billm} {pbllm}");
+    }
+
+    #[test]
+    fn pbllm_7b_magnitude() {
+        let (gb7, _) = table12_row(BitScheme::PbLlm { salient_ratio: 0.1 });
+        assert!((gb7 - 2.36).abs() < 0.25, "7B: {gb7}");
+    }
+}

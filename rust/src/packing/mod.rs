@@ -1,0 +1,17 @@
+//! Bit-exact packing + storage accounting.
+//!
+//! The paper evaluates by fake quantization (its §Limitation) but its
+//! *claims* are about storage: 1.61 effective bits/weight vs PB-LLM's 2.7
+//! and BiLLM's 2.1 (Appendix A), and the Table 12 inference-memory model.
+//! This module makes those claims bit-exact: real packed containers for
+//! sign bits / 4-bit nibbles / channel bitmaps, plus the Appendix-A
+//! calculator and the Table-12 memory model over real LLaMA shapes.
+
+pub mod bitpack;
+pub mod bitwidth;
+pub mod memory;
+pub mod nibble;
+
+pub use bitpack::BitVec;
+pub use bitwidth::{average_bits, BitScheme};
+pub use nibble::NibbleVec;

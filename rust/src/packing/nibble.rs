@@ -1,0 +1,122 @@
+//! 4-bit (nibble) packing for the salient-channel weights: two INT4 codes
+//! per byte. The paper stresses (Appendix B.2) that keeping *all* stored
+//! weights in INT formats — unlike OWQ's FP16 outliers — is what makes a
+//! real kernel practical; this container is that format.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct NibbleVec {
+    pub len: usize,
+    bytes: Vec<u8>,
+}
+
+impl NibbleVec {
+    pub fn zeros(len: usize) -> NibbleVec {
+        NibbleVec { len, bytes: vec![0; len.div_ceil(2)] }
+    }
+
+    pub fn from_codes(codes: &[u8]) -> NibbleVec {
+        let mut v = NibbleVec::zeros(codes.len());
+        for (i, &c) in codes.iter().enumerate() {
+            v.set(i, c);
+        }
+        v
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        debug_assert!(i < self.len);
+        let b = self.bytes[i / 2];
+        if i % 2 == 0 {
+            b & 0x0f
+        } else {
+            b >> 4
+        }
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, code: u8) {
+        debug_assert!(i < self.len);
+        debug_assert!(code <= 0x0f, "nibble overflow: {code}");
+        let slot = &mut self.bytes[i / 2];
+        if i % 2 == 0 {
+            *slot = (*slot & 0xf0) | code;
+        } else {
+            *slot = (*slot & 0x0f) | (code << 4);
+        }
+    }
+
+    pub fn to_codes(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    pub fn storage_bits(&self) -> usize {
+        self.len * 4
+    }
+}
+
+/// Quantize a float column to 4-bit codes with (scale, min) and back.
+/// Matches kernels/ref.py quant4_ref per-column parameters exactly.
+pub fn quantize_column(xs: &[f32]) -> (Vec<u8>, f32, f32) {
+    let mn = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+    let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let scale = ((mx - mn) / 15.0).max(1e-8);
+    let codes = xs
+        .iter()
+        .map(|&x| (((x - mn) / scale).round().clamp(0.0, 15.0)) as u8)
+        .collect();
+    (codes, scale, mn)
+}
+
+pub fn dequantize_column(codes: &[u8], scale: f32, mn: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale + mn).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn codes_round_trip() {
+        let codes: Vec<u8> = (0..33).map(|i| (i % 16) as u8).collect();
+        assert_eq!(NibbleVec::from_codes(&codes).to_codes(), codes);
+    }
+
+    #[test]
+    fn quantize_error_bounded_property() {
+        check(
+            "nibble-quant-error-bound",
+            60,
+            |r: &mut Rng| {
+                let n = r.below(120) + 2;
+                (0..n).map(|_| r.normal() * 3.0).collect::<Vec<f32>>()
+            },
+            |xs| {
+                let (codes, scale, mn) = quantize_column(xs);
+                let back = dequantize_column(&codes, scale, mn);
+                for (x, y) in xs.iter().zip(&back) {
+                    if (x - y).abs() > scale / 2.0 + 1e-5 {
+                        return Err(format!("err {} > scale/2 {}", x - y, scale));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn packed_and_dense_dequant_agree() {
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.1).collect();
+        let (codes, scale, mn) = quantize_column(&xs);
+        let packed = NibbleVec::from_codes(&codes);
+        let via_packed = dequantize_column(&packed.to_codes(), scale, mn);
+        let direct = dequantize_column(&codes, scale, mn);
+        assert_eq!(via_packed, direct);
+    }
+
+    #[test]
+    fn storage_bits() {
+        assert_eq!(NibbleVec::zeros(100).storage_bits(), 400);
+    }
+}

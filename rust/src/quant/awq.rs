@@ -1,0 +1,128 @@
+//! AWQ (Lin et al., 2023): activation-aware weight scaling. Per-channel
+//! scales s_j = act_mean_j^α migrate quantization difficulty away from
+//! channels with large activations; α is grid-searched to minimize the
+//! calibration-weighted output error of the RTN-quantized scaled weight.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::quant::rtn::rtn_dense;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Awq {
+    pub bits: u32,
+    pub grid: usize,
+}
+
+impl Awq {
+    pub fn new(bits: u32) -> Awq {
+        Awq { bits, grid: 20 }
+    }
+
+    fn scaled_error(&self, w: &Tensor, calib: &LinearCalib, alpha: f32) -> (f32, Tensor) {
+        let m = w.cols();
+        let mean: f32 = calib.act_abs_mean.iter().sum::<f32>() / m as f32;
+        let s: Vec<f32> = calib
+            .act_abs_mean
+            .iter()
+            .map(|&a| ((a / mean.max(1e-8)).max(1e-4)).powf(alpha))
+            .collect();
+        // quantize w * s, then fold s back out
+        let mut ws = w.clone();
+        for i in 0..ws.rows() {
+            for (j, x) in ws.row_mut(i).iter_mut().enumerate() {
+                *x *= s[j];
+            }
+        }
+        let mut deq = rtn_dense(&ws, self.bits, 1.0);
+        for i in 0..deq.rows() {
+            for (j, x) in deq.row_mut(i).iter_mut().enumerate() {
+                *x /= s[j];
+            }
+        }
+        // activation-weighted output error proxy:
+        // sum_j E[x_j^2] * ||w_j - dq_j||^2
+        let mut err = 0.0f32;
+        for i in 0..w.rows() {
+            for (j, (&a, &b)) in w.row(i).iter().zip(deq.row(i)).enumerate() {
+                let d = a - b;
+                err += calib.act_sq_mean[j] * d * d;
+            }
+        }
+        (err, deq)
+    }
+}
+
+impl Quantizer for Awq {
+    fn name(&self) -> &'static str {
+        "AWQ"
+    }
+
+    fn bits_label(&self) -> String {
+        format!("{}", self.bits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let mut best: Option<(f32, Tensor)> = None;
+        for g in 0..=self.grid {
+            let alpha = g as f32 / self.grid as f32; // 0.0 ..= 1.0
+            let (err, deq) = self.scaled_error(w, calib, alpha);
+            if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+                best = Some((err, deq));
+            }
+        }
+        QuantizedLinear {
+            deq: best.unwrap().1,
+            scheme: BitScheme::Uniform { bits: self.bits as f64 },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::{demo, output_mse};
+    use crate::quant::rtn::Rtn;
+    use crate::quant::Quantizer;
+
+    #[test]
+    fn awq_beats_plain_rtn_under_hot_channels() {
+        let (w, calib) = demo(48, 64, 7);
+        let a = Awq::new(2).quantize_linear(&w, &calib);
+        let r = Rtn::new(2).quantize_linear(&w, &calib);
+        // compare on the *activation-weighted* metric AWQ optimizes
+        let werr = |deq: &crate::tensor::Tensor| -> f32 {
+            let mut e = 0.0;
+            for i in 0..w.rows() {
+                for (j, (&x, &y)) in
+                    w.row(i).iter().zip(deq.row(i)).enumerate()
+                {
+                    let d = x - y;
+                    e += calib.act_sq_mean[j] * d * d;
+                }
+            }
+            e
+        };
+        assert!(werr(&a.deq) < werr(&r.deq));
+    }
+
+    #[test]
+    fn awq4_much_better_than_awq2() {
+        let (w, calib) = demo(32, 48, 8);
+        let a4 = Awq::new(4).quantize_linear(&w, &calib);
+        let a2 = Awq::new(2).quantize_linear(&w, &calib);
+        let e4 = output_mse(&w, &a4.deq, 4);
+        let e2 = output_mse(&w, &a2.deq, 4);
+        assert!(e4 < e2 / 10.0, "4-bit {e4} vs 2-bit {e2}");
+    }
+
+    #[test]
+    fn alpha_zero_is_plain_rtn() {
+        let (w, calib) = demo(16, 24, 9);
+        let awq = Awq::new(2);
+        let (_, deq0) = awq.scaled_error(&w, &calib, 0.0);
+        let plain = crate::quant::rtn::rtn_dense(&w, 2, 1.0);
+        assert!(deq0.mse(&plain) < 1e-10);
+    }
+}

@@ -1,0 +1,192 @@
+//! BiLLM (Huang et al., 2024): Hessian-guided salient binarization.
+//!
+//! Salient weights (top by s_ij = h_jj * w_ij^2) get *residual* (order-2)
+//! binarization: w ≈ a1 sign(w) + a2 sign(w - a1 sign(w)). Non-salient
+//! weights are split per-row into a "concentrated" and a "sparse" magnitude
+//! group (optimal |w| threshold by split search), each with its own alpha —
+//! the paper's finer-grained multi-group scheme whose unstructured masks
+//! cost it an effective 2.1 bits.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BiLlm {
+    pub salient_ratio: f64,
+    /// candidate split percentiles for the non-salient bell split
+    pub split_grid: usize,
+}
+
+impl Default for BiLlm {
+    fn default() -> Self {
+        BiLlm { salient_ratio: 0.1, split_grid: 8 }
+    }
+}
+
+/// order-2 residual binarization of a value set: returns (a1, a2)
+fn residual_alphas(vals: &[f32]) -> (f32, f32) {
+    if vals.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = vals.len() as f32;
+    let a1 = vals.iter().map(|x| x.abs()).sum::<f32>() / n;
+    let a2 = vals.iter().map(|x| (x.abs() - a1).abs()).sum::<f32>() / n;
+    (a1, a2)
+}
+
+fn residual_deq(x: f32, a1: f32, a2: f32) -> f32 {
+    let s1 = if x >= 0.0 { a1 } else { -a1 };
+    let r = x - s1;
+    let s2 = if r >= 0.0 { a2 } else { -a2 };
+    s1 + s2
+}
+
+impl Quantizer for BiLlm {
+    fn name(&self) -> &'static str {
+        "BiLLM"
+    }
+
+    fn bits_label(&self) -> String {
+        "1(+1.1)".into()
+    }
+
+    fn needs_hessian(&self) -> bool {
+        true
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let (n, m) = (w.rows(), w.cols());
+        let hdiag: Vec<f32> = match &calib.hessian {
+            Some(h) => (0..m).map(|j| h.at2(j, j)).collect(),
+            None => calib.act_sq_mean.clone(),
+        };
+        // element sensitivity h_jj * w^2, global top-k salient
+        let total = n * m;
+        let k = ((total as f64) * self.salient_ratio).round() as usize;
+        let mut idx: Vec<usize> = (0..total).collect();
+        idx.sort_by(|&a, &b| {
+            let sa = hdiag[a % m] * w.data[a] * w.data[a];
+            let sb = hdiag[b % m] * w.data[b] * w.data[b];
+            sb.partial_cmp(&sa).unwrap()
+        });
+        let mut salient = vec![false; total];
+        for &i in &idx[..k] {
+            salient[i] = true;
+        }
+        let mut deq = Tensor::zeros(&[n, m]);
+        for r in 0..n {
+            let row = w.row(r);
+            // salient entries: residual binarization
+            let sal: Vec<f32> = (0..m)
+                .filter(|&c| salient[r * m + c])
+                .map(|c| row[c])
+                .collect();
+            let (a1, a2) = residual_alphas(&sal);
+            // non-salient: bell split by |w| threshold, two alphas; pick
+            // the split minimizing row reconstruction error
+            let ns: Vec<f32> = (0..m)
+                .filter(|&c| !salient[r * m + c])
+                .map(|c| row[c])
+                .collect();
+            let mut mags: Vec<f32> = ns.iter().map(|x| x.abs()).collect();
+            mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let mut best = (f32::INFINITY, 0.0f32, 0.0f32, 0.0f32);
+            for g in 1..self.split_grid {
+                let t = if mags.is_empty() {
+                    0.0
+                } else {
+                    mags[(mags.len() - 1) * g / self.split_grid]
+                };
+                let (lo, hi): (Vec<f32>, Vec<f32>) =
+                    ns.iter().partition(|x| x.abs() <= t);
+                let alo = if lo.is_empty() {
+                    0.0
+                } else {
+                    lo.iter().map(|x| x.abs()).sum::<f32>() / lo.len() as f32
+                };
+                let ahi = if hi.is_empty() {
+                    0.0
+                } else {
+                    hi.iter().map(|x| x.abs()).sum::<f32>() / hi.len() as f32
+                };
+                let err: f32 = ns
+                    .iter()
+                    .map(|&x| {
+                        let a = if x.abs() <= t { alo } else { ahi };
+                        let s = if x >= 0.0 { a } else { -a };
+                        (x - s) * (x - s)
+                    })
+                    .sum();
+                if err < best.0 {
+                    best = (err, t, alo, ahi);
+                }
+            }
+            let (_, t, alo, ahi) = best;
+            for c in 0..m {
+                let x = row[c];
+                deq.data[r * m + c] = if salient[r * m + c] {
+                    residual_deq(x, a1, a2)
+                } else {
+                    let a = if x.abs() <= t { alo } else { ahi };
+                    if x >= 0.0 {
+                        a
+                    } else {
+                        -a
+                    }
+                };
+            }
+        }
+        QuantizedLinear { deq, scheme: BitScheme::BiLlm, parts: None }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binarize::PlainBinarize;
+    use crate::quant::pbllm::PbLlm;
+    use crate::quant::testutil::{demo, output_mse};
+
+    #[test]
+    fn residual_binarization_reduces_error() {
+        let vals = vec![0.5f32, -1.5, 2.0, -0.2, 0.9];
+        let (a1, a2) = residual_alphas(&vals);
+        let e1: f32 = vals
+            .iter()
+            .map(|&x| {
+                let s = if x >= 0.0 { a1 } else { -a1 };
+                (x - s) * (x - s)
+            })
+            .sum();
+        let e2: f32 =
+            vals.iter().map(|&x| (x - residual_deq(x, a1, a2)).powi(2)).sum();
+        assert!(e2 <= e1);
+    }
+
+    #[test]
+    fn billm_beats_plain_binarization() {
+        let (w, calib) = demo(32, 48, 12);
+        let b = BiLlm::default().quantize_linear(&w, &calib);
+        let p = PlainBinarize.quantize_linear(&w, &calib);
+        assert!(output_mse(&w, &b.deq, 6) < output_mse(&w, &p.deq, 6));
+    }
+
+    #[test]
+    fn billm_weight_mse_beats_pbllm_weight_payload() {
+        // BiLLM's multi-group binarization should beat PB-LLM's plain
+        // binarized 90% on pure weight reconstruction of that portion;
+        // end-to-end we just check both are sane and BiLLM is competitive.
+        let (w, calib) = demo(24, 40, 13);
+        let b = BiLlm::default().quantize_linear(&w, &calib);
+        let p = PbLlm::new(0.1).quantize_linear(&w, &calib);
+        let rb = b.deq.mse(&w);
+        let rp = p.deq.mse(&w);
+        assert!(rb < rp * 1.5, "billm {rb} vs pbllm {rp}");
+    }
+
+    #[test]
+    fn bits_label_matches_paper() {
+        assert_eq!(BiLlm::default().bits_label(), "1(+1.1)");
+    }
+}

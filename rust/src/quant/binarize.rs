@@ -1,0 +1,124 @@
+//! Binarization primitives (paper Eq. 2): sign() with the analytic
+//! XNOR-Net row scaling factor alpha = |w|_1 / n, with or without a
+//! salient-column mask. The "no improvements" ablation row of Table 3 is
+//! `PlainBinarize`.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::Tensor;
+
+/// Row-wise analytic binarization restricted to non-salient columns.
+/// Returns (sign_ns, alpha) with sign zeroed on salient columns — matches
+/// kernels/ref.py binarize_rowwise_ref.
+pub fn binarize_rowwise(w: &Tensor, mask: &[bool]) -> (Tensor, Vec<f32>) {
+    let (n, m) = (w.rows(), w.cols());
+    assert_eq!(m, mask.len());
+    let ns_cnt = mask.iter().filter(|&&b| !b).count().max(1) as f32;
+    let mut sign = Tensor::zeros(&[n, m]);
+    let mut alpha = vec![0.0f32; n];
+    for i in 0..n {
+        let wrow = w.row(i);
+        let srow = sign.row_mut(i);
+        let mut asum = 0.0;
+        for j in 0..m {
+            if !mask[j] {
+                srow[j] = if wrow[j] >= 0.0 { 1.0 } else { -1.0 };
+                asum += wrow[j].abs();
+            }
+        }
+        alpha[i] = asum / ns_cnt;
+    }
+    (sign, alpha)
+}
+
+/// Dense dequant of a plain row-binarized weight: alpha * sign(w).
+pub fn binarize_dense(w: &Tensor) -> Tensor {
+    let mask = vec![false; w.cols()];
+    let (sign, alpha) = binarize_rowwise(w, &mask);
+    let mut out = sign;
+    for i in 0..out.rows() {
+        let a = alpha[i];
+        for x in out.row_mut(i) {
+            *x *= a;
+        }
+    }
+    out
+}
+
+/// Table 3 row 1: straight binarization, no mask, analytic scalars.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlainBinarize;
+
+impl Quantizer for PlainBinarize {
+    fn name(&self) -> &'static str {
+        "Binarize"
+    }
+
+    fn bits_label(&self) -> String {
+        "1".into()
+    }
+
+    fn quantize_linear(&self, w: &Tensor, _calib: &LinearCalib) -> QuantizedLinear {
+        QuantizedLinear {
+            deq: binarize_dense(w),
+            scheme: BitScheme::Uniform { bits: 1.0 },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn alpha_is_l1_mean() {
+        let w = Tensor::from_vec(&[1, 4], vec![1.0, -2.0, 3.0, -4.0]);
+        let (sign, alpha) = binarize_rowwise(&w, &[false; 4]);
+        assert_eq!(sign.data, vec![1.0, -1.0, 1.0, -1.0]);
+        assert!((alpha[0] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_minimizes_l2_among_scalars() {
+        // XNOR-Net: alpha = mean|w| is the L2-optimal scalar for sign(w)
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[1, 64], 1.0, &mut rng);
+        let (_, alpha) = binarize_rowwise(&w, &[false; 64]);
+        let err = |a: f32| -> f32 {
+            w.row(0)
+                .iter()
+                .map(|&x| {
+                    let s = if x >= 0.0 { a } else { -a };
+                    (x - s) * (x - s)
+                })
+                .sum()
+        };
+        let e_opt = err(alpha[0]);
+        for da in [-0.1f32, -0.01, 0.01, 0.1] {
+            assert!(err(alpha[0] + da) >= e_opt - 1e-5);
+        }
+    }
+
+    #[test]
+    fn masked_columns_excluded() {
+        let w = Tensor::from_vec(&[1, 4], vec![100.0, -2.0, 3.0, -4.0]);
+        let mask = vec![true, false, false, false];
+        let (sign, alpha) = binarize_rowwise(&w, &mask);
+        assert_eq!(sign.at2(0, 0), 0.0);
+        assert!((alpha[0] - 3.0).abs() < 1e-6); // mean of |{-2,3,-4}|
+    }
+
+    #[test]
+    fn dense_dequant_signs() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[8, 16], 1.0, &mut rng);
+        let d = binarize_dense(&w);
+        for i in 0..8 {
+            for j in 0..16 {
+                assert_eq!(d.at2(i, j) >= 0.0, w.at2(i, j) >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! GPTQ (Frantar et al., 2022) and OWQ (Lee et al., 2024).
+//!
+//! GPTQ quantizes weight columns one at a time against the layer Hessian
+//! H = 2 X^T X + λI and spreads each column's quantization error over the
+//! not-yet-quantized columns using the Cholesky factor of H^-1 — the exact
+//! algorithm of the paper's strongest classical 2-bit baseline.
+//!
+//! OWQ (Appendix B.2 comparison) reuses the machinery: columns with the
+//! highest quantization sensitivity (diag(H) · ||w_col||^2) are kept in
+//! fp16 and the rest are GPTQ-quantized at 2-bit.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::{cholesky, spd_inverse, Tensor};
+
+/// Per-row b-bit asymmetric quantize of a single column slice.
+fn quantize_scalar(x: f32, mn: f32, mx: f32, qmax: f32) -> f32 {
+    let scale = ((mx - mn) / qmax).max(1e-8);
+    ((x - mn) / scale).round().clamp(0.0, qmax) * scale + mn
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Gptq {
+    pub bits: u32,
+    /// λ = percdamp * mean(diag(H)) added to the Hessian diagonal
+    pub percdamp: f32,
+    /// process columns in descending diag(H) order (act-order / desc_act)
+    pub act_order: bool,
+}
+
+impl Gptq {
+    pub fn new(bits: u32) -> Gptq {
+        Gptq { bits, percdamp: 0.01, act_order: true }
+    }
+
+    /// Core GPTQ over an explicit set of active columns. Frozen columns
+    /// (not in `order`) are left untouched and excluded from error
+    /// propagation — OWQ freezes its fp16 outlier columns this way.
+    fn run(&self, w: &Tensor, hess: &Tensor, order: &[usize]) -> Tensor {
+        let (n, _m) = (w.rows(), w.cols());
+        let k = order.len();
+        // sub-Hessian over active columns, damped
+        let mut h = Tensor::zeros(&[k, k]);
+        for (a, &ca) in order.iter().enumerate() {
+            for (b, &cb) in order.iter().enumerate() {
+                *h.at2_mut(a, b) = hess.at2(ca, cb);
+            }
+        }
+        let mean_diag =
+            (0..k).map(|i| h.at2(i, i)).sum::<f32>() / k.max(1) as f32;
+        let damp = (self.percdamp * mean_diag).max(1e-6);
+        for i in 0..k {
+            *h.at2_mut(i, i) += damp;
+        }
+        // Hinv via SPD inverse, then its Cholesky (upper through transpose):
+        // the GPTQ recursion uses U = chol(H^-1)^T row by row.
+        let hinv = match spd_inverse(&h) {
+            Ok(x) => x,
+            Err(_) => {
+                // degenerate calibration: fall back to plain RTN
+                let mut out = w.clone();
+                let qmax = ((1u32 << self.bits) - 1) as f32;
+                for r in 0..n {
+                    let row = out.row_mut(r);
+                    let mn = row.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let mx =
+                        row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    for x in row.iter_mut() {
+                        *x = quantize_scalar(*x, mn, mx, qmax);
+                    }
+                }
+                return out;
+            }
+        };
+        let l = match cholesky(&hinv) {
+            Ok(x) => x,
+            Err(_) => Tensor::zeros(&[k, k]),
+        };
+        // per-row quantization grid from the *active* columns
+        let qmax = ((1u32 << self.bits) - 1) as f32;
+        let mut grid: Vec<(f32, f32)> = Vec::with_capacity(n);
+        for r in 0..n {
+            let vals: Vec<f32> = order.iter().map(|&c| w.at2(r, c)).collect();
+            let mn = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            grid.push((mn, mx));
+        }
+        let mut work = w.clone();
+        let mut out = w.clone();
+        // iterate active columns; d = L[j][j] (diag of chol(H^-1)),
+        // propagation coefficients L[j..][j] / d.
+        for (j, &cj) in order.iter().enumerate() {
+            let d = l.at2(j, j).max(1e-8);
+            for r in 0..n {
+                let (mn, mx) = grid[r];
+                let wv = work.at2(r, cj);
+                let q = quantize_scalar(wv, mn, mx, qmax);
+                *out.at2_mut(r, cj) = q;
+                let err = (wv - q) / d;
+                // compensate the remaining active columns
+                for (j2, &cj2) in order.iter().enumerate().skip(j + 1) {
+                    *work.at2_mut(r, cj2) -= err * l.at2(j2, j);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Quantizer for Gptq {
+    fn name(&self) -> &'static str {
+        "GPTQ"
+    }
+
+    fn bits_label(&self) -> String {
+        format!("{}", self.bits)
+    }
+
+    fn needs_hessian(&self) -> bool {
+        true
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let m = w.cols();
+        let hess = calib
+            .hessian
+            .clone()
+            .unwrap_or_else(|| diag_tensor(&calib.act_sq_mean));
+        let mut order: Vec<usize> = (0..m).collect();
+        if self.act_order {
+            order.sort_by(|&a, &b| {
+                hess.at2(b, b).partial_cmp(&hess.at2(a, a)).unwrap()
+            });
+        }
+        QuantizedLinear {
+            deq: self.run(w, &hess, &order),
+            scheme: BitScheme::Uniform { bits: self.bits as f64 },
+            parts: None,
+        }
+    }
+}
+
+fn diag_tensor(d: &[f32]) -> Tensor {
+    let m = d.len();
+    let mut t = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        *t.at2_mut(i, i) = d[i].max(1e-6);
+    }
+    t
+}
+
+/// OWQ: fp16 outlier columns by sensitivity, GPTQ-2bit on the rest.
+#[derive(Debug, Clone, Copy)]
+pub struct Owq {
+    pub fp16_ratio: f64,
+}
+
+impl Owq {
+    pub fn new(fp16_ratio: f64) -> Owq {
+        Owq { fp16_ratio }
+    }
+
+    /// Column sensitivity: diag(H)_j * ||w_:,j||^2 (OWQ's λ‖ΔW‖² proxy).
+    pub fn sensitivity(w: &Tensor, hdiag: &[f32]) -> Vec<f32> {
+        let (n, m) = (w.rows(), w.cols());
+        let mut s = vec![0.0f32; m];
+        for i in 0..n {
+            for (j, &v) in w.row(i).iter().enumerate() {
+                s[j] += v * v;
+            }
+        }
+        for j in 0..m {
+            s[j] *= hdiag[j];
+        }
+        s
+    }
+}
+
+impl Quantizer for Owq {
+    fn name(&self) -> &'static str {
+        "OWQ"
+    }
+
+    fn bits_label(&self) -> String {
+        "2".into()
+    }
+
+    fn needs_hessian(&self) -> bool {
+        true
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let m = w.cols();
+        let hess = calib
+            .hessian
+            .clone()
+            .unwrap_or_else(|| diag_tensor(&calib.act_sq_mean));
+        let hdiag: Vec<f32> = (0..m).map(|j| hess.at2(j, j)).collect();
+        let sens = Owq::sensitivity(w, &hdiag);
+        let mut idx: Vec<usize> = (0..m).collect();
+        idx.sort_by(|&a, &b| sens[b].partial_cmp(&sens[a]).unwrap());
+        let n_fp = ((m as f64) * self.fp16_ratio).round() as usize;
+        let mut active: Vec<usize> = idx[n_fp..].to_vec();
+        // keep GPTQ's act-order inside the active set
+        active.sort_by(|&a, &b| {
+            hess.at2(b, b).partial_cmp(&hess.at2(a, a)).unwrap()
+        });
+        let gptq = Gptq { bits: 2, percdamp: 0.01, act_order: false };
+        QuantizedLinear {
+            deq: gptq.run(w, &hess, &active), // frozen columns stay fp
+            scheme: BitScheme::Owq { fp16_ratio: self.fp16_ratio },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::{demo, output_mse};
+    use crate::quant::rtn::rtn_dense;
+
+    #[test]
+    fn gptq_beats_rtn_on_output_mse() {
+        let (w, calib) = demo(48, 64, 3);
+        let g = Gptq::new(2).quantize_linear(&w, &calib);
+        let r = rtn_dense(&w, 2, 1.0);
+        let e_g = output_mse(&w, &g.deq, 1);
+        let e_r = output_mse(&w, &r, 1);
+        assert!(e_g < e_r, "gptq {e_g} vs rtn {e_r}");
+    }
+
+    #[test]
+    fn gptq_4bit_much_better_than_2bit() {
+        let (w, calib) = demo(32, 48, 4);
+        let g4 = Gptq::new(4).quantize_linear(&w, &calib);
+        let g2 = Gptq::new(2).quantize_linear(&w, &calib);
+        let e4 = output_mse(&w, &g4.deq, 2);
+        let e2 = output_mse(&w, &g2.deq, 2);
+        assert!(e4 < e2 / 10.0, "4-bit {e4} vs 2-bit {e2}");
+    }
+
+    #[test]
+    fn owq_keeps_outlier_columns_fp() {
+        let (w, calib) = demo(32, 40, 5);
+        let q = Owq::new(0.2).quantize_linear(&w, &calib);
+        // the frozen fp16 columns must match w exactly
+        let hess = calib.hessian.as_ref().unwrap();
+        let hdiag: Vec<f32> = (0..40).map(|j| hess.at2(j, j)).collect();
+        let sens = Owq::sensitivity(&w, &hdiag);
+        let mut idx: Vec<usize> = (0..40).collect();
+        idx.sort_by(|&a, &b| sens[b].partial_cmp(&sens[a]).unwrap());
+        let mut exact = 0;
+        for &j in &idx[..8] {
+            let same = (0..32).all(|i| q.deq.at2(i, j) == w.at2(i, j));
+            if same {
+                exact += 1;
+            }
+        }
+        assert_eq!(exact, 8);
+    }
+
+    #[test]
+    fn owq_better_than_gptq2() {
+        let (w, calib) = demo(48, 64, 6);
+        let o = Owq::new(0.2).quantize_linear(&w, &calib);
+        let g = Gptq::new(2).quantize_linear(&w, &calib);
+        assert!(output_mse(&w, &o.deq, 3) < output_mse(&w, &g.deq, 3));
+    }
+}

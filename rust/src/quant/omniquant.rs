@@ -1,0 +1,119 @@
+//! OmniQuant-lite: learnable weight clipping (LWC) distilled to its
+//! substance at this scale — per-row clip factors chosen by search to
+//! minimize the activation-weighted output error of b-bit RTN. This is the
+//! strongest "classical 2-bit" baseline family in the paper's tables.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::quant::rtn::rtn_row;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct OmniQuantLite {
+    pub bits: u32,
+    pub grid: usize,
+}
+
+impl OmniQuantLite {
+    pub fn new(bits: u32) -> OmniQuantLite {
+        OmniQuantLite { bits, grid: 12 }
+    }
+}
+
+impl Quantizer for OmniQuantLite {
+    fn name(&self) -> &'static str {
+        "OmniQuant"
+    }
+
+    fn bits_label(&self) -> String {
+        format!("{}", self.bits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let (n, m) = (w.rows(), w.cols());
+        let mut deq = Tensor::zeros(&[n, m]);
+        // per-row learnable clip: search gamma in (0.4 ..= 1.0]
+        for r in 0..n {
+            let row = w.row(r);
+            let mut best_err = f32::INFINITY;
+            let mut best: Vec<f32> = row.to_vec();
+            for g in 0..=self.grid {
+                let gamma = 1.0 - 0.6 * (g as f32 / self.grid as f32);
+                let mut cand = row.to_vec();
+                rtn_row(&mut cand, self.bits, gamma);
+                let err: f32 = cand
+                    .iter()
+                    .zip(row)
+                    .enumerate()
+                    .map(|(j, (&q, &x))| {
+                        let d = q - x;
+                        calib.act_sq_mean[j] * d * d
+                    })
+                    .sum();
+                if err < best_err {
+                    best_err = err;
+                    best = cand;
+                }
+            }
+            deq.row_mut(r).copy_from_slice(&best);
+        }
+        QuantizedLinear {
+            deq,
+            scheme: BitScheme::Uniform { bits: self.bits as f64 },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::quant::testutil::demo;
+    use crate::quant::Quantizer;
+
+    fn weighted_err(w: &Tensor, deq: &Tensor, sq: &[f32]) -> f32 {
+        let mut e = 0.0;
+        for i in 0..w.rows() {
+            for (j, (&x, &y)) in w.row(i).iter().zip(deq.row(i)).enumerate() {
+                e += sq[j] * (x - y) * (x - y);
+            }
+        }
+        e
+    }
+
+    #[test]
+    fn clipping_never_worse_than_rtn() {
+        let (w, calib) = demo(32, 48, 14);
+        let o = OmniQuantLite::new(2).quantize_linear(&w, &calib);
+        let r = Rtn::new(2).quantize_linear(&w, &calib);
+        let eo = weighted_err(&w, &o.deq, &calib.act_sq_mean);
+        let er = weighted_err(&w, &r.deq, &calib.act_sq_mean);
+        assert!(eo <= er + 1e-6, "omni {eo} vs rtn {er}");
+    }
+
+    #[test]
+    fn helps_on_outlier_heavy_rows() {
+        // one huge negative outlier whose input channel is nearly dead:
+        // the activation-weighted objective wants the outlier clipped away
+        // so the live small-weight channels quantize finely
+        let mut w = Tensor::full(&[1, 16], 0.1);
+        w.data[0] = -10.0;
+        for j in 1..16 {
+            w.data[j] = if j % 2 == 0 { 0.1 } else { -0.1 };
+        }
+        let mut sq = vec![10.0; 16];
+        sq[0] = 0.001; // outlier channel barely fires
+        let calib = super::super::LinearCalib {
+            act_abs_mean: sq.iter().map(|x: &f32| x.sqrt()).collect(),
+            act_sq_mean: sq.clone(),
+            hessian: None,
+            n_rows: 1,
+        };
+        let o = OmniQuantLite::new(2).quantize_linear(&w, &calib);
+        let r = Rtn::new(2).quantize_linear(&w, &calib);
+        let eo = weighted_err(&w, &o.deq, &sq);
+        let er = weighted_err(&w, &r.deq, &sq);
+        assert!(eo < er, "omni weighted err {eo} vs rtn {er}");
+    }
+}

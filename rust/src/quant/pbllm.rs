@@ -1,0 +1,122 @@
+//! PB-LLM (Shang et al., 2023): partially-binarized LLM. An *unstructured*
+//! element-wise mask keeps the top-ρ weights by |magnitude| at 8-bit
+//! (per-row RTN) and binarizes the rest — the 2.7-effective-bit baseline
+//! whose mask cost motivates the paper's structured alternative.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PbLlm {
+    pub salient_ratio: f64,
+}
+
+impl PbLlm {
+    pub fn new(salient_ratio: f64) -> PbLlm {
+        PbLlm { salient_ratio }
+    }
+}
+
+impl Quantizer for PbLlm {
+    fn name(&self) -> &'static str {
+        "PB-LLM"
+    }
+
+    fn bits_label(&self) -> String {
+        "1.7(+1)".into()
+    }
+
+    fn quantize_linear(&self, w: &Tensor, _calib: &LinearCalib) -> QuantizedLinear {
+        let (n, m) = (w.rows(), w.cols());
+        let total = n * m;
+        let k = ((total as f64) * self.salient_ratio).round() as usize;
+        // global top-k by |w| (unstructured mask)
+        let mut idx: Vec<usize> = (0..total).collect();
+        idx.sort_by(|&a, &b| {
+            w.data[b].abs().partial_cmp(&w.data[a].abs()).unwrap()
+        });
+        let mut salient = vec![false; total];
+        for &i in &idx[..k] {
+            salient[i] = true;
+        }
+        let mut deq = Tensor::zeros(&[n, m]);
+        for r in 0..n {
+            // 8-bit asymmetric grid over the salient entries of this row
+            let row = w.row(r);
+            let sal_vals: Vec<f32> = (0..m)
+                .filter(|&c| salient[r * m + c])
+                .map(|c| row[c])
+                .collect();
+            let (mn, mx) = if sal_vals.is_empty() {
+                (0.0, 0.0)
+            } else {
+                (
+                    sal_vals.iter().cloned().fold(f32::INFINITY, f32::min),
+                    sal_vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max),
+                )
+            };
+            let scale = ((mx - mn) / 255.0).max(1e-8);
+            // binarization alpha over the non-salient entries
+            let ns: Vec<f32> = (0..m)
+                .filter(|&c| !salient[r * m + c])
+                .map(|c| row[c].abs())
+                .collect();
+            let alpha = if ns.is_empty() {
+                0.0
+            } else {
+                ns.iter().sum::<f32>() / ns.len() as f32
+            };
+            for c in 0..m {
+                let x = row[c];
+                deq.data[r * m + c] = if salient[r * m + c] {
+                    ((x - mn) / scale).round().clamp(0.0, 255.0) * scale + mn
+                } else if x >= 0.0 {
+                    alpha
+                } else {
+                    -alpha
+                };
+            }
+        }
+        QuantizedLinear {
+            deq,
+            scheme: BitScheme::PbLlm { salient_ratio: self.salient_ratio },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binarize::PlainBinarize;
+    use crate::quant::testutil::{demo, output_mse};
+
+    #[test]
+    fn better_than_plain_binarization() {
+        let (w, calib) = demo(32, 48, 10);
+        let p = PbLlm::new(0.1).quantize_linear(&w, &calib);
+        let b = PlainBinarize.quantize_linear(&w, &calib);
+        assert!(output_mse(&w, &p.deq, 5) < output_mse(&w, &b.deq, 5));
+    }
+
+    #[test]
+    fn largest_weights_preserved_well() {
+        let (w, calib) = demo(16, 32, 11);
+        let p = PbLlm::new(0.1).quantize_linear(&w, &calib);
+        // the single largest |weight| should be nearly exact (8-bit)
+        let (mut bi, mut bv) = (0, 0.0f32);
+        for (i, &x) in w.data.iter().enumerate() {
+            if x.abs() > bv {
+                bv = x.abs();
+                bi = i;
+            }
+        }
+        assert!((p.deq.data[bi] - w.data[bi]).abs() < 0.05 * bv);
+    }
+
+    #[test]
+    fn bits_label_matches_paper() {
+        assert_eq!(PbLlm::new(0.1).bits_label(), "1.7(+1)");
+    }
+}

@@ -1,0 +1,120 @@
+//! The paper's structured mask (section 3.2): one bit per *input channel*.
+//!
+//! Eq. 4 bounds the layer quantization error by
+//!   sum_i |x_i| * sum_j |w_ij^q - w_ij|,
+//! so channels with large activation magnitude dominate the bound; keeping
+//! the top-ρ such channels at 4-bit shrinks it at ~0.0002 extra bits/weight.
+//! The Hessian-based variant (OWQ-style diag(H) ranking) exists for the
+//! Table 5 comparison, where the paper shows it collapses under
+//! binarization.
+
+use crate::packing::bitpack::BitVec;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskCriterion {
+    /// paper's criterion: mean |x| per input channel
+    ActivationMagnitude,
+    /// OWQ-style: diag(H) = mean x^2 per channel (Table 5 ablation)
+    HessianDiag,
+}
+
+/// Select exactly round(ratio * m) salient channels by the criterion.
+pub fn structured_mask(
+    act_abs_mean: &[f32],
+    act_sq_mean: &[f32],
+    ratio: f64,
+    criterion: MaskCriterion,
+) -> Vec<bool> {
+    let m = act_abs_mean.len();
+    let scores = match criterion {
+        MaskCriterion::ActivationMagnitude => act_abs_mean,
+        MaskCriterion::HessianDiag => act_sq_mean,
+    };
+    let k = ((m as f64) * ratio).round() as usize;
+    let mut idx: Vec<usize> = (0..m).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut mask = vec![false; m];
+    for &j in idx.iter().take(k) {
+        mask[j] = true;
+    }
+    mask
+}
+
+/// Pack the mask into its storage bitmap (the 0.0002-bit/weight artifact).
+pub fn pack_mask(mask: &[bool]) -> BitVec {
+    BitVec::from_bools(mask)
+}
+
+/// Extra bits per weight this mask costs on an (n, m) layer.
+pub fn mask_overhead_bits_per_weight(n: usize, m: usize) -> f64 {
+    m as f64 / (n as f64 * m as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_exact_count_property() {
+        check(
+            "mask-selects-exact-count",
+            50,
+            |r: &mut Rng| {
+                let m = r.below(500) + 10;
+                (0..m).map(|_| r.f32()).collect::<Vec<f32>>()
+            },
+            |scores| {
+                for ratio in [0.0, 0.1, 0.2, 0.3, 0.5] {
+                    let mask = structured_mask(
+                        scores,
+                        scores,
+                        ratio,
+                        MaskCriterion::ActivationMagnitude,
+                    );
+                    let want = ((scores.len() as f64) * ratio).round() as usize;
+                    let got = mask.iter().filter(|&&b| b).count();
+                    if got != want {
+                        return Err(format!("ratio {ratio}: {got} != {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn picks_largest_channels() {
+        let abs = vec![0.1, 5.0, 0.2, 4.0, 0.3];
+        let mask = structured_mask(
+            &abs, &abs, 0.4, MaskCriterion::ActivationMagnitude,
+        );
+        assert_eq!(mask, vec![false, true, false, true, false]);
+    }
+
+    #[test]
+    fn criteria_can_differ() {
+        // abs-mean favors ch 0; sq-mean (outlier-sensitive) favors ch 1
+        let abs = vec![1.0, 0.9, 0.0, 0.0];
+        let sq = vec![1.0, 4.0, 0.0, 0.0]; // rare big spikes on ch 1
+        let a = structured_mask(&abs, &sq, 0.25, MaskCriterion::ActivationMagnitude);
+        let h = structured_mask(&abs, &sq, 0.25, MaskCriterion::HessianDiag);
+        assert!(a[0] && !a[1]);
+        assert!(h[1] && !h[0]);
+    }
+
+    #[test]
+    fn overhead_matches_paper_magnitude() {
+        let o = mask_overhead_bits_per_weight(4096, 4096);
+        assert!((o - 0.000244).abs() < 1e-5); // paper rounds to 0.0002
+    }
+
+    #[test]
+    fn packs_to_one_bit_per_channel() {
+        let mask = vec![true, false, true, true];
+        let packed = pack_mask(&mask);
+        assert_eq!(packed.storage_bits(), 4);
+        assert_eq!(packed.to_bools(), mask);
+    }
+}

@@ -1,0 +1,127 @@
+//! PTQ1.61 (the paper's method), layer-level stage.
+//!
+//! This module produces the *analytic* PTQ1.61 quantization (structured
+//! mask + Eq. 2 scaling factors + identity angular factors). The learnable
+//! refinement — block-wise AdamW over (alpha_s, alpha_r1, alpha_r2[, mu])
+//! against the two-branch Eq. 7 objective — runs in
+//! `coordinator::blockopt`, which updates the `Ptq161Parts` produced here
+//! in place via the `block_opt_grad` AOT artifact.
+
+pub mod mask;
+pub mod scaling;
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::Tensor;
+
+pub use mask::{structured_mask, MaskCriterion};
+pub use scaling::initial_parts;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Ptq161 {
+    pub salient_ratio: f64,
+    pub criterion: MaskCriterion,
+}
+
+impl Default for Ptq161 {
+    fn default() -> Self {
+        // paper: 20% salient channels (Fig. 6 picks 20% to stay sub-2-bit)
+        Ptq161 {
+            salient_ratio: 0.2,
+            criterion: MaskCriterion::ActivationMagnitude,
+        }
+    }
+}
+
+impl Ptq161 {
+    pub fn with_ratio(ratio: f64) -> Ptq161 {
+        Ptq161 { salient_ratio: ratio, ..Default::default() }
+    }
+
+    pub fn with_criterion(criterion: MaskCriterion) -> Ptq161 {
+        Ptq161 { criterion, ..Default::default() }
+    }
+}
+
+impl Quantizer for Ptq161 {
+    fn name(&self) -> &'static str {
+        "PTQ1.61"
+    }
+
+    fn bits_label(&self) -> String {
+        "1.61".into()
+    }
+
+    fn quantize_linear(&self, w: &Tensor, calib: &LinearCalib) -> QuantizedLinear {
+        let mask = structured_mask(
+            &calib.act_abs_mean,
+            &calib.act_sq_mean,
+            self.salient_ratio,
+            self.criterion,
+        );
+        let parts = initial_parts(w, &mask);
+        QuantizedLinear {
+            deq: parts.dequantize(),
+            scheme: BitScheme::Ptq161 { salient_ratio: self.salient_ratio },
+            parts: Some(parts),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::billm::BiLlm;
+    use crate::quant::pbllm::PbLlm;
+    use crate::quant::testutil::{demo, output_mse};
+
+    #[test]
+    fn activation_weighted_error_beats_pbllm() {
+        // under hot input channels the structured mask protects exactly the
+        // channels that dominate Eq. 4's bound
+        let (w, calib) = demo(48, 64, 23);
+        let p = Ptq161::default().quantize_linear(&w, &calib);
+        let pb = PbLlm::new(0.1).quantize_linear(&w, &calib);
+        let werr = |deq: &Tensor| {
+            let mut e = 0.0;
+            for i in 0..w.rows() {
+                for (j, (&x, &y)) in
+                    w.row(i).iter().zip(deq.row(i)).enumerate()
+                {
+                    e += calib.act_sq_mean[j] * (x - y) * (x - y);
+                }
+            }
+            e
+        };
+        assert!(werr(&p.deq) < werr(&pb.deq));
+    }
+
+    #[test]
+    fn bits_below_billm_and_pbllm() {
+        // storage ordering at real LLaMA layer size (Appendix A numbers);
+        // tiny matrices inflate the fp16 scaling-vector share for PTQ1.61.
+        use crate::packing::bitwidth::{average_bits, BitScheme};
+        let p = average_bits(BitScheme::Ptq161 { salient_ratio: 0.2 }, 4096, 4096);
+        let bi = average_bits(BitScheme::BiLlm, 4096, 4096);
+        let pb = average_bits(BitScheme::PbLlm { salient_ratio: 0.1 }, 4096, 4096);
+        assert!(p < bi && bi < pb, "{p} {bi} {pb}");
+    }
+
+    #[test]
+    fn parts_present_and_dense_consistent() {
+        let (w, calib) = demo(24, 40, 25);
+        let q = Ptq161::default().quantize_linear(&w, &calib);
+        let parts = q.parts.as_ref().unwrap();
+        assert_eq!(parts.n_salient(), 8); // 20% of 40
+        assert!(q.deq.mse(&parts.dequantize()) < 1e-12);
+    }
+
+    #[test]
+    fn ratio_zero_is_pure_binarization() {
+        let (w, calib) = demo(16, 20, 26);
+        let q = Ptq161::with_ratio(0.0).quantize_linear(&w, &calib);
+        let b = crate::quant::binarize::binarize_dense(&w);
+        assert!(q.deq.mse(&b) < 1e-12);
+        let _ = output_mse(&w, &q.deq, 7);
+    }
+}

@@ -1,0 +1,112 @@
+//! Initial PTQ1.61 decomposition: given a weight and its structured mask,
+//! build the Eq. 9 operands with *analytic* starting values — salient
+//! columns 4-bit-quantized per channel, non-salient binarized with
+//! alpha_s = |w|_1 / n_w (Eq. 2), and the angular factors alpha_r1/alpha_r2
+//! at 1 (identity). The block-wise optimizer then learns all three.
+
+use super::super::Ptq161Parts;
+use crate::quant::binarize::binarize_rowwise;
+use crate::quant::rtn::quant4_columns;
+use crate::tensor::Tensor;
+
+pub fn initial_parts(w: &Tensor, mask: &[bool]) -> Ptq161Parts {
+    let (n, m) = (w.rows(), w.cols());
+    assert_eq!(m, mask.len());
+    // salient columns: per-column 4-bit, zeros elsewhere
+    let dq4 = quant4_columns(w, mask);
+    let mut w_sal = Tensor::zeros(&[n, m]);
+    for i in 0..n {
+        for j in 0..m {
+            if mask[j] {
+                *w_sal.at2_mut(i, j) = dq4.at2(i, j);
+            }
+        }
+    }
+    let (sign_ns, alpha_s) = binarize_rowwise(w, mask);
+    Ptq161Parts {
+        mask: mask.to_vec(),
+        w_sal,
+        sign_ns,
+        alpha_s,
+        alpha_r1: vec![1.0; n],
+        alpha_r2: vec![1.0; m],
+        mu: vec![0.0; n],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::demo;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dequant_reconstruction_error_drops_with_mask() {
+        let (w, _) = demo(32, 48, 21);
+        let no_mask = initial_parts(&w, &vec![false; 48]);
+        let mut mask = vec![false; 48];
+        for j in 0..10 {
+            mask[j] = true;
+        }
+        let with_mask = initial_parts(&w, &mask);
+        assert!(
+            with_mask.dequantize().mse(&w) < no_mask.dequantize().mse(&w)
+        );
+    }
+
+    #[test]
+    fn composition_invariant_property() {
+        // salient columns hold 4-bit values (error <= scale/2), non-salient
+        // hold exactly +-alpha_s, and the two partitions never overlap.
+        check(
+            "ptq161-parts-composition",
+            30,
+            |r: &mut Rng| {
+                let n = r.below(24) + 4;
+                let m = r.below(32) + 8;
+                let data: Vec<f32> =
+                    (0..n * m).map(|_| r.normal() * 0.1).collect();
+                (vec![n, m], data)
+            },
+            |(shape, data)| {
+                let (n, m) = (shape[0], shape[1]);
+                let w = Tensor::from_vec(&[n, m], data.clone());
+                let mut mask = vec![false; m];
+                for j in 0..m / 5 {
+                    mask[j * 5] = true;
+                }
+                let parts = initial_parts(&w, &mask);
+                let deq = parts.dequantize();
+                for i in 0..n {
+                    for j in 0..m {
+                        let v = deq.at2(i, j);
+                        if mask[j] {
+                            if parts.sign_ns.at2(i, j) != 0.0 {
+                                return Err("sign on salient col".into());
+                            }
+                        } else {
+                            let want = parts.alpha_s[i]
+                                * if w.at2(i, j) >= 0.0 { 1.0 } else { -1.0 };
+                            if (v - want).abs() > 1e-5 {
+                                return Err(format!(
+                                    "ns ({i},{j}): {v} != {want}"
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn identity_angular_factors_at_init() {
+        let (w, _) = demo(8, 16, 22);
+        let p = initial_parts(&w, &vec![false; 16]);
+        assert!(p.alpha_r1.iter().all(|&x| x == 1.0));
+        assert!(p.alpha_r2.iter().all(|&x| x == 1.0));
+        assert!(p.mu.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,124 @@
+//! QuIP-lite (Chee et al., 2024): incoherence processing. The weight is
+//! rotated by a seeded random orthogonal matrix on the input side
+//! (W' = W Q), quantized at b bits, and rotated back (dequant = W'' Q^T).
+//! Rotation spreads outliers across coordinates, the core of QuIP's
+//! guarantee; the LDLQ rounding is approximated by GPTQ-style per-row RTN
+//! on the rotated weight at this scale.
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::quant::rtn::rtn_dense;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Random orthogonal (m, m) via a product of Householder reflections.
+pub fn random_orthogonal(m: usize, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut q = Tensor::zeros(&[m, m]);
+    for i in 0..m {
+        *q.at2_mut(i, i) = 1.0;
+    }
+    // enough dense reflections to spread any single-coordinate outlier
+    let reflections = 32.min(m);
+    for _ in 0..reflections {
+        let mut v: Vec<f32> = (0..m).map(|_| rng.normal()).collect();
+        let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-8);
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+        // Q <- Q (I - 2 v v^T)
+        for r in 0..m {
+            let row = q.row(r);
+            let dot: f32 = row.iter().zip(&v).map(|(&a, &b)| a * b).sum();
+            let row = q.row_mut(r);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x -= 2.0 * dot * v[j];
+            }
+        }
+    }
+    q
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuipLite {
+    pub bits: u32,
+    pub seed: u64,
+}
+
+impl QuipLite {
+    pub fn new(bits: u32) -> QuipLite {
+        QuipLite { bits, seed: 0x9u64 }
+    }
+}
+
+impl Quantizer for QuipLite {
+    fn name(&self) -> &'static str {
+        "QuIP"
+    }
+
+    fn bits_label(&self) -> String {
+        format!("{}", self.bits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, _calib: &LinearCalib) -> QuantizedLinear {
+        let m = w.cols();
+        let q = random_orthogonal(m, self.seed ^ m as u64);
+        let rotated = w.matmul(&q);
+        let deq_rot = rtn_dense(&rotated, self.bits, 1.0);
+        let deq = deq_rot.matmul(&q.t());
+        QuantizedLinear {
+            deq,
+            scheme: BitScheme::Uniform { bits: self.bits as f64 },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::rtn::Rtn;
+    use crate::quant::testutil::demo;
+    use crate::quant::Quantizer;
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let q = random_orthogonal(24, 5);
+        let id = q.matmul(&q.t());
+        for i in 0..24 {
+            for j in 0..24 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.at2(i, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn helps_on_outlier_weights() {
+        // several outliers of different magnitudes per row: the asymmetric
+        // RTN grid can anchor at most its two end-points on them, while the
+        // rotation spreads all of them into a near-gaussian row
+        let (mut w, calib) = demo(24, 32, 15);
+        for i in 0..24 {
+            *w.at2_mut(i, 0) = 3.0;
+            *w.at2_mut(i, 11) = -2.5;
+            *w.at2_mut(i, 23) = 1.8;
+        }
+        let qp = QuipLite::new(2).quantize_linear(&w, &calib);
+        let r = Rtn::new(2).quantize_linear(&w, &calib);
+        assert!(
+            qp.deq.mse(&w) < r.deq.mse(&w),
+            "quip {} vs rtn {}",
+            qp.deq.mse(&w),
+            r.deq.mse(&w)
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let (w, calib) = demo(8, 16, 16);
+        let a = QuipLite::new(2).quantize_linear(&w, &calib);
+        let b = QuipLite::new(2).quantize_linear(&w, &calib);
+        assert_eq!(a.deq.data, b.deq.data);
+    }
+}

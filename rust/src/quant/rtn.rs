@@ -1,0 +1,155 @@
+//! Round-to-nearest (RTN) quantization — the primitive every other method
+//! builds on: per-row asymmetric b-bit quantize/dequantize with optional
+//! clipping, plus per-column 4-bit (the salient-channel format).
+
+use super::{LinearCalib, QuantizedLinear, Quantizer};
+use crate::packing::bitwidth::BitScheme;
+use crate::tensor::Tensor;
+
+/// Quantize one row to `bits` asymmetric with a clip factor on the range;
+/// returns the dequantized row in place.
+pub fn rtn_row(row: &mut [f32], bits: u32, clip: f32) {
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let mn0 = row.iter().cloned().fold(f32::INFINITY, f32::min);
+    let mx0 = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    // LWC-style clipping: scale the range end-points toward zero, which is
+    // what tames magnitude outliers (the center of mass of LLM weight rows
+    // is ~0, so zero-anchored and center-anchored clipping coincide there).
+    let mn = mn0 * clip;
+    let mx = mx0 * clip;
+    let scale = ((mx - mn) / qmax).max(1e-8);
+    for x in row.iter_mut() {
+        let q = ((*x - mn) / scale).round().clamp(0.0, qmax);
+        *x = q * scale + mn;
+    }
+}
+
+/// Dense per-row RTN dequantized copy.
+pub fn rtn_dense(w: &Tensor, bits: u32, clip: f32) -> Tensor {
+    let mut out = w.clone();
+    for r in 0..out.rows() {
+        rtn_row(out.row_mut(r), bits, clip);
+    }
+    out
+}
+
+/// Per-column (input-channel) 4-bit — matches kernels/ref.py quant4_ref.
+pub fn quant4_columns(w: &Tensor, cols: &[bool]) -> Tensor {
+    let (n, m) = (w.rows(), w.cols());
+    assert_eq!(m, cols.len());
+    let mut out = w.clone();
+    for j in 0..m {
+        if !cols[j] {
+            continue;
+        }
+        let mut col: Vec<f32> = (0..n).map(|i| w.at2(i, j)).collect();
+        let (codes, scale, mn) = crate::packing::nibble::quantize_column(&col);
+        for (i, &c) in codes.iter().enumerate() {
+            col[i] = c as f32 * scale + mn;
+        }
+        for i in 0..n {
+            *out.at2_mut(i, j) = col[i];
+        }
+    }
+    out
+}
+
+/// The RTN baseline method (per-row asymmetric, no calibration use).
+#[derive(Debug, Clone, Copy)]
+pub struct Rtn {
+    pub bits: u32,
+}
+
+impl Rtn {
+    pub fn new(bits: u32) -> Rtn {
+        Rtn { bits }
+    }
+}
+
+impl Quantizer for Rtn {
+    fn name(&self) -> &'static str {
+        "RTN"
+    }
+
+    fn bits_label(&self) -> String {
+        format!("{}", self.bits)
+    }
+
+    fn quantize_linear(&self, w: &Tensor, _calib: &LinearCalib) -> QuantizedLinear {
+        QuantizedLinear {
+            deq: rtn_dense(w, self.bits, 1.0),
+            scheme: BitScheme::Uniform { bits: self.bits as f64 },
+            parts: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::demo;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rtn_error_bound_property() {
+        check(
+            "rtn-row-error-le-half-scale",
+            50,
+            |r: &mut Rng| {
+                let n = r.below(100) + 2;
+                (0..n).map(|_| r.normal()).collect::<Vec<f32>>()
+            },
+            |xs| {
+                for bits in [2u32, 3, 4, 8] {
+                    let mut q = xs.clone();
+                    rtn_row(&mut q, bits, 1.0);
+                    let mn = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+                    let mx =
+                        xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let scale = (mx - mn) / ((1u32 << bits) - 1) as f32;
+                    for (x, y) in xs.iter().zip(&q) {
+                        if (x - y).abs() > scale / 2.0 + 1e-5 {
+                            return Err(format!(
+                                "bits={bits} err={} scale={scale}",
+                                x - y
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let (w, calib) = demo(32, 64, 1);
+        let e2 = Rtn::new(2).quantize_linear(&w, &calib).deq.mse(&w);
+        let e4 = Rtn::new(4).quantize_linear(&w, &calib).deq.mse(&w);
+        let e8 = Rtn::new(8).quantize_linear(&w, &calib).deq.mse(&w);
+        assert!(e2 > e4 && e4 > e8, "{e2} {e4} {e8}");
+    }
+
+    #[test]
+    fn quant4_only_touches_selected_columns() {
+        let (w, _) = demo(16, 8, 2);
+        let cols = vec![true, false, true, false, false, false, false, false];
+        let q = quant4_columns(&w, &cols);
+        for i in 0..16 {
+            assert_eq!(q.at2(i, 1), w.at2(i, 1));
+            assert_eq!(q.at2(i, 4), w.at2(i, 4));
+        }
+        assert!(q.data != w.data);
+    }
+
+    #[test]
+    fn clip_tightens_range() {
+        let mut a = vec![-10.0, -0.1, 0.0, 0.1, 10.0];
+        let mut b = a.clone();
+        rtn_row(&mut a, 2, 1.0);
+        rtn_row(&mut b, 2, 0.5);
+        // with clip the small values are represented better
+        assert!((b[1] - (-0.1)).abs() <= (a[1] - (-0.1)).abs() + 1e-6);
+    }
+}

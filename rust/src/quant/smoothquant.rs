@@ -1,0 +1,90 @@
+//! SmoothQuant (Xiao et al., 2023) W4A4 — the weight-activation baseline of
+//! Table 13. The smoothing vectors s_j = max|x_j|^α / max|w_j|^(1-α) are
+//! computed here from calibration stats; the actual W4A4 fake-quant forward
+//! runs in the AOT `qblock_w4a4_fwd` artifact (L2 quant_ops.w4a4_linear).
+
+use super::LinearCalib;
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SmoothQuant {
+    pub alpha: f32,
+}
+
+impl Default for SmoothQuant {
+    fn default() -> Self {
+        SmoothQuant { alpha: 0.5 }
+    }
+}
+
+impl SmoothQuant {
+    /// Per-input-channel smoothing vector for one linear.
+    pub fn smooth_vector(&self, w: &Tensor, calib: &LinearCalib) -> Vec<f32> {
+        let m = w.cols();
+        // channel-wise weight max |w|
+        let mut wmax = vec![0.0f32; m];
+        for i in 0..w.rows() {
+            for (j, &x) in w.row(i).iter().enumerate() {
+                wmax[j] = wmax[j].max(x.abs());
+            }
+        }
+        (0..m)
+            .map(|j| {
+                let a = calib.act_abs_mean[j].max(1e-5);
+                let ww = wmax[j].max(1e-5);
+                (a.powf(self.alpha) / ww.powf(1.0 - self.alpha)).max(1e-4)
+            })
+            .collect()
+    }
+
+    /// Shared vector for a group of linears consuming the same input
+    /// (q/k/v share x_attn; gate/up share x_mlp) — elementwise max of the
+    /// per-linear vectors, as the deployment would need one scale per input.
+    pub fn shared_vector(&self, ws: &[&Tensor], calib: &LinearCalib) -> Vec<f32> {
+        let mut out = vec![0.0f32; ws[0].cols()];
+        for w in ws {
+            let v = self.smooth_vector(w, calib);
+            for (o, x) in out.iter_mut().zip(v) {
+                *o = o.max(x);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::testutil::demo;
+
+    #[test]
+    fn hot_channels_get_big_scales() {
+        let (w, calib) = demo(16, 32, 17);
+        let s = SmoothQuant::default().smooth_vector(&w, &calib);
+        // channels 0,8,16,24 were boosted 8x in demo()
+        let hot = (s[0] + s[8] + s[16] + s[24]) / 4.0;
+        let cold: f32 =
+            (0..32).filter(|j| j % 8 != 0).map(|j| s[j]).sum::<f32>() / 28.0;
+        assert!(hot > cold * 1.5, "hot {hot} vs cold {cold}");
+    }
+
+    #[test]
+    fn shared_vector_dominates_each() {
+        let (w1, calib) = demo(16, 32, 18);
+        let (w2, _) = demo(16, 32, 19);
+        let sq = SmoothQuant::default();
+        let shared = sq.shared_vector(&[&w1, &w2], &calib);
+        for (j, &s) in sq.smooth_vector(&w1, &calib).iter().enumerate() {
+            assert!(shared[j] >= s - 1e-6);
+        }
+    }
+
+    #[test]
+    fn all_positive() {
+        let (w, calib) = demo(8, 16, 20);
+        assert!(SmoothQuant::default()
+            .smooth_vector(&w, &calib)
+            .iter()
+            .all(|&x| x > 0.0));
+    }
+}

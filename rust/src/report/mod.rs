@@ -1,0 +1,116 @@
+//! Report emission: aligned console tables (the paper-table regenerators
+//! print through this) and CSV dumps for figure series.
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!("{:<width$}  ", c, width = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!(
+            "{}",
+            widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("--")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also persist as CSV next to the figure dumps.
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+pub fn fmt_ppl(p: f64) -> String {
+    if !p.is_finite() {
+        "NAN".into()
+    } else if p >= 1e4 {
+        format!("{:.1e}", p)
+    } else {
+        format!("{:.2}", p)
+    }
+}
+
+pub fn write_csv(path: &Path, header: &str, rows: &[String]) -> std::io::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{r}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("ptq161_table.csv");
+        t.save_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert_eq!(text, "a,bb\n1,2\n");
+        std::fs::remove_file(dir).ok();
+        t.print();
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(12.5), "12.50");
+        assert_eq!(fmt_ppl(2.5e5), "2.5e5");
+        assert_eq!(fmt_ppl(f64::NAN), "NAN");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_checked() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Manifest: the typed view of artifacts/manifest.json (the Python↔Rust
+//! contract). Parsed with the in-repo JSON substrate.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub base: String,
+    pub config: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of an input by name (call sites assemble positionally but
+    /// assert names when the ordering is subtle).
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|io| io.name == name)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub ffn: usize,
+    pub seq: usize,
+    pub b_train: usize,
+    pub b_eval: usize,
+    pub lora_rank: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub configs: HashMap<String, ModelConfig>,
+    /// canonical parameter order per config: (name, shape)
+    pub param_spec: HashMap<String, Vec<(String, Vec<usize>)>>,
+    /// block linear names in canonical order (wq..w_down)
+    pub linears: Vec<String>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn io_from_json(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("io missing name"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("io missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?,
+        dtype: j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut configs = HashMap::new();
+        for (cname, cj) in root
+            .get("configs")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing configs"))?
+        {
+            let u = |k: &str| -> Result<usize> {
+                cj.get(k)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("config {cname} missing {k}"))
+            };
+            configs.insert(
+                cname.clone(),
+                ModelConfig {
+                    name: cname.clone(),
+                    vocab: u("vocab")?,
+                    d: u("d")?,
+                    n_heads: u("n_heads")?,
+                    n_layers: u("n_layers")?,
+                    ffn: u("ffn")?,
+                    seq: u("seq")?,
+                    b_train: u("b_train")?,
+                    b_eval: u("b_eval")?,
+                    lora_rank: u("lora_rank")?,
+                },
+            );
+        }
+        let mut param_spec = HashMap::new();
+        for (cname, sj) in root
+            .get("param_spec")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing param_spec"))?
+        {
+            let mut spec = Vec::new();
+            for entry in sj.as_arr().ok_or_else(|| anyhow!("bad spec"))? {
+                let name = entry
+                    .idx(0)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("bad spec name"))?
+                    .to_string();
+                let shape: Vec<usize> = entry
+                    .idx(1)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("bad spec shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                spec.push((name, shape));
+            }
+            param_spec.insert(cname.clone(), spec);
+        }
+        let linears = root
+            .get("linears")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing linears"))?
+            .iter()
+            .filter_map(|j| j.as_str().map(str::to_string))
+            .collect();
+        let mut artifacts = HashMap::new();
+        for aj in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let gets = |k: &str| -> Result<String> {
+                aj.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let spec = ArtifactSpec {
+                name: gets("name")?,
+                base: gets("base")?,
+                config: gets("config")?,
+                file: gets("file")?,
+                inputs: aj
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing inputs"))?
+                    .iter()
+                    .map(io_from_json)
+                    .collect::<Result<_>>()?,
+                outputs: aj
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing outputs"))?
+                    .iter()
+                    .map(io_from_json)
+                    .collect::<Result<_>>()?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { configs, param_spec, linears, artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "configs": {"tiny": {"vocab":256,"d":128,"n_heads":4,"n_layers":4,
+        "ffn":352,"seq":128,"b_train":8,"b_eval":4,"rope_theta":10000.0,
+        "lora_rank":8,"name":"tiny"}},
+      "param_spec": {"tiny": [["embed",[256,128]],["norm_f",[128]]]},
+      "linears": ["wq","wk","wv","wo","w_gate","w_up","w_down"],
+      "artifacts": [{"name":"head_fwd_tiny","base":"head_fwd",
+        "config":"tiny","file":"head_fwd_tiny.hlo.txt",
+        "inputs":[{"name":"h","shape":[4,128,128],"dtype":"f32"},
+                  {"name":"tokens","shape":[4,128],"dtype":"i32"}],
+        "outputs":[{"name":"nll_sum","shape":[],"dtype":"f32"}]}]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.configs["tiny"].d, 128);
+        assert_eq!(m.param_spec["tiny"][0].0, "embed");
+        assert_eq!(m.linears.len(), 7);
+        let art = &m.artifacts["head_fwd_tiny"];
+        assert_eq!(art.inputs[1].dtype, "i32");
+        assert_eq!(art.input_index("tokens"), Some(1));
+        assert_eq!(art.outputs[0].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_missing_sections() {
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The contract with the Python build step is `artifacts/manifest.json`:
+//! every artifact's input/output names, shapes and dtypes in positional
+//! order. The executor binds inputs by name, validates shapes eagerly (a
+//! mis-ordered literal would otherwise produce silent garbage), compiles
+//! each HLO module once, and caches the loaded executable.
+
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+use crate::tensor::Tensor;
+
+/// A host-side input value: f32 tensor or i32 token array.
+#[derive(Debug, Clone)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(s, _) => s,
+        }
+    }
+
+    pub fn tokens(shape: &[usize], data: Vec<i32>) -> Value {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Value::I32(shape.to_vec(), data)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // single-copy construction (perf iteration 1, EXPERIMENTS.md §Perf):
+        // vec1().reshape() costs two copies + a reshape allocation, which
+        // dominates input binding on the 40-tensor lm_grad upload path.
+        // PTQ161_SLOW_LITERALS=1 re-enables the old path for A/B timing.
+        if std::env::var_os("PTQ161_SLOW_LITERALS").is_some() {
+            let dims: Vec<i64> =
+                self.shape().iter().map(|&d| d as i64).collect();
+            return Ok(match self {
+                Value::F32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
+                Value::I32(_, v) => xla::Literal::vec1(v).reshape(&dims)?,
+            });
+        }
+        let lit = match self {
+            Value::F32(t) => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &t.shape,
+                bytes_of(&t.data),
+            )?,
+            Value::I32(s, v) => {
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    s,
+                    bytes_of(v),
+                )?
+            }
+        };
+        Ok(lit)
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Value {
+        Value::F32(t)
+    }
+}
+
+impl From<&Tensor> for Value {
+    fn from(t: &Tensor) -> Value {
+        Value::F32(t.clone())
+    }
+}
+
+fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(
+            xs.as_ptr() as *const u8,
+            std::mem::size_of_val(xs),
+        )
+    }
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// execution counter per artifact, for the perf report
+    pub exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads manifest.json, creates the CPU
+    /// PJRT client; executables compile lazily on first use).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
+    }
+
+    fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Compile an artifact ahead of time (e.g. before a timed section).
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.load(name).map(|_| ())
+    }
+
+    /// Execute `name` with positionally-ordered inputs; validates count,
+    /// shape and dtype against the manifest, returns outputs as Tensors in
+    /// manifest order (all our artifact outputs are f32).
+    pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        // borrow (not clone) the spec: allocation-free validation on the
+        // hot loop (perf iteration 2, EXPERIMENTS.md §Perf)
+        let spec = self.artifact(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest wants {}",
+                inputs.len(),
+                spec.inputs.len()
+            );
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != io.shape.as_slice() {
+                bail!(
+                    "{name}: input '{}' shape {:?} != manifest {:?}",
+                    io.name,
+                    v.shape(),
+                    io.shape
+                );
+            }
+            let want_i32 = io.dtype == "i32";
+            let got_i32 = matches!(v, Value::I32(..));
+            if want_i32 != got_i32 {
+                bail!("{name}: input '{}' dtype mismatch", io.name);
+            }
+        }
+        let exe = self.load(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        *self
+            .exec_counts
+            .borrow_mut()
+            .entry(name.to_string())
+            .or_insert(0) += 1;
+        let bufs = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        let outs = result
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
+        if outs.len() != spec.outputs.len() {
+            bail!(
+                "{name}: {} outputs, manifest wants {}",
+                outs.len(),
+                spec.outputs.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(outs.len());
+        for (lit, io) in outs.iter().zip(&spec.outputs) {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("output {}: {e:?}", io.name))?;
+            tensors.push(Tensor::from_vec(&io.shape, data));
+        }
+        Ok(tensors)
+    }
+
+    /// Run by (base, config) pair, the common call-site pattern.
+    pub fn run_cfg(
+        &self,
+        base: &str,
+        config: &str,
+        inputs: &[Value],
+    ) -> Result<Vec<Tensor>> {
+        self.run(&format!("{base}_{config}"), inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes() {
+        let t = Tensor::zeros(&[2, 3]);
+        let v: Value = t.into();
+        assert_eq!(v.shape(), &[2, 3]);
+        let tok = Value::tokens(&[2, 2], vec![1, 2, 3, 4]);
+        assert_eq!(tok.shape(), &[2, 2]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn token_shape_checked() {
+        let _ = Value::tokens(&[2, 2], vec![1, 2, 3]);
+    }
+}

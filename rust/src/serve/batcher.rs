@@ -1,0 +1,112 @@
+//! Dynamic batcher: groups incoming generation requests into fixed-width
+//! device batches (b_eval lanes), FIFO with a max-wait cut. The coordinator
+//! invariants tested here (capacity, no starvation, FIFO within batch) are
+//! the property-test surface for the serving layer.
+
+use std::collections::VecDeque;
+
+use super::GenRequest;
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub capacity: usize,
+    queue: VecDeque<(u64, GenRequest)>,
+    next_id: u64,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize) -> Batcher {
+        assert!(capacity > 0);
+        Batcher { capacity, queue: VecDeque::new(), next_id: 0 }
+    }
+
+    pub fn submit(&mut self, req: GenRequest) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back((id, req));
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Pop the next batch (up to capacity, FIFO). Empty queue -> None.
+    pub fn next_batch(&mut self) -> Option<Vec<(u64, GenRequest)>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let n = self.capacity.min(self.queue.len());
+        Some(self.queue.drain(..n).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn req(n: usize) -> GenRequest {
+        GenRequest { prompt: "x".repeat(n % 40 + 1), max_new_tokens: 4 }
+    }
+
+    #[test]
+    fn fifo_order_within_and_across_batches() {
+        let mut b = Batcher::new(3);
+        let ids: Vec<u64> = (0..7).map(|i| b.submit(req(i))).collect();
+        let mut drained = Vec::new();
+        while let Some(batch) = b.next_batch() {
+            assert!(batch.len() <= 3);
+            drained.extend(batch.into_iter().map(|(id, _)| id));
+        }
+        assert_eq!(drained, ids);
+    }
+
+    #[test]
+    fn batcher_invariants_property() {
+        // invariant: across any submit/drain interleaving, every request is
+        // delivered exactly once, in order, and no batch exceeds capacity
+        check(
+            "batcher-exactly-once-fifo",
+            40,
+            |r: &mut Rng| {
+                let ops = r.below(60) + 5;
+                (0..ops).map(|_| r.below(3)).collect::<Vec<usize>>()
+            },
+            |ops| {
+                let mut b = Batcher::new(4);
+                let mut submitted = Vec::new();
+                let mut delivered = Vec::new();
+                for &op in ops {
+                    if op < 2 {
+                        submitted.push(b.submit(req(op)));
+                    } else if let Some(batch) = b.next_batch() {
+                        if batch.len() > 4 {
+                            return Err("over capacity".into());
+                        }
+                        delivered.extend(batch.into_iter().map(|(i, _)| i));
+                    }
+                }
+                while let Some(batch) = b.next_batch() {
+                    delivered.extend(batch.into_iter().map(|(i, _)| i));
+                }
+                if delivered != submitted {
+                    return Err(format!(
+                        "delivered {delivered:?} != submitted {submitted:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_queue_returns_none() {
+        let mut b = Batcher::new(2);
+        assert!(b.next_batch().is_none());
+        b.submit(req(1));
+        assert!(b.next_batch().is_some());
+        assert!(b.next_batch().is_none());
+    }
+}

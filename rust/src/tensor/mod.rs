@@ -1,0 +1,369 @@
+//! Host-side f32 tensor substrate.
+//!
+//! All quantizers (GPTQ's Hessian/Cholesky math, AWQ's grid search, PTQ1.61's
+//! mask + analytic scaling factors) operate on host weights through this
+//! type; the XLA device is only used for model-graph execution. Row-major,
+//! shape-checked, with exactly the linear-algebra surface the repo needs.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; numel(shape)] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(numel(shape), std),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "rows() on non-2D");
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.shape.len(), 2, "cols() on non-2D");
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.shape[1] + c]
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let c = self.shape[1];
+        &mut self.data[r * c..(r + 1) * c]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(numel(shape), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2D transpose.
+    pub fn t(&self) -> Tensor {
+        let (n, m) = (self.rows(), self.cols());
+        let mut out = Tensor::zeros(&[m, n]);
+        for i in 0..n {
+            for j in 0..m {
+                out.data[j * n + i] = self.data[i * m + j];
+            }
+        }
+        out
+    }
+
+    /// Dense matmul (n,k)x(k,m). Host-side only — device math goes via XLA.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (n, k) = (self.rows(), self.cols());
+        let (k2, m) = (other.rows(), other.cols());
+        assert_eq!(k, k2, "matmul inner dim {k} vs {k2}");
+        let mut out = Tensor::zeros(&[n, m]);
+        for i in 0..n {
+            let a_row = self.row(i);
+            let o_row = &mut out.data[i * m..(i + 1) * m];
+            for (l, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(l);
+                for j in 0..m {
+                    o_row[j] += a * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mse(&self, o: &Tensor) -> f32 {
+        assert_eq!(self.shape, o.shape);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&o.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n as f32
+    }
+
+    pub fn cosine(&self, o: &Tensor) -> f32 {
+        let dot: f32 = self.data.iter().zip(&o.data).map(|(a, b)| a * b).sum();
+        let d = self.frob_norm() * o.frob_norm();
+        if d < 1e-12 {
+            0.0
+        } else {
+            dot / d
+        }
+    }
+
+    /// Column means of |x| — activation channel saliency statistic (Fig 3a).
+    pub fn col_abs_mean(&self) -> Vec<f32> {
+        let (n, m) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m];
+        for i in 0..n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[j] += v.abs();
+            }
+        }
+        for v in out.iter_mut() {
+            *v /= n as f32;
+        }
+        out
+    }
+
+    /// Column means of x^2 — diag(H)/n for GPTQ-style Hessians.
+    pub fn col_sq_mean(&self) -> Vec<f32> {
+        let (n, m) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m];
+        for i in 0..n {
+            for (j, &v) in self.row(i).iter().enumerate() {
+                out[j] += v * v;
+            }
+        }
+        for v in out.iter_mut() {
+            *v /= n as f32;
+        }
+        out
+    }
+
+    /// X^T X accumulated into `acc` (m x m) — GPTQ Hessian accumulation.
+    pub fn xtx_into(&self, acc: &mut Tensor) {
+        let (n, m) = (self.rows(), self.cols());
+        assert_eq!(acc.shape, vec![m, m]);
+        for i in 0..n {
+            let r = self.row(i);
+            for a in 0..m {
+                let ra = r[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let acc_row = &mut acc.data[a * m..(a + 1) * m];
+                for b in 0..m {
+                    acc_row[b] += ra * r[b];
+                }
+            }
+        }
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(if shape.is_empty() { 1 } else { 0 })
+}
+
+/// In-place Cholesky decomposition of a symmetric positive-definite matrix;
+/// returns lower-triangular L with A = L L^T. Used by GPTQ.
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at2(i, j);
+            for k in 0..j {
+                sum -= l.at2(i, k) * l.at2(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(format!("not SPD at {i}: {sum}"));
+                }
+                *l.at2_mut(i, j) = sum.sqrt();
+            } else {
+                *l.at2_mut(i, j) = sum / l.at2(j, j);
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert an SPD matrix via Cholesky (A^-1 = L^-T L^-1). Used by GPTQ's
+/// error-compensation recursion.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    // invert L (lower triangular) by forward substitution
+    let mut linv = Tensor::zeros(&[n, n]);
+    for col in 0..n {
+        linv.data[col * n + col] = 1.0 / l.at2(col, col);
+        for i in col + 1..n {
+            let mut sum = 0.0;
+            for k in col..i {
+                sum += l.at2(i, k) * linv.at2(k, col);
+            }
+            *linv.at2_mut(i, col) = -sum / l.at2(i, i);
+        }
+    }
+    // A^-1 = L^-T L^-1
+    let mut inv = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..n {
+            let mut sum = 0.0;
+            for k in i.max(j)..n {
+                sum += linv.at2(k, i) * linv.at2(k, j);
+            }
+            *inv.at2_mut(i, j) = sum;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 9], 1.0, &mut rng);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // A = M M^T + n*I is SPD
+        let mut rng = Rng::new(2);
+        let m = Tensor::randn(&[6, 6], 1.0, &mut rng);
+        let mut a = m.matmul(&m.t());
+        for i in 0..6 {
+            *a.at2_mut(i, i) += 6.0;
+        }
+        let l = cholesky(&a).unwrap();
+        let rec = l.matmul(&l.t());
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn spd_inverse_is_inverse() {
+        let mut rng = Rng::new(3);
+        let m = Tensor::randn(&[5, 5], 1.0, &mut rng);
+        let mut a = m.matmul(&m.t());
+        for i in 0..5 {
+            *a.at2_mut(i, i) += 5.0;
+        }
+        let inv = spd_inverse(&a).unwrap();
+        let id = a.matmul(&inv);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((id.at2(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn col_stats() {
+        let x = Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 0.0, 3.0, 2.0, 0.0]);
+        assert_eq!(x.col_abs_mean(), vec![2.0, 2.0, 0.0]);
+        assert_eq!(x.col_sq_mean(), vec![5.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn xtx_matches_matmul() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[7, 4], 1.0, &mut rng);
+        let mut acc = Tensor::zeros(&[4, 4]);
+        x.xtx_into(&mut acc);
+        let want = x.t().matmul(&x);
+        for (a, b) in acc.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[3, 3], 1.0, &mut rng);
+        assert!((x.cosine(&x) - 1.0).abs() < 1e-6);
+        assert!((x.cosine(&x.scale(-1.0)) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dim")]
+    fn matmul_shape_checked() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,136 @@
+//! Criterion-like micro-bench harness substrate (criterion unavailable
+//! offline). Used by every target in `rust/benches/` (`harness = false`).
+//!
+//! Warms up, runs timed iterations until a wall-clock budget or iteration
+//! cap, and reports mean / p50 / p95 / min plus throughput. Deterministic
+//! ordering, plain-text output that `cargo bench` streams.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>7} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{:.1}ns", ns)
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    budget: Duration,
+    max_iters: usize,
+    min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(3),
+            max_iters: 10_000,
+            min_iters: 5,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(800),
+            max_iters: 2_000,
+            min_iters: 3,
+        }
+    }
+
+    pub fn with_budget(mut self, d: Duration) -> Self {
+        self.budget = d;
+        self
+    }
+
+    /// Time `f` repeatedly; a final `black_box`-ish sink prevents the
+    /// closure's result from being optimized away.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // warmup
+        for _ in 0..2 {
+            sink(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while (start.elapsed() < self.budget
+            && samples_ns.len() < self.max_iters)
+            || samples_ns.len() < self.min_iters
+        {
+            let t0 = Instant::now();
+            sink(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p50_ns: samples_ns[n / 2],
+            p95_ns: samples_ns[(n as f64 * 0.95) as usize % n.max(1)],
+            min_ns: samples_ns[0],
+        };
+        res.report();
+        res
+    }
+}
+
+#[inline]
+pub fn sink<T>(x: T) {
+    // volatile read through a pointer defeats dead-code elimination without
+    // std::hint::black_box's unstable history.
+    unsafe {
+        std::ptr::read_volatile(&x as *const T as *const u8);
+    }
+    std::mem::forget(x);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bencher::quick().with_budget(Duration::from_millis(50));
+        let r = b.run("noop", || 1 + 1);
+        assert!(r.iters >= 3);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert_eq!(fmt_ns(500.0), "500.0ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50us");
+        assert_eq!(fmt_ns(3_000_000.0), "3.00ms");
+        assert_eq!(fmt_ns(2_000_000_000.0), "2.000s");
+    }
+}

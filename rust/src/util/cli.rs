@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser substrate (no clap offline).
+//!
+//! Supports `cmd sub --flag --key value positional` style: the binary pulls
+//! a subcommand, then options by name with typed accessors and defaults.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(mut argv: Vec<String>) -> Args {
+        if !argv.is_empty() {
+            argv.remove(0); // program name
+        }
+        let subcommand = match argv.first() {
+            Some(a) if !a.starts_with('-') => Some(argv.remove(0)),
+            _ => None,
+        };
+        let mut positional = Vec::new();
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { subcommand, positional, options, flags }
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().collect())
+    }
+
+    pub fn str_opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize_opt(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f32_opt(&self, name: &str, default: f32) -> f32 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_opt(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        let mut v = vec!["prog".to_string()];
+        v.extend(args.iter().map(|s| s.to_string()));
+        Args::parse(v)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = mk(&["quantize", "--method", "ptq161", "--ratio", "0.2"]);
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.str_opt("method", "x"), "ptq161");
+        assert!((a.f32_opt("ratio", 0.0) - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn equals_style_and_flags() {
+        // bare `--flag value` is ambiguous without a schema; flags either
+        // come last or use `--key=value` form for options
+        let a = mk(&["eval", "pos1", "--steps=50", "--verbose"]);
+        assert_eq!(a.usize_opt("steps", 0), 50);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.usize_opt("missing", 7), 7);
+        assert!(!a.flag("nope"));
+    }
+}

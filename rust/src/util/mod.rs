@@ -1,0 +1,9 @@
+//! Substrate utilities built in-repo (the offline environment has no
+//! serde/clap/criterion/proptest/rand): JSON, RNG, CLI parsing, a bench
+//! harness, and property-based testing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;

@@ -1,0 +1,132 @@
+//! Property-based testing substrate (proptest unavailable offline).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`,
+//! asserts `prop` on each, and on failure performs greedy shrinking via the
+//! input's `Shrink` implementation before panicking with the minimized
+//! counterexample. Coordinator invariants (batching, packing, masking) are
+//! tested through this module.
+
+use super::rng::Rng;
+
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller inputs; empty when fully minimized.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            vec![self / 2, self - 1]
+        }
+    }
+}
+
+impl Shrink for f32 {
+    fn shrink(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            vec![]
+        } else {
+            vec![0.0, self / 2.0]
+        }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // halve the vector, drop one element, shrink one element
+        out.push(self[..self.len() / 2].to_vec());
+        let mut drop_last = self.clone();
+        drop_last.pop();
+        out.push(drop_last);
+        if let Some(smaller) = self[0].shrink().into_iter().next() {
+            let mut v = self.clone();
+            v[0] = smaller;
+            out.push(v);
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink on failure.
+pub fn check<T, G, P>(name: &str, cases: usize, mut generate: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let seed = 0xC0FFEE ^ name.len() as u64;
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let minimized = shrink_loop(input, &prop);
+            panic!(
+                "property '{name}' failed (case {case}): {msg}\n\
+                 minimized counterexample: {minimized:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink, P: Fn(&T) -> Result<(), String>>(
+    mut failing: T,
+    prop: &P,
+) -> T {
+    'outer: for _ in 0..200 {
+        for cand in failing.shrink() {
+            if prop(&cand).is_err() {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("sum-commutes", 100, |r| (r.below(100), r.below(100)),
+              |(a, b)| {
+                  if a + b == b + a { Ok(()) } else { Err("!".into()) }
+              });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimized counterexample")]
+    fn failing_property_shrinks() {
+        check("always-small", 50, |r| r.below(1000) + 10, |x| {
+            if *x < 5 { Ok(()) } else { Err(format!("{x} too big")) }
+        });
+    }
+
+    #[test]
+    fn shrink_vec_reduces_len() {
+        let v = vec![5usize, 6, 7, 8];
+        let cands = v.shrink();
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+}

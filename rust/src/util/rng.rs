@@ -1,0 +1,158 @@
+//! Deterministic RNG substrate (no `rand` crate offline): SplitMix64 core
+//! with normal / uniform / choice / Zipf helpers. Every stochastic component
+//! in the repo (init, corpus, calibration sampling, quantizer search seeds)
+//! goes through this so runs are reproducible from a single seed.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.wrapping_add(0x9e3779b97f4a7c15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9e3779b97f4a7c15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f32 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos())
+            as f32
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal() * std).collect()
+    }
+
+    /// Sample k distinct indices from [0, n) (partial Fisher-Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` (word frequencies
+    /// for the synthetic corpus follow this, like natural language).
+    pub fn zipf(&mut self, n: usize, s: f64, cdf: &[f64]) -> usize {
+        debug_assert_eq!(cdf.len(), n);
+        let _ = s;
+        let u = self.f64();
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(n - 1),
+        }
+    }
+}
+
+/// Precompute the Zipf CDF once (zipf() does a binary search per draw).
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut w: Vec<f64> = (1..=n).map(|r| 1.0 / (r as f64).powf(s)).collect();
+    let total: f64 = w.iter().sum();
+    let mut acc = 0.0;
+    for x in w.iter_mut() {
+        acc += *x / total;
+        *x = acc;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f32> = (0..20000).map(|_| r.f32()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(2);
+        let xs: Vec<f32> = (0..40000).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / xs.len() as f32;
+        let var: f32 =
+            xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+                / xs.len() as f32;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(3);
+        let picked = r.choose_k(100, 20);
+        assert_eq!(picked.len(), 20);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(sorted.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn zipf_is_head_heavy() {
+        let n = 1000;
+        let cdf = zipf_cdf(n, 1.1);
+        let mut r = Rng::new(4);
+        let mut head = 0;
+        for _ in 0..10000 {
+            if r.zipf(n, 1.1, &cdf) < 20 {
+                head += 1;
+            }
+        }
+        assert!(head > 4000, "head draws: {head}");
+    }
+}
