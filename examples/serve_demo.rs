@@ -1,6 +1,6 @@
-//! Serving demo: batched greedy generation from the quantized model with
-//! latency/throughput reporting (paper section F) plus the packed-memory
-//! comparison of Table 12.
+//! Serving demo: continuous-batching generation from the quantized model
+//! with queue/decode latency accounting (paper section F) plus the
+//! packed-memory comparison of Table 12.
 //!
 //!   cargo run --release --example serve_demo
 
@@ -11,49 +11,42 @@ use ptq161::experiments::ExperimentCtx;
 use ptq161::packing::bitwidth::BitScheme;
 use ptq161::packing::memory::table12_row;
 use ptq161::serve::batcher::Batcher;
-use ptq161::serve::{generate_batch, GenRequest, ServeStats};
+use ptq161::serve::{Engine, GenRequest, MetricsRegistry};
 
 fn main() -> Result<()> {
     let mut ctx = ExperimentCtx::quick()?;
     let qm = ctx.quantized("tiny", "ptq161", true)?;
     let pipe = Pipeline::new(&ctx.rt, "tiny")?;
+    let model = ModelEval::Dense(&qm.params);
 
+    // skewed generation lengths: continuous batching refills the short
+    // requests' lanes while the long ones keep decoding
     let prompts = [
-        "the quiet river of alda holds the ",
-        "key boris is ",
-        "3 plus 4 equals ",
-        "the golden tower of celia ",
-        "you know darin finds a ",
-        "in the end it was the ",
-        "the ancient engine of elena ",
-        "key mira is ",
+        ("the quiet river of alda holds the ", 24),
+        ("key boris is ", 6),
+        ("3 plus 4 equals ", 4),
+        ("the golden tower of celia ", 24),
+        ("you know darin finds a ", 6),
+        ("in the end it was the ", 8),
+        ("the ancient engine of elena ", 24),
+        ("key mira is ", 6),
     ];
     let mut batcher = Batcher::new(pipe.cfg.b_eval);
-    for p in prompts {
-        batcher.submit(GenRequest { prompt: p.into(), max_new_tokens: 12 });
+    for (p, n) in prompts {
+        batcher.submit(GenRequest { prompt: p.into(), max_new_tokens: n });
     }
-    let mut stats = ServeStats::default();
-    let model = ModelEval::Dense(&qm.params);
-    while let Some(batch) = batcher.next_batch() {
-        let reqs: Vec<GenRequest> =
-            batch.iter().map(|(_, r)| r.clone()).collect();
-        let t0 = std::time::Instant::now();
-        let resps = generate_batch(&pipe, &model, &reqs)?;
-        stats.total_ms += t0.elapsed().as_secs_f64() * 1000.0;
-        for r in resps {
-            println!("-> {}", r.text.replace('\n', " "));
-            stats.requests += 1;
-            stats.total_new_tokens += r.new_tokens;
-            stats.per_request_ms.push(r.latency_ms);
-        }
+    let mut metrics = MetricsRegistry::new("serve_demo");
+    let mut engine = Engine::new(&pipe, &model);
+    let resps = engine.run(&mut batcher, &mut metrics)?;
+    for r in resps {
+        let text: String = r.text.replace('\n', " ").chars().take(64).collect();
+        println!("-> [{:>2}] +{:<2} tok  {text}", r.id, r.new_tokens);
     }
-    println!(
-        "\nserved {} requests | throughput {:.1} tok/s | p50 {:.0} ms | p95 {:.0} ms",
-        stats.requests,
-        stats.throughput_tok_s(),
-        stats.p50_ms(),
-        stats.p95_ms()
-    );
+    println!();
+    metrics.print_summary();
+    let path = ptq161::runs_dir().join("serve_demo_metrics.json");
+    metrics.write_json(&path)?;
+    println!("metrics written to {}", path.display());
 
     println!("\npacked checkpoint sizes at real LLaMA shapes (Table 12):");
     for (label, scheme) in [

@@ -1,0 +1,19 @@
+"""Collection guards: the build-time Python layer needs JAX (and the
+kernel sweep needs hypothesis). CI runners and minimal dev machines may
+have neither — skip those modules gracefully instead of erroring at
+collection, so `pytest python/tests` is green everywhere and simply runs
+more of the suite where the deps exist."""
+
+import importlib.util
+
+collect_ignore = []
+
+if importlib.util.find_spec("jax") is None:
+    collect_ignore += [
+        "test_aot.py",
+        "test_kernel.py",
+        "test_kernels.py",
+        "test_model.py",
+    ]
+elif importlib.util.find_spec("hypothesis") is None:
+    collect_ignore += ["test_kernels.py"]

@@ -46,9 +46,16 @@ impl<'a> Pipeline<'a> {
         Params::init(self.param_spec(), seed)
     }
 
-    /// tokens (b_eval, t) -> hidden states
+    /// tokens (b, t) -> hidden states. The batch dimension is derived from
+    /// the token count: the serve engine runs compacted batches of active
+    /// lanes (b <= b_eval), the eval pipeline always passes b_eval rows.
     pub fn embed(&self, params: &Params, tokens: &[i32]) -> Result<Tensor> {
-        let (b, t) = (self.cfg.b_eval, self.cfg.seq);
+        let t = self.cfg.seq;
+        assert!(
+            !tokens.is_empty() && tokens.len() % t == 0,
+            "tokens must be a whole number of {t}-wide rows"
+        );
+        let b = tokens.len() / t;
         let out = self.rt.run_cfg(
             "embed_fwd",
             &self.cfg.name,
@@ -116,14 +123,20 @@ impl<'a> Pipeline<'a> {
         Ok(out.into_iter().next().unwrap())
     }
 
-    /// Final norm + head: returns (nll_sum, logits).
+    /// Final norm + head: returns (nll_sum, logits). Batch dimension is
+    /// derived from the token count, matching `embed`.
     pub fn head(
         &self,
         params: &Params,
         h: &Tensor,
         tokens: &[i32],
     ) -> Result<(f32, Tensor)> {
-        let (b, t) = (self.cfg.b_eval, self.cfg.seq);
+        let t = self.cfg.seq;
+        assert!(
+            !tokens.is_empty() && tokens.len() % t == 0,
+            "tokens must be a whole number of {t}-wide rows"
+        );
+        let b = tokens.len() / t;
         let out = self.rt.run_cfg(
             "head_fwd",
             &self.cfg.name,

@@ -5,7 +5,9 @@
 //!   preprocess  --model tiny --steps 120
 //!   quantize    --model tiny --method ptq161 [--preprocessed]
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
-//!   serve       --model tiny --method ptq161 --requests 8
+//!   serve       --model tiny --method ptq161 --requests 16 [--drain]
+//!               (quick-scale by default; --full for the full pipeline;
+//!               writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
@@ -13,7 +15,8 @@ use anyhow::Result;
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::experiments::{self, ExperimentCtx};
-use ptq161::serve::{generate_batch, GenRequest};
+use ptq161::serve::batcher::Batcher;
+use ptq161::serve::{Engine, GenRequest, MetricsRegistry};
 use ptq161::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -62,42 +65,48 @@ fn main() -> Result<()> {
             }
         }
         "serve" => {
-            let mut ctx = ctx_from(&args)?;
+            // serving wants a ready model, not a long experiment: default
+            // to quick-scale quantization unless --full is passed
+            let mut ctx = if args.flag("full") {
+                ExperimentCtx::new(true)?
+            } else {
+                ExperimentCtx::quick()?
+            };
             let model = args.str_opt("model", "tiny");
             let method = args.str_opt("method", "ptq161");
             let n = args.usize_opt("requests", 8);
             let qm = ctx.quantized(&model, &method, method == "ptq161")?;
             let pipe = Pipeline::new(&ctx.rt, &model)?;
-            let mut batcher = ptq161::serve::batcher::Batcher::new(pipe.cfg.b_eval);
+            let me = ModelEval::Dense(&qm.params);
+            let mut batcher = Batcher::new(pipe.cfg.b_eval);
+            // skewed request lengths: the workload continuous batching is
+            // built for (one long request no longer stalls three lanes)
             for i in 0..n {
+                let max_new = if i % 4 == 3 { 48 } else { 6 };
                 batcher.submit(GenRequest {
                     prompt: format!("the quiet river of alda {}", i % 3),
-                    max_new_tokens: 16,
+                    max_new_tokens: max_new,
                 });
             }
-            let mut stats = ptq161::serve::ServeStats::default();
-            while let Some(batch) = batcher.next_batch() {
-                let reqs: Vec<GenRequest> =
-                    batch.iter().map(|(_, r)| r.clone()).collect();
-                let t0 = std::time::Instant::now();
-                let resps =
-                    generate_batch(&pipe, &ModelEval::Dense(&qm.params), &reqs)?;
-                let ms = t0.elapsed().as_secs_f64() * 1000.0;
-                for r in &resps {
-                    stats.requests += 1;
-                    stats.total_new_tokens += r.new_tokens;
-                    stats.per_request_ms.push(r.latency_ms);
-                    println!("-> {:?}", &r.text[..r.text.len().min(72)]);
-                }
-                stats.total_ms += ms;
+            let label = if args.flag("drain") { "drain" } else { "continuous" };
+            let mut metrics = MetricsRegistry::new(label);
+            let mut engine = Engine::new(&pipe, &me);
+            let resps = if args.flag("drain") {
+                engine.run_drain(&mut batcher, &mut metrics)?
+            } else {
+                engine.run(&mut batcher, &mut metrics)?
+            };
+            for r in &resps {
+                let preview: String = r.text.chars().take(56).collect();
+                println!(
+                    "-> [{:>2}] +{:<3} tok  queue {:>5.0} ms  decode {:>6.0} ms  {preview:?}",
+                    r.id, r.new_tokens, r.queue_ms, r.decode_ms
+                );
             }
-            println!(
-                "served {} reqs: {:.1} tok/s, p50 {:.0} ms, p95 {:.0} ms",
-                stats.requests,
-                stats.throughput_tok_s(),
-                stats.p50_ms(),
-                stats.p95_ms()
-            );
+            metrics.print_summary();
+            let path = ptq161::runs_dir().join("serve_metrics.json");
+            metrics.write_json(&path)?;
+            println!("metrics written to {}", path.display());
         }
         "experiment" | "all" => {
             let mut ctx = ctx_from(&args)?;

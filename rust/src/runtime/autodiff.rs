@@ -1,0 +1,966 @@
+//! Reverse-mode autodiff tape over host tensors.
+//!
+//! The native backend (runtime::native) builds every model graph — forward
+//! *and* the three gradient artifacts (`lm_grad`, `lora_grad`,
+//! `block_opt_grad`) — out of the ops defined here, so the whole system
+//! runs without an XLA toolchain. Each op computes eagerly on push and
+//! registers a backward closure capturing exactly the values it needs;
+//! `Tape::backward` walks the (already topologically ordered) tape in
+//! reverse accumulating gradients per node.
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-5;
+pub const ROPE_THETA: f32 = 10000.0;
+
+pub type NodeId = usize;
+
+type BackFn = Box<dyn Fn(&Tensor) -> Vec<(NodeId, Tensor)>>;
+
+#[derive(Default)]
+pub struct Tape {
+    vals: Vec<Tensor>,
+    backs: Vec<Option<BackFn>>,
+}
+
+fn add_into(acc: &mut Tensor, x: &Tensor) {
+    debug_assert_eq!(acc.shape, x.shape);
+    for (a, b) in acc.data.iter_mut().zip(&x.data) {
+        *a += b;
+    }
+}
+
+/// Run `f(row_index, row_slice)` over the rows of a flat buffer, splitting
+/// the rows across threads when the buffer is big enough to pay for it.
+pub(crate) fn par_rows(
+    out: &mut [f32],
+    row_len: usize,
+    f: &(dyn Fn(usize, &mut [f32]) + Sync),
+) {
+    if row_len == 0 || out.is_empty() {
+        return;
+    }
+    let rows = out.len() / row_len;
+    // scoped threads are spawned per call, so only split work that is
+    // comfortably larger than the ~tens-of-microseconds spawn cost, and
+    // keep the thread count proportional to the row count
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min((rows / 128).max(1))
+        .min(8);
+    if threads <= 1 || out.len() < (1 << 16) {
+        for (r, chunk) in out.chunks_mut(row_len).enumerate() {
+            f(r, chunk);
+        }
+        return;
+    }
+    let per = rows.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (ti, block) in out.chunks_mut(per * row_len).enumerate() {
+            s.spawn(move || {
+                for (r, chunk) in block.chunks_mut(row_len).enumerate() {
+                    f(ti * per + r, chunk);
+                }
+            });
+        }
+    });
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    fn push(&mut self, val: Tensor, back: Option<BackFn>) -> NodeId {
+        self.vals.push(val);
+        self.backs.push(back);
+        self.vals.len() - 1
+    }
+
+    /// Graph input: a leaf (parameter) or a constant. Gradients accumulate
+    /// into its slot either way; the caller decides which slots it reads.
+    pub fn input(&mut self, t: Tensor) -> NodeId {
+        self.push(t, None)
+    }
+
+    pub fn val(&self, id: NodeId) -> &Tensor {
+        &self.vals[id]
+    }
+
+    /// Reverse pass from a scalar root. Returns one gradient slot per node
+    /// (None where no gradient flowed); interior slots are consumed, input
+    /// slots are left filled for the caller.
+    pub fn backward(&self, root: NodeId) -> Vec<Option<Tensor>> {
+        let mut grads: Vec<Option<Tensor>> = (0..self.vals.len()).map(|_| None).collect();
+        let root_shape = self.vals[root].shape.clone();
+        grads[root] = Some(Tensor::ones(&root_shape));
+        for id in (0..=root).rev() {
+            if self.backs[id].is_none() {
+                continue;
+            }
+            let Some(g) = grads[id].take() else { continue };
+            let back = self.backs[id].as_ref().unwrap();
+            for (pid, contrib) in back(&g) {
+                debug_assert!(pid < id, "tape must be topologically ordered");
+                if grads[pid].is_none() {
+                    grads[pid] = Some(contrib);
+                } else {
+                    add_into(grads[pid].as_mut().unwrap(), &contrib);
+                }
+            }
+        }
+        grads
+    }
+
+    /// Gradient of an input node after `backward`, zeros if disconnected.
+    pub fn grad(grads: &[Option<Tensor>], id: NodeId, shape: &[usize]) -> Tensor {
+        grads[id].clone().unwrap_or_else(|| Tensor::zeros(shape))
+    }
+
+    // ------------------------------------------------------------------
+    // elementwise ops
+    // ------------------------------------------------------------------
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let y = self.vals[a].add(&self.vals[b]);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                vec![(a, g.clone()), (b, g.clone())]
+            })),
+        )
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let av = self.vals[a].clone();
+        let bv = self.vals[b].clone();
+        let y = av.zip(&bv, |x, z| x * z);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                vec![(a, g.zip(&bv, |gi, z| gi * z)), (b, g.zip(&av, |gi, x| gi * x))]
+            })),
+        )
+    }
+
+    pub fn scale(&mut self, a: NodeId, c: f32) -> NodeId {
+        let y = self.vals[a].scale(c);
+        self.push(y, Some(Box::new(move |g| vec![(a, g.scale(c))])))
+    }
+
+    pub fn silu(&mut self, a: NodeId) -> NodeId {
+        let av = self.vals[a].clone();
+        let y = av.map(|x| x / (1.0 + (-x).exp()));
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let dx = g.zip(&av, |gi, x| {
+                    let s = 1.0 / (1.0 + (-x).exp());
+                    gi * s * (1.0 + x * (1.0 - s))
+                });
+                vec![(a, dx)]
+            })),
+        )
+    }
+
+    pub fn reshape(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        let old = self.vals[a].shape.clone();
+        let y = self.vals[a].clone().reshape(shape);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                vec![(a, g.clone().reshape(&old))]
+            })),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // embedding / norm / linear
+    // ------------------------------------------------------------------
+
+    /// h[r] = embed[tokens[r]] over r in 0..b*t; output (b, t, d).
+    pub fn gather(&mut self, embed: NodeId, tokens: &[i32], b: usize, t: usize) -> NodeId {
+        let ev = &self.vals[embed];
+        let (vocab, d) = (ev.shape[0], ev.shape[1]);
+        assert_eq!(tokens.len(), b * t, "gather token count");
+        let mut y = Tensor::zeros(&[b, t, d]);
+        for (r, &tok) in tokens.iter().enumerate() {
+            let tok = (tok.max(0) as usize).min(vocab - 1);
+            y.data[r * d..(r + 1) * d].copy_from_slice(&ev.data[tok * d..(tok + 1) * d]);
+        }
+        let toks: Vec<i32> = tokens.to_vec();
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let mut de = Tensor::zeros(&[vocab, d]);
+                for (r, &tok) in toks.iter().enumerate() {
+                    let tok = (tok.max(0) as usize).min(vocab - 1);
+                    let dst = &mut de.data[tok * d..(tok + 1) * d];
+                    let src = &g.data[r * d..(r + 1) * d];
+                    for (a, s) in dst.iter_mut().zip(src) {
+                        *a += s;
+                    }
+                }
+                vec![(embed, de)]
+            })),
+        )
+    }
+
+    /// y = x * g / sqrt(mean(x^2, last) + EPS); x (..., d), g (d).
+    pub fn rmsnorm(&mut self, x: NodeId, gain: NodeId) -> NodeId {
+        let xv = self.vals[x].clone();
+        let gv = self.vals[gain].clone();
+        let d = *xv.shape.last().unwrap();
+        assert_eq!(gv.shape, vec![d], "rmsnorm gain shape");
+        let rows = xv.numel() / d;
+        let mut y = Tensor::zeros(&xv.shape);
+        let mut inv = vec![0.0f32; rows];
+        for r in 0..rows {
+            let xr = &xv.data[r * d..(r + 1) * d];
+            let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32 + EPS;
+            let rinv = 1.0 / ms.sqrt();
+            inv[r] = rinv;
+            let yr = &mut y.data[r * d..(r + 1) * d];
+            for i in 0..d {
+                yr[i] = xr[i] * gv.data[i] * rinv;
+            }
+        }
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let mut dx = Tensor::zeros(&xv.shape);
+                let mut dg = Tensor::zeros(&[d]);
+                for r in 0..rows {
+                    let xr = &xv.data[r * d..(r + 1) * d];
+                    let gr = &g.data[r * d..(r + 1) * d];
+                    let rinv = inv[r];
+                    let mut dot = 0.0f32;
+                    for i in 0..d {
+                        dot += gr[i] * gv.data[i] * xr[i];
+                    }
+                    let c = rinv * rinv * rinv * dot / d as f32;
+                    let dxr = &mut dx.data[r * d..(r + 1) * d];
+                    for i in 0..d {
+                        dxr[i] = rinv * gr[i] * gv.data[i] - c * xr[i];
+                        dg.data[i] += gr[i] * xr[i] * rinv;
+                    }
+                }
+                vec![(x, dx), (gain, dg)]
+            })),
+        )
+    }
+
+    /// y = x @ w^T over the last axis; x (..., in), w (out, in).
+    pub fn linear(&mut self, x: NodeId, w: NodeId) -> NodeId {
+        let xv = self.vals[x].clone();
+        let wv = self.vals[w].clone();
+        let inn = *xv.shape.last().unwrap();
+        let (out, w_in) = (wv.shape[0], wv.shape[1]);
+        assert_eq!(inn, w_in, "linear contraction {inn} vs {w_in}");
+        let rows = xv.numel() / inn;
+        let mut yshape = xv.shape.clone();
+        *yshape.last_mut().unwrap() = out;
+        let mut y = Tensor::zeros(&yshape);
+        {
+            let xd = &xv.data;
+            let wd = &wv.data;
+            par_rows(&mut y.data, out, &|r, yr| {
+                let xr = &xd[r * inn..(r + 1) * inn];
+                for (o, yo) in yr.iter_mut().enumerate() {
+                    let wr = &wd[o * inn..(o + 1) * inn];
+                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
+                }
+            });
+        }
+        let xshape = xv.shape.clone();
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let mut dx = Tensor::zeros(&xshape);
+                {
+                    let gd = &g.data;
+                    let wd = &wv.data;
+                    par_rows(&mut dx.data, inn, &|r, dxr| {
+                        let gr = &gd[r * out..(r + 1) * out];
+                        for (o, &go) in gr.iter().enumerate() {
+                            if go == 0.0 {
+                                continue;
+                            }
+                            let wr = &wd[o * inn..(o + 1) * inn];
+                            for (a, b) in dxr.iter_mut().zip(wr) {
+                                *a += go * b;
+                            }
+                        }
+                    });
+                }
+                let mut dw = Tensor::zeros(&[out, inn]);
+                {
+                    let gd = &g.data;
+                    let xd = &xv.data;
+                    par_rows(&mut dw.data, inn, &|o, dwr| {
+                        for r in 0..rows {
+                            let go = gd[r * out + o];
+                            if go == 0.0 {
+                                continue;
+                            }
+                            let xr = &xd[r * inn..(r + 1) * inn];
+                            for (a, b) in dwr.iter_mut().zip(xr) {
+                                *a += go * b;
+                            }
+                        }
+                    });
+                }
+                vec![(x, dx), (w, dw)]
+            })),
+        )
+    }
+
+    /// Plain 2-D matmul: a (n, k) @ b (k, m) -> (n, m). Used for LoRA B@A.
+    pub fn matmul2d(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let av = self.vals[a].clone();
+        let bv = self.vals[b].clone();
+        let y = av.matmul(&bv);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let da = g.matmul(&bv.t());
+                let db = av.t().matmul(g);
+                vec![(a, da), (b, db)]
+            })),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // attention
+    // ------------------------------------------------------------------
+
+    /// Rotary embedding over (b, t, h, hd); rotation by position-dependent
+    /// angles — the backward pass is the transposed rotation.
+    pub fn rope(&mut self, x: NodeId, theta: f32) -> NodeId {
+        let xv = self.vals[x].clone();
+        let (b, t, nh, hd) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
+        let half = hd / 2;
+        let mut cos = vec![0.0f32; t * half];
+        let mut sin = vec![0.0f32; t * half];
+        for ti in 0..t {
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(i as f32 / half as f32);
+                let ang = ti as f32 * freq;
+                cos[ti * half + i] = ang.cos();
+                sin[ti * half + i] = ang.sin();
+            }
+        }
+        let mut y = Tensor::zeros(&xv.shape);
+        for bi in 0..b {
+            for ti in 0..t {
+                for hi in 0..nh {
+                    let base = ((bi * t + ti) * nh + hi) * hd;
+                    for i in 0..half {
+                        let (c, s) = (cos[ti * half + i], sin[ti * half + i]);
+                        let x1 = xv.data[base + i];
+                        let x2 = xv.data[base + half + i];
+                        y.data[base + i] = x1 * c - x2 * s;
+                        y.data[base + half + i] = x1 * s + x2 * c;
+                    }
+                }
+            }
+        }
+        let shape = xv.shape.clone();
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let mut dx = Tensor::zeros(&shape);
+                for bi in 0..b {
+                    for ti in 0..t {
+                        for hi in 0..nh {
+                            let base = ((bi * t + ti) * nh + hi) * hd;
+                            for i in 0..half {
+                                let (c, s) = (cos[ti * half + i], sin[ti * half + i]);
+                                let g1 = g.data[base + i];
+                                let g2 = g.data[base + half + i];
+                                dx.data[base + i] = g1 * c + g2 * s;
+                                dx.data[base + half + i] = -g1 * s + g2 * c;
+                            }
+                        }
+                    }
+                }
+                vec![(x, dx)]
+            })),
+        )
+    }
+
+    /// Causal attention scores: q, k (b, t, h, hd) -> (b, h, t, t), scaled
+    /// by 1/sqrt(hd). Entries above the diagonal are left at zero (the
+    /// causal softmax never reads them).
+    pub fn attn_scores(&mut self, q: NodeId, k: NodeId) -> NodeId {
+        let qv = self.vals[q].clone();
+        let kv = self.vals[k].clone();
+        let (b, t, nh, hd) = (qv.shape[0], qv.shape[1], qv.shape[2], qv.shape[3]);
+        let inv = 1.0 / (hd as f32).sqrt();
+        let idx4 = move |bi: usize, ti: usize, hi: usize| ((bi * t + ti) * nh + hi) * hd;
+        let mut s = Tensor::zeros(&[b, nh, t, t]);
+        for bi in 0..b {
+            for hi in 0..nh {
+                for ti in 0..t {
+                    let qr = &qv.data[idx4(bi, ti, hi)..idx4(bi, ti, hi) + hd];
+                    let srow = ((bi * nh + hi) * t + ti) * t;
+                    for si in 0..=ti {
+                        let kr = &kv.data[idx4(bi, si, hi)..idx4(bi, si, hi) + hd];
+                        s.data[srow + si] =
+                            qr.iter().zip(kr).map(|(a, c)| a * c).sum::<f32>() * inv;
+                    }
+                }
+            }
+        }
+        let qshape = qv.shape.clone();
+        self.push(
+            s,
+            Some(Box::new(move |g| {
+                let mut dq = Tensor::zeros(&qshape);
+                let mut dk = Tensor::zeros(&qshape);
+                for bi in 0..b {
+                    for hi in 0..nh {
+                        for ti in 0..t {
+                            let grow = ((bi * nh + hi) * t + ti) * t;
+                            for si in 0..=ti {
+                                let gs = g.data[grow + si] * inv;
+                                if gs == 0.0 {
+                                    continue;
+                                }
+                                let qb = idx4(bi, ti, hi);
+                                let kb = idx4(bi, si, hi);
+                                for c in 0..hd {
+                                    dq.data[qb + c] += gs * kv.data[kb + c];
+                                    dk.data[kb + c] += gs * qv.data[qb + c];
+                                }
+                            }
+                        }
+                    }
+                }
+                vec![(q, dq), (k, dk)]
+            })),
+        )
+    }
+
+    /// Row-wise softmax over the causal prefix of each (b, h, t, :) row.
+    pub fn causal_softmax(&mut self, s: NodeId) -> NodeId {
+        let sv = self.vals[s].clone();
+        let (b, nh, t) = (sv.shape[0], sv.shape[1], sv.shape[2]);
+        let mut p = Tensor::zeros(&sv.shape);
+        for bi in 0..b {
+            for hi in 0..nh {
+                for ti in 0..t {
+                    let row = ((bi * nh + hi) * t + ti) * t;
+                    let mx = sv.data[row..=row + ti]
+                        .iter()
+                        .cloned()
+                        .fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0f32;
+                    for si in 0..=ti {
+                        let e = (sv.data[row + si] - mx).exp();
+                        p.data[row + si] = e;
+                        z += e;
+                    }
+                    for si in 0..=ti {
+                        p.data[row + si] /= z;
+                    }
+                }
+            }
+        }
+        let pv = p.clone();
+        self.push(
+            p,
+            Some(Box::new(move |g| {
+                let mut ds = Tensor::zeros(&pv.shape);
+                for bi in 0..b {
+                    for hi in 0..nh {
+                        for ti in 0..t {
+                            let row = ((bi * nh + hi) * t + ti) * t;
+                            let mut dot = 0.0f32;
+                            for si in 0..=ti {
+                                dot += g.data[row + si] * pv.data[row + si];
+                            }
+                            for si in 0..=ti {
+                                ds.data[row + si] =
+                                    pv.data[row + si] * (g.data[row + si] - dot);
+                            }
+                        }
+                    }
+                }
+                vec![(s, ds)]
+            })),
+        )
+    }
+
+    /// ctx[b,t,h,c] = sum_s p[b,h,t,s] * v[b,s,h,c].
+    pub fn attn_ctx(&mut self, p: NodeId, v: NodeId) -> NodeId {
+        let pv = self.vals[p].clone();
+        let vv = self.vals[v].clone();
+        let (b, nh, t) = (pv.shape[0], pv.shape[1], pv.shape[2]);
+        let hd = vv.shape[3];
+        let idx4 = move |bi: usize, ti: usize, hi: usize| ((bi * t + ti) * nh + hi) * hd;
+        let mut ctx = Tensor::zeros(&vv.shape);
+        for bi in 0..b {
+            for hi in 0..nh {
+                for ti in 0..t {
+                    let prow = ((bi * nh + hi) * t + ti) * t;
+                    let cb = idx4(bi, ti, hi);
+                    for si in 0..=ti {
+                        let pij = pv.data[prow + si];
+                        if pij == 0.0 {
+                            continue;
+                        }
+                        let vb = idx4(bi, si, hi);
+                        for c in 0..hd {
+                            ctx.data[cb + c] += pij * vv.data[vb + c];
+                        }
+                    }
+                }
+            }
+        }
+        self.push(
+            ctx,
+            Some(Box::new(move |g| {
+                let mut dp = Tensor::zeros(&pv.shape);
+                let mut dv = Tensor::zeros(&vv.shape);
+                for bi in 0..b {
+                    for hi in 0..nh {
+                        for ti in 0..t {
+                            let prow = ((bi * nh + hi) * t + ti) * t;
+                            let gb = idx4(bi, ti, hi);
+                            for si in 0..=ti {
+                                let vb = idx4(bi, si, hi);
+                                let mut acc = 0.0f32;
+                                let pij = pv.data[prow + si];
+                                for c in 0..hd {
+                                    let gc = g.data[gb + c];
+                                    acc += gc * vv.data[vb + c];
+                                    dv.data[vb + c] += pij * gc;
+                                }
+                                dp.data[prow + si] = acc;
+                            }
+                        }
+                    }
+                }
+                vec![(p, dp), (v, dv)]
+            })),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // losses
+    // ------------------------------------------------------------------
+
+    /// Sum of next-token NLL over all (b, t-1) positions; logits
+    /// (b, t, vocab), targets tokens[b, pos+1]. Returns a scalar node.
+    pub fn nll_sum(&mut self, logits: NodeId, tokens: &[i32], b: usize, t: usize) -> NodeId {
+        let lv = self.vals[logits].clone();
+        let vocab = lv.shape[2];
+        assert_eq!(tokens.len(), b * t, "nll token count");
+        let toks: Vec<i32> = tokens.to_vec();
+        let mut nll = 0.0f64;
+        for bi in 0..b {
+            for pos in 0..t - 1 {
+                let row = &lv.data[(bi * t + pos) * vocab..(bi * t + pos + 1) * vocab];
+                let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let lse =
+                    row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln() + mx;
+                let tgt = (toks[bi * t + pos + 1].max(0) as usize).min(vocab - 1);
+                nll += (lse - row[tgt]) as f64;
+            }
+        }
+        let y = Tensor::from_vec(&[], vec![nll as f32]);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let gs = g.data[0];
+                let mut dl = Tensor::zeros(&lv.shape);
+                for bi in 0..b {
+                    for pos in 0..t - 1 {
+                        let base = (bi * t + pos) * vocab;
+                        let row = &lv.data[base..base + vocab];
+                        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let z: f32 = row.iter().map(|&x| (x - mx).exp()).sum();
+                        let tgt = (toks[bi * t + pos + 1].max(0) as usize).min(vocab - 1);
+                        let drow = &mut dl.data[base..base + vocab];
+                        for v in 0..vocab {
+                            drow[v] = gs * (row[v] - mx).exp() / z;
+                        }
+                        drow[tgt] -= gs;
+                    }
+                }
+                vec![(logits, dl)]
+            })),
+        )
+    }
+
+    /// Eq. 5 distance to a constant target: MSE + nlc_w * (-log cos-sim).
+    pub fn distance(&mut self, f2: NodeId, target: &Tensor, nlc_w: f32) -> NodeId {
+        let av = self.vals[f2].clone();
+        assert_eq!(av.shape, target.shape, "distance shape");
+        let tv = target.clone();
+        let n = av.numel() as f32;
+        let mse: f32 = av
+            .data
+            .iter()
+            .zip(&tv.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / n;
+        let dot: f32 = av.data.iter().zip(&tv.data).map(|(a, b)| a * b).sum();
+        let na = av.frob_norm();
+        let nb = tv.frob_norm();
+        let denom = (na * nb).max(1e-8);
+        let cos = dot / denom;
+        let cc = cos.clamp(1e-3, 1.0);
+        let loss = mse + nlc_w * -cc.ln();
+        let y = Tensor::from_vec(&[], vec![loss]);
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                let gs = g.data[0];
+                let mut da = Tensor::zeros(&av.shape);
+                let dnlc_dcos = if cos > 1e-3 && cos < 1.0 { -1.0 / cos } else { 0.0 };
+                let na2 = (na * na).max(1e-12);
+                for i in 0..av.data.len() {
+                    let dmse = 2.0 * (av.data[i] - tv.data[i]) / n;
+                    let dcos = tv.data[i] / denom - cos * av.data[i] / na2;
+                    da.data[i] = gs * (dmse + nlc_w * dnlc_dcos * dcos);
+                }
+                vec![(f2, da)]
+            })),
+        )
+    }
+
+    // ------------------------------------------------------------------
+    // quantization ops
+    // ------------------------------------------------------------------
+
+    /// PTQ1.61 fake quantization with a straight-through estimator:
+    /// forward is the analytic decomposition's dequantized weight, the
+    /// gradient passes through unchanged (paper section 3.4).
+    pub fn ste_quant(&mut self, w: NodeId, mask: Vec<bool>) -> NodeId {
+        let wv = &self.vals[w];
+        let y = crate::quant::ptq161::initial_parts(wv, &mask).dequantize();
+        self.push(y, Some(Box::new(move |g| vec![(w, g.clone())])))
+    }
+
+    /// Fused PTQ1.61 quantized linear (the Pallas kernel's semantics):
+    /// y = x @ Wq'^T + (x @ |sign_ns|[0]) ⊗ mu with
+    /// Wq' = w_sal + (r1 a_s)[:,None] * r2[None,:] * sign_ns.
+    /// Gradients flow to x and the four learnable vectors; w_sal / sign_ns
+    /// are constants of the block-wise optimization.
+    #[allow(clippy::too_many_arguments)]
+    pub fn qlinear(
+        &mut self,
+        x: NodeId,
+        a_s: NodeId,
+        r1: NodeId,
+        r2: NodeId,
+        mu: NodeId,
+        w_sal: &Tensor,
+        sign: &Tensor,
+    ) -> NodeId {
+        let xv = self.vals[x].clone();
+        let asv = self.vals[a_s].clone();
+        let r1v = self.vals[r1].clone();
+        let r2v = self.vals[r2].clone();
+        let muv = self.vals[mu].clone();
+        let wsal = w_sal.clone();
+        let signv = sign.clone();
+        let (out, inn) = (wsal.shape[0], wsal.shape[1]);
+        assert_eq!(*xv.shape.last().unwrap(), inn, "qlinear contraction");
+        let rows = xv.numel() / inn;
+        // reconstruct Wq' once (Eq. 9)
+        let mut wq = Tensor::zeros(&[out, inn]);
+        for o in 0..out {
+            let c = r1v.data[o] * asv.data[o];
+            let wr = &mut wq.data[o * inn..(o + 1) * inn];
+            let sr = &signv.data[o * inn..(o + 1) * inn];
+            let wsr = &wsal.data[o * inn..(o + 1) * inn];
+            for i in 0..inn {
+                wr[i] = wsr[i] + c * r2v.data[i] * sr[i];
+            }
+        }
+        // binarized-column indicator from the first sign row
+        let ns: Vec<f32> = signv.data[..inn].iter().map(|v| v.abs()).collect();
+        let mut xs = vec![0.0f32; rows];
+        for (r, x_s) in xs.iter_mut().enumerate() {
+            let xr = &xv.data[r * inn..(r + 1) * inn];
+            *x_s = xr.iter().zip(&ns).map(|(a, b)| a * b).sum();
+        }
+        let mut yshape = xv.shape.clone();
+        *yshape.last_mut().unwrap() = out;
+        let mut y = Tensor::zeros(&yshape);
+        {
+            let xd = &xv.data;
+            let wd = &wq.data;
+            let mud = &muv.data;
+            let xsd = &xs;
+            par_rows(&mut y.data, out, &|r, yr| {
+                let xr = &xd[r * inn..(r + 1) * inn];
+                for (o, yo) in yr.iter_mut().enumerate() {
+                    let wr = &wd[o * inn..(o + 1) * inn];
+                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>()
+                        + xsd[r] * mud[o];
+                }
+            });
+        }
+        let xshape = xv.shape.clone();
+        self.push(
+            y,
+            Some(Box::new(move |g| {
+                // dwq = g^T x, shared by all alpha gradients
+                let mut dwq = Tensor::zeros(&[out, inn]);
+                {
+                    let gd = &g.data;
+                    let xd = &xv.data;
+                    par_rows(&mut dwq.data, inn, &|o, dwr| {
+                        for r in 0..rows {
+                            let go = gd[r * out + o];
+                            if go == 0.0 {
+                                continue;
+                            }
+                            let xr = &xd[r * inn..(r + 1) * inn];
+                            for (a, b) in dwr.iter_mut().zip(xr) {
+                                *a += go * b;
+                            }
+                        }
+                    });
+                }
+                let mut da_s = Tensor::zeros(&[out]);
+                let mut dr1 = Tensor::zeros(&[out]);
+                let mut dr2 = Tensor::zeros(&[inn]);
+                let mut dmu = Tensor::zeros(&[out]);
+                for o in 0..out {
+                    let sr = &signv.data[o * inn..(o + 1) * inn];
+                    let dwr = &dwq.data[o * inn..(o + 1) * inn];
+                    let mut gr2_sum = 0.0f32;
+                    let c = r1v.data[o] * asv.data[o];
+                    for i in 0..inn {
+                        let gi = dwr[i] * sr[i];
+                        gr2_sum += gi * r2v.data[i];
+                        dr2.data[i] += gi * c;
+                    }
+                    da_s.data[o] = gr2_sum * r1v.data[o];
+                    dr1.data[o] = gr2_sum * asv.data[o];
+                }
+                for r in 0..rows {
+                    let gr = &g.data[r * out..(r + 1) * out];
+                    for (o, &go) in gr.iter().enumerate() {
+                        dmu.data[o] += go * xs[r];
+                    }
+                }
+                // dx = g @ wq + (g . mu) * ns
+                let mut dx = Tensor::zeros(&xshape);
+                {
+                    let gd = &g.data;
+                    let wd = &wq.data;
+                    let mud = &muv.data;
+                    let nsd = &ns;
+                    par_rows(&mut dx.data, inn, &|r, dxr| {
+                        let gr = &gd[r * out..(r + 1) * out];
+                        let mut gmu = 0.0f32;
+                        for (o, &go) in gr.iter().enumerate() {
+                            if go != 0.0 {
+                                let wr = &wd[o * inn..(o + 1) * inn];
+                                for (a, b) in dxr.iter_mut().zip(wr) {
+                                    *a += go * b;
+                                }
+                                gmu += go * mud[o];
+                            }
+                        }
+                        if gmu != 0.0 {
+                            for (a, b) in dxr.iter_mut().zip(nsd) {
+                                *a += gmu * b;
+                            }
+                        }
+                    });
+                }
+                vec![(x, dx), (a_s, da_s), (r1, dr1), (r2, dr2), (mu, dmu)]
+            })),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Directional finite-difference check of d(loss)/d(input) for a graph
+    /// builder `f`: perturb `x` along a random direction and compare the
+    /// numeric slope against the tape gradient.
+    fn fd_check(shape: &[usize], seed: u64, f: impl Fn(&mut Tape, NodeId) -> NodeId) {
+        let mut rng = Rng::new(seed);
+        let x0 = Tensor::randn(shape, 1.0, &mut rng);
+        let dir = Tensor::randn(shape, 1.0, &mut rng);
+        let norm = dir.frob_norm().max(1e-8);
+        let dir = dir.scale(1.0 / norm);
+        let loss_at = |xt: &Tensor| -> f32 {
+            let mut tp = Tape::new();
+            let xid = tp.input(xt.clone());
+            let root = f(&mut tp, xid);
+            tp.val(root).data[0]
+        };
+        let mut tp = Tape::new();
+        let xid = tp.input(x0.clone());
+        let root = f(&mut tp, xid);
+        let grads = tp.backward(root);
+        let gx = Tape::grad(&grads, xid, shape);
+        let analytic: f64 = gx
+            .data
+            .iter()
+            .zip(&dir.data)
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum();
+        let eps = 1e-2f32;
+        let lp = loss_at(&x0.add(&dir.scale(eps)));
+        let lm = loss_at(&x0.sub(&dir.scale(eps)));
+        let numeric = ((lp - lm) as f64) / (2.0 * eps as f64);
+        let tol = 0.05 * numeric.abs().max(analytic.abs()).max(0.05);
+        assert!(
+            (numeric - analytic).abs() < tol,
+            "fd {numeric} vs analytic {analytic}"
+        );
+    }
+
+    #[test]
+    fn linear_gradient_matches_fd() {
+        let mut rng = Rng::new(11);
+        let w = Tensor::randn(&[5, 6], 1.0, &mut rng);
+        let tgt = Tensor::zeros(&[2, 3, 5]);
+        fd_check(&[2, 3, 6], 1, move |tp, x| {
+            let wid = tp.input(w.clone());
+            let y = tp.linear(x, wid);
+            tp.distance(y, &tgt, 0.0)
+        });
+    }
+
+    #[test]
+    fn rmsnorm_gradient_matches_fd() {
+        let mut rng = Rng::new(12);
+        let gain = Tensor::randn(&[8], 0.5, &mut rng).map(|v| v + 1.0);
+        let tgt = Tensor::zeros(&[3, 8]);
+        fd_check(&[3, 8], 2, move |tp, x| {
+            let gid = tp.input(gain.clone());
+            let y = tp.rmsnorm(x, gid);
+            tp.distance(y, &tgt, 0.0)
+        });
+    }
+
+    #[test]
+    fn attention_pipeline_gradient_matches_fd() {
+        // q -> rope -> scores -> softmax -> ctx against fixed k, v
+        let (b, t, nh, hd) = (1, 4, 2, 4);
+        let mut rng = Rng::new(13);
+        let k = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let v = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let tgt = Tensor::zeros(&[b, t, nh, hd]);
+        fd_check(&[b, t, nh, hd], 3, move |tp, q| {
+            let kid = tp.input(k.clone());
+            let vid = tp.input(v.clone());
+            let qr = tp.rope(q, ROPE_THETA);
+            let kr = tp.rope(kid, ROPE_THETA);
+            let s = tp.attn_scores(qr, kr);
+            let p = tp.causal_softmax(s);
+            let ctx = tp.attn_ctx(p, vid);
+            tp.distance(ctx, &tgt, 0.0)
+        });
+    }
+
+    #[test]
+    fn silu_mul_gradient_matches_fd() {
+        let mut rng = Rng::new(14);
+        let other = Tensor::randn(&[4, 5], 1.0, &mut rng);
+        let tgt = Tensor::zeros(&[4, 5]);
+        fd_check(&[4, 5], 4, move |tp, x| {
+            let oid = tp.input(other.clone());
+            let s = tp.silu(x);
+            let y = tp.mul(s, oid);
+            tp.distance(y, &tgt, 0.0)
+        });
+    }
+
+    #[test]
+    fn nll_gradient_matches_fd() {
+        let (b, t, vocab) = (2, 4, 7);
+        let mut rng = Rng::new(15);
+        let tokens: Vec<i32> = (0..b * t).map(|_| rng.below(vocab) as i32).collect();
+        fd_check(&[b, t, vocab], 5, move |tp, logits| {
+            let n = tp.nll_sum(logits, &tokens, b, t);
+            tp.scale(n, 0.25)
+        });
+    }
+
+    #[test]
+    fn distance_with_angular_term_matches_fd() {
+        // bias the input toward the target so cos sits well inside the
+        // differentiable band of the clip (away from 1e-3 and 1.0)
+        let mut rng = Rng::new(16);
+        let tgt = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let bias = tgt.scale(3.0);
+        fd_check(&[3, 4], 6, move |tp, x| {
+            let bid = tp.input(bias.clone());
+            let y = tp.add(x, bid);
+            tp.distance(y, &tgt, 1.0)
+        });
+    }
+
+    #[test]
+    fn qlinear_matches_dense_reconstruction_and_fd() {
+        let (out, inn) = (5, 6);
+        let mut rng = Rng::new(17);
+        let w = Tensor::randn(&[out, inn], 0.5, &mut rng);
+        let mask: Vec<bool> = (0..inn).map(|i| i % 3 == 0).collect();
+        let parts = crate::quant::ptq161::initial_parts(&w, &mask);
+        let deq = parts.dequantize();
+        let x = Tensor::randn(&[2, 3, inn], 1.0, &mut rng);
+        // forward agreement with the dense dequantized weight
+        let mut tp = Tape::new();
+        let xid = tp.input(x.clone());
+        let asid = tp.input(Tensor::from_vec(&[out], parts.alpha_s.clone()));
+        let r1id = tp.input(Tensor::from_vec(&[out], parts.alpha_r1.clone()));
+        let r2id = tp.input(Tensor::from_vec(&[inn], parts.alpha_r2.clone()));
+        let muid = tp.input(Tensor::from_vec(&[out], parts.mu.clone()));
+        let y = tp.qlinear(xid, asid, r1id, r2id, muid, &parts.w_sal, &parts.sign_ns);
+        let wid = tp.input(deq);
+        let ydense = tp.linear(xid, wid);
+        let a = tp.val(y).clone();
+        let bland = tp.val(ydense).clone();
+        assert!(a.mse(&bland) < 1e-9, "fused vs dense {}", a.mse(&bland));
+        // gradient wrt alpha_s via FD
+        let w_sal = parts.w_sal.clone();
+        let sign = parts.sign_ns.clone();
+        let r1v = Tensor::from_vec(&[out], parts.alpha_r1.clone());
+        let r2v = Tensor::from_vec(&[inn], parts.alpha_r2.clone());
+        let muv = Tensor::from_vec(&[out], parts.mu.clone());
+        let tgt = Tensor::zeros(&[2, 3, out]);
+        fd_check(&[out], 7, move |tp, a_s| {
+            let xid = tp.input(x.clone());
+            let r1 = tp.input(r1v.clone());
+            let r2 = tp.input(r2v.clone());
+            let mu = tp.input(muv.clone());
+            let y = tp.qlinear(xid, a_s, r1, r2, mu, &w_sal, &sign);
+            tp.distance(y, &tgt, 0.5)
+        });
+    }
+
+    #[test]
+    fn gather_accumulates_repeated_tokens() {
+        let mut tp = Tape::new();
+        let embed = tp.input(Tensor::from_vec(&[3, 2], vec![1., 2., 3., 4., 5., 6.]));
+        let h = tp.gather(embed, &[0, 2, 0, 1], 1, 4);
+        assert_eq!(tp.val(h).shape, vec![1, 4, 2]);
+        assert_eq!(tp.val(h).data, vec![1., 2., 5., 6., 1., 2., 3., 4.]);
+        let tgt = Tensor::zeros(&[1, 4, 2]);
+        let loss = tp.distance(h, &tgt, 0.0);
+        let grads = tp.backward(loss);
+        let ge = Tape::grad(&grads, embed, &[3, 2]);
+        // token 0 used twice -> its gradient row accumulates both positions
+        let n = 8.0f32;
+        assert!((ge.data[0] - 2.0 * (1.0 + 1.0) / n).abs() < 1e-6);
+        assert!((ge.data[2] - 2.0 * 3.0 / n).abs() < 1e-6);
+    }
+}

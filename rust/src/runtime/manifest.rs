@@ -177,6 +177,233 @@ impl Manifest {
     }
 }
 
+/// Built-in model configs mirroring python/compile/model.py CONFIGS, plus
+/// a "micro" config used by the fast native-backend tests.
+pub fn builtin_configs() -> Vec<ModelConfig> {
+    vec![
+        ModelConfig {
+            name: "tiny".into(),
+            vocab: 256,
+            d: 128,
+            n_heads: 4,
+            n_layers: 4,
+            ffn: 352,
+            seq: 128,
+            b_train: 8,
+            b_eval: 4,
+            lora_rank: 8,
+        },
+        ModelConfig {
+            name: "small".into(),
+            vocab: 256,
+            d: 192,
+            n_heads: 6,
+            n_layers: 6,
+            ffn: 512,
+            seq: 128,
+            b_train: 8,
+            b_eval: 4,
+            lora_rank: 8,
+        },
+        ModelConfig {
+            name: "micro".into(),
+            vocab: 256,
+            d: 32,
+            n_heads: 2,
+            n_layers: 2,
+            ffn: 64,
+            seq: 32,
+            b_train: 4,
+            b_eval: 2,
+            lora_rank: 4,
+        },
+    ]
+}
+
+/// Canonical full-model (name, shape) list (python model.param_spec).
+pub fn param_spec_for(cfg: &ModelConfig) -> Vec<(String, Vec<usize>)> {
+    let mut spec = vec![("embed".to_string(), vec![cfg.vocab, cfg.d])];
+    for l in 0..cfg.n_layers {
+        for name in crate::model::block_param_names(l) {
+            let shape = if name.ends_with("_norm") {
+                vec![cfg.d]
+            } else {
+                let lin = name.split('.').nth(1).unwrap();
+                let (out, inn) = crate::model::linear_shape(cfg, lin);
+                vec![out, inn]
+            };
+            spec.push((name, shape));
+        }
+    }
+    spec.push(("norm_f".into(), vec![cfg.d]));
+    spec.push(("w_out".into(), vec![cfg.vocab, cfg.d]));
+    spec
+}
+
+fn io(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.into(), shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+fn io_i32(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.into(), shape: shape.to_vec(), dtype: "i32".into() }
+}
+
+/// Block parameter IoSpecs without the layer prefix (aot.block_param_ios).
+fn block_param_ios(cfg: &ModelConfig) -> Vec<IoSpec> {
+    let mut v = vec![io("attn_norm", &[cfg.d])];
+    for lin in ["wq", "wk", "wv", "wo"] {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        v.push(io(lin, &[out, inn]));
+    }
+    v.push(io("mlp_norm", &[cfg.d]));
+    for lin in ["w_gate", "w_up", "w_down"] {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        v.push(io(lin, &[out, inn]));
+    }
+    v
+}
+
+/// The 9 artifact specs of one config (mirrors aot.build_artifacts).
+fn artifact_specs(cfg: &ModelConfig) -> Vec<ArtifactSpec> {
+    let (d, ffn, vocab) = (cfg.d, cfg.ffn, cfg.vocab);
+    let (t, be, bt) = (cfg.seq, cfg.b_eval, cfg.b_train);
+    let linears = crate::model::LINEARS;
+    let mk = |base: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| ArtifactSpec {
+        name: format!("{base}_{}", cfg.name),
+        base: base.into(),
+        config: cfg.name.clone(),
+        file: format!("{base}_{}.hlo.txt", cfg.name),
+        inputs,
+        outputs,
+    };
+    let mut arts = Vec::new();
+    arts.push(mk(
+        "embed_fwd",
+        vec![io_i32("tokens", &[be, t]), io("embed", &[vocab, d])],
+        vec![io("h", &[be, t, d])],
+    ));
+    let mut bf_in = vec![io("h", &[be, t, d])];
+    bf_in.extend(block_param_ios(cfg));
+    arts.push(mk("block_fwd", bf_in.clone(), vec![io("h_out", &[be, t, d])]));
+    arts.push(mk(
+        "block_capture",
+        bf_in.clone(),
+        vec![
+            io("x_attn", &[be, t, d]),
+            io("x_o", &[be, t, d]),
+            io("x_mlp", &[be, t, d]),
+            io("x_down", &[be, t, ffn]),
+            io("h_out", &[be, t, d]),
+        ],
+    ));
+    let mut q_in =
+        vec![io("h", &[be, t, d]), io("attn_norm", &[d]), io("mlp_norm", &[d])];
+    for lin in linears {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        q_in.push(io(&format!("{lin}.w_sal"), &[out, inn]));
+        q_in.push(io(&format!("{lin}.sign_ns"), &[out, inn]));
+        q_in.push(io(&format!("{lin}.alpha_s"), &[out]));
+        q_in.push(io(&format!("{lin}.alpha_r1"), &[out]));
+        q_in.push(io(&format!("{lin}.alpha_r2"), &[inn]));
+        q_in.push(io(&format!("{lin}.mu"), &[out]));
+    }
+    arts.push(mk("qblock_fwd", q_in, vec![io("h_out", &[be, t, d])]));
+    let mut w4_in = bf_in.clone();
+    w4_in.extend([
+        io("s_attn", &[d]),
+        io("s_o", &[d]),
+        io("s_mlp", &[d]),
+        io("s_down", &[ffn]),
+    ]);
+    arts.push(mk("qblock_w4a4_fwd", w4_in, vec![io("h_out", &[be, t, d])]));
+    arts.push(mk(
+        "head_fwd",
+        vec![
+            io("h", &[be, t, d]),
+            io("norm_f", &[d]),
+            io("w_out", &[vocab, d]),
+            io_i32("tokens", &[be, t]),
+        ],
+        vec![io("nll_sum", &[]), io("logits", &[be, t, vocab])],
+    ));
+    let spec = param_spec_for(cfg);
+    let mut lm_in: Vec<IoSpec> = spec.iter().map(|(n, s)| io(n, s)).collect();
+    lm_in.push(io_i32("tokens", &[bt, t]));
+    let mut lm_out = vec![io("loss", &[])];
+    lm_out.extend(spec.iter().map(|(n, s)| io(&format!("g.{n}"), s)));
+    arts.push(mk("lm_grad", lm_in, lm_out));
+    let mut lo_in: Vec<IoSpec> = spec.iter().map(|(n, s)| io(n, s)).collect();
+    let mut lo_out = vec![io("loss", &[])];
+    for l in 0..cfg.n_layers {
+        for lin in linears {
+            let (out, inn) = crate::model::linear_shape(cfg, lin);
+            lo_in.push(io(&format!("l{l}.{lin}.A"), &[cfg.lora_rank, inn]));
+            lo_in.push(io(&format!("l{l}.{lin}.B"), &[out, cfg.lora_rank]));
+            lo_out.push(io(&format!("g.l{l}.{lin}.A"), &[cfg.lora_rank, inn]));
+            lo_out.push(io(&format!("g.l{l}.{lin}.B"), &[out, cfg.lora_rank]));
+        }
+    }
+    for l in 0..cfg.n_layers {
+        for lin in linears {
+            let (_, inn) = crate::model::linear_shape(cfg, lin);
+            lo_in.push(io(&format!("l{l}.{lin}.mask"), &[inn]));
+        }
+    }
+    lo_in.push(io_i32("tokens", &[bt, t]));
+    arts.push(mk("lora_grad", lo_in, lo_out));
+    let mut bo_in = Vec::new();
+    let mut bo_out = vec![io("loss", &[])];
+    for lin in linears {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        bo_in.push(io(&format!("{lin}.alpha_s"), &[out]));
+        bo_in.push(io(&format!("{lin}.alpha_r1"), &[out]));
+        bo_in.push(io(&format!("{lin}.alpha_r2"), &[inn]));
+        bo_in.push(io(&format!("{lin}.mu"), &[out]));
+        bo_out.push(io(&format!("g.{lin}.alpha_s"), &[out]));
+        bo_out.push(io(&format!("g.{lin}.alpha_r1"), &[out]));
+        bo_out.push(io(&format!("g.{lin}.alpha_r2"), &[inn]));
+        bo_out.push(io(&format!("g.{lin}.mu"), &[out]));
+    }
+    bo_in.extend([
+        io("x_q", &[be, t, d]),
+        io("f1", &[be, t, d]),
+        io("f3", &[be, t, d]),
+        io("attn_norm", &[d]),
+        io("mlp_norm", &[d]),
+    ]);
+    for lin in linears {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        bo_in.push(io(&format!("{lin}.w_sal"), &[out, inn]));
+        bo_in.push(io(&format!("{lin}.sign_ns"), &[out, inn]));
+    }
+    bo_in.push(io("nlc_w", &[]));
+    arts.push(mk("block_opt_grad", bo_in, bo_out));
+    arts
+}
+
+impl Manifest {
+    /// Built-in manifest for the native backend: what aot.py would write
+    /// for the built-in configs, constructed without any artifacts on disk.
+    pub fn builtin() -> Manifest {
+        let mut configs = HashMap::new();
+        let mut param_spec = HashMap::new();
+        let mut artifacts = HashMap::new();
+        for cfg in builtin_configs() {
+            param_spec.insert(cfg.name.clone(), param_spec_for(&cfg));
+            for a in artifact_specs(&cfg) {
+                artifacts.insert(a.name.clone(), a);
+            }
+            configs.insert(cfg.name.clone(), cfg);
+        }
+        Manifest {
+            configs,
+            param_spec,
+            linears: crate::model::LINEARS.iter().map(|s| s.to_string()).collect(),
+            artifacts,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +436,61 @@ mod tests {
     #[test]
     fn rejects_missing_sections() {
         assert!(Manifest::parse("{}").is_err());
+    }
+
+    #[test]
+    fn builtin_covers_all_configs_and_artifacts() {
+        let m = Manifest::builtin();
+        for c in ["tiny", "small", "micro"] {
+            assert!(m.configs.contains_key(c), "{c} missing");
+            for base in [
+                "embed_fwd",
+                "block_fwd",
+                "block_capture",
+                "qblock_fwd",
+                "qblock_w4a4_fwd",
+                "head_fwd",
+                "lm_grad",
+                "lora_grad",
+                "block_opt_grad",
+            ] {
+                assert!(
+                    m.artifacts.contains_key(&format!("{base}_{c}")),
+                    "{base}_{c} missing"
+                );
+            }
+        }
+        assert_eq!(m.linears.len(), 7);
+    }
+
+    #[test]
+    fn builtin_io_counts_match_python_contract() {
+        let m = Manifest::builtin();
+        let cfg = &m.configs["tiny"];
+        let n_params = 9 * cfg.n_layers + 3;
+        assert_eq!(m.param_spec["tiny"].len(), n_params);
+        let nlin = cfg.n_layers * 7;
+        let lm = &m.artifacts["lm_grad_tiny"];
+        assert_eq!(lm.inputs.len(), n_params + 1);
+        assert_eq!(lm.outputs.len(), n_params + 1);
+        let lo = &m.artifacts["lora_grad_tiny"];
+        assert_eq!(lo.inputs.len(), n_params + 3 * nlin + 1);
+        assert_eq!(lo.outputs.len(), 1 + 2 * nlin);
+        let bo = &m.artifacts["block_opt_grad_tiny"];
+        assert_eq!(bo.inputs.len(), 4 * 7 + 5 + 2 * 7 + 1);
+        assert_eq!(bo.outputs.len(), 1 + 4 * 7);
+        let qb = &m.artifacts["qblock_fwd_tiny"];
+        assert_eq!(qb.inputs.len(), 3 + 6 * 7);
+        assert_eq!(qb.input_index("wq.alpha_s"), Some(5));
+    }
+
+    #[test]
+    fn builtin_param_spec_matches_model_init() {
+        // Params::init must accept the builtin spec verbatim
+        let m = Manifest::builtin();
+        let p = crate::model::Params::init(&m.param_spec["micro"], 1);
+        assert_eq!(p.get("embed").shape, vec![256, 32]);
+        assert_eq!(p.get("l1.w_gate").shape, vec![64, 32]);
+        assert_eq!(p.get("norm_f").shape, vec![32]);
     }
 }

@@ -1,17 +1,27 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: execute the AOT artifact contract.
 //!
 //! The contract with the Python build step is `artifacts/manifest.json`:
 //! every artifact's input/output names, shapes and dtypes in positional
-//! order. The executor binds inputs by name, validates shapes eagerly (a
-//! mis-ordered literal would otherwise produce silent garbage), compiles
-//! each HLO module once, and caches the loaded executable.
+//! order. Execution is served by the native pure-Rust backend
+//! (`runtime::native`), which implements every artifact base — forwards
+//! and gradients — with the exact semantics of python/compile/model.py.
+//! When no artifacts directory exists the manifest itself falls back to
+//! the built-in one (`Manifest::builtin`), so the whole system runs with
+//! zero build-time dependencies; a PJRT/XLA execution path can be added
+//! back behind the same `Runtime::run` contract.
+//!
+//! Inputs are validated eagerly against the manifest. The leading batch
+//! dimension of activation/token inputs is *flexible*: the serve engine
+//! compacts finished lanes out of the batch, so decode cost scales with
+//! the number of active lanes instead of the manifest's full `b_eval`.
 
+pub mod autodiff;
 pub mod manifest;
+pub mod native;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -38,36 +48,6 @@ impl Value {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Value::I32(shape.to_vec(), data)
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        // single-copy construction (perf iteration 1, EXPERIMENTS.md §Perf):
-        // vec1().reshape() costs two copies + a reshape allocation, which
-        // dominates input binding on the 40-tensor lm_grad upload path.
-        // PTQ161_SLOW_LITERALS=1 re-enables the old path for A/B timing.
-        if std::env::var_os("PTQ161_SLOW_LITERALS").is_some() {
-            let dims: Vec<i64> =
-                self.shape().iter().map(|&d| d as i64).collect();
-            return Ok(match self {
-                Value::F32(t) => xla::Literal::vec1(&t.data).reshape(&dims)?,
-                Value::I32(_, v) => xla::Literal::vec1(v).reshape(&dims)?,
-            });
-        }
-        let lit = match self {
-            Value::F32(t) => xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &t.shape,
-                bytes_of(&t.data),
-            )?,
-            Value::I32(s, v) => {
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::S32,
-                    s,
-                    bytes_of(v),
-                )?
-            }
-        };
-        Ok(lit)
-    }
 }
 
 impl From<Tensor> for Value {
@@ -82,41 +62,53 @@ impl From<&Tensor> for Value {
     }
 }
 
-fn bytes_of<T: Copy>(xs: &[T]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(
-            xs.as_ptr() as *const u8,
-            std::mem::size_of_val(xs),
-        )
+/// Inputs whose leading dimension is a batch axis and may legally shrink
+/// below the manifest shape (continuous batching compacts finished lanes).
+/// Larger-than-manifest batches are rejected: a fixed-shape PJRT
+/// executable behind the same contract could never run them.
+const BATCH_FLEX: [&str; 5] = ["tokens", "h", "x_q", "f1", "f3"];
+
+fn shape_ok(io: &IoSpec, got: &[usize]) -> bool {
+    if got == io.shape.as_slice() {
+        return true;
     }
+    BATCH_FLEX.contains(&io.name.as_str())
+        && io.shape.len() >= 2
+        && got.len() == io.shape.len()
+        && got[0] >= 1
+        && got[0] <= io.shape[0]
+        && got[1..] == io.shape[1..]
 }
 
 pub struct Runtime {
-    pub client: xla::PjRtClient,
     pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     /// execution counter per artifact, for the perf report
     pub exec_counts: RefCell<HashMap<String, u64>>,
 }
 
 impl Runtime {
-    /// Open the artifact directory (reads manifest.json, creates the CPU
-    /// PJRT client; executables compile lazily on first use).
+    /// Open the artifact directory. When `manifest.json` exists it is
+    /// parsed and honored (shape/dtype validation against the Python
+    /// build); otherwise the built-in manifest backs everything.
     pub fn open(dir: &Path) -> Result<Runtime> {
         let mpath = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&mpath)
-            .with_context(|| format!("reading {}", mpath.display()))?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir: dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
+        let manifest = if mpath.exists() {
+            let text = std::fs::read_to_string(&mpath)
+                .with_context(|| format!("reading {}", mpath.display()))?;
+            Manifest::parse(&text)?
+        } else {
+            Manifest::builtin()
+        };
+        Ok(Runtime { manifest, exec_counts: RefCell::new(HashMap::new()) })
+    }
+
+    /// A runtime backed purely by the built-in manifest (tests, serving
+    /// without an artifacts directory).
+    pub fn native() -> Runtime {
+        Runtime {
+            manifest: Manifest::builtin(),
             exec_counts: RefCell::new(HashMap::new()),
-        })
+        }
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -126,37 +118,16 @@ impl Runtime {
             .ok_or_else(|| anyhow!("unknown artifact '{name}'"))
     }
 
-    fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let spec = self.artifact(name)?;
-        let path = self.dir.join(&spec.file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
-    }
-
-    /// Compile an artifact ahead of time (e.g. before a timed section).
+    /// Kept for API compatibility: the native backend has nothing to
+    /// precompile, so warming is a manifest lookup.
     pub fn warm(&self, name: &str) -> Result<()> {
-        self.load(name).map(|_| ())
+        self.artifact(name).map(|_| ())
     }
 
     /// Execute `name` with positionally-ordered inputs; validates count,
-    /// shape and dtype against the manifest, returns outputs as Tensors in
-    /// manifest order (all our artifact outputs are f32).
+    /// shape (flexible leading batch dim) and dtype against the manifest,
+    /// returns outputs as Tensors in artifact order.
     pub fn run(&self, name: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
-        // borrow (not clone) the spec: allocation-free validation on the
-        // hot loop (perf iteration 2, EXPERIMENTS.md §Perf)
         let spec = self.artifact(name)?;
         if inputs.len() != spec.inputs.len() {
             bail!(
@@ -166,7 +137,7 @@ impl Runtime {
             );
         }
         for (v, io) in inputs.iter().zip(&spec.inputs) {
-            if v.shape() != io.shape.as_slice() {
+            if !shape_ok(io, v.shape()) {
                 bail!(
                     "{name}: input '{}' shape {:?} != manifest {:?}",
                     io.name,
@@ -180,40 +151,17 @@ impl Runtime {
                 bail!("{name}: input '{}' dtype mismatch", io.name);
             }
         }
-        let exe = self.load(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|v| v.to_literal())
-            .collect::<Result<_>>()?;
         *self
             .exec_counts
             .borrow_mut()
             .entry(name.to_string())
             .or_insert(0) += 1;
-        let bufs = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let result = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        let outs = result
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        if outs.len() != spec.outputs.len() {
-            bail!(
-                "{name}: {} outputs, manifest wants {}",
-                outs.len(),
-                spec.outputs.len()
-            );
-        }
-        let mut tensors = Vec::with_capacity(outs.len());
-        for (lit, io) in outs.iter().zip(&spec.outputs) {
-            let data = lit
-                .to_vec::<f32>()
-                .map_err(|e| anyhow!("output {}: {e:?}", io.name))?;
-            tensors.push(Tensor::from_vec(&io.shape, data));
-        }
-        Ok(tensors)
+        let cfg = self
+            .manifest
+            .configs
+            .get(&spec.config)
+            .ok_or_else(|| anyhow!("{name}: unknown config '{}'", spec.config))?;
+        native::execute(spec, cfg, inputs)
     }
 
     /// Run by (base, config) pair, the common call-site pattern.
@@ -244,5 +192,40 @@ mod tests {
     #[should_panic]
     fn token_shape_checked() {
         let _ = Value::tokens(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn open_falls_back_to_builtin_manifest() {
+        let dir = std::env::temp_dir().join("ptq161_no_artifacts_here");
+        std::fs::create_dir_all(&dir).unwrap();
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.manifest.configs.contains_key("tiny"));
+        assert!(rt.manifest.artifacts.contains_key("lm_grad_tiny"));
+    }
+
+    #[test]
+    fn run_validates_inputs() {
+        let rt = Runtime::native();
+        // wrong input count
+        assert!(rt.run("embed_fwd_micro", &[]).is_err());
+        // wrong dtype: embed slot fed tokens
+        let cfg = rt.manifest.configs["micro"].clone();
+        let toks = Value::tokens(&[cfg.b_eval, cfg.seq], vec![0; cfg.b_eval * cfg.seq]);
+        let bad = rt.run("embed_fwd_micro", &[toks.clone(), toks.clone()]);
+        assert!(bad.is_err());
+        // wrong non-batch shape on the embed table
+        let bad_embed = Value::from(Tensor::zeros(&[cfg.vocab, cfg.d + 1]));
+        assert!(rt.run("embed_fwd_micro", &[toks, bad_embed]).is_err());
+    }
+
+    #[test]
+    fn embed_accepts_smaller_batch() {
+        let rt = Runtime::native();
+        let cfg = rt.manifest.configs["micro"].clone();
+        let embed = Value::from(Tensor::zeros(&[cfg.vocab, cfg.d]));
+        // one lane instead of b_eval lanes: leading dim is flexible
+        let toks = Value::tokens(&[1, cfg.seq], vec![0; cfg.seq]);
+        let out = rt.run("embed_fwd_micro", &[toks, embed]).unwrap();
+        assert_eq!(out[0].shape, vec![1, cfg.seq, cfg.d]);
     }
 }

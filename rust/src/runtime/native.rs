@@ -1,0 +1,435 @@
+//! Native pure-Rust executor for the AOT artifact contract.
+//!
+//! Implements every artifact base the coordinator drives — the forward
+//! passes (`embed_fwd`, `block_fwd`, `block_capture`, `qblock_fwd`,
+//! `qblock_w4a4_fwd`, `head_fwd`) and the three gradient executables
+//! (`lm_grad`, `lora_grad`, `block_opt_grad`) — with semantics matching
+//! python/compile/model.py one for one. Graphs are built on the autodiff
+//! tape (runtime::autodiff); forward-only artifacts simply never call
+//! `backward`. This is what lets the repo build, test, and *serve* without
+//! an XLA toolchain; a PJRT path can slot back in behind the same
+//! `Runtime::run` contract.
+
+use anyhow::{bail, Result};
+
+use super::autodiff::{NodeId, Tape, ROPE_THETA};
+use super::manifest::{ArtifactSpec, ModelConfig};
+use super::Value;
+use crate::model::LINEARS;
+use crate::tensor::Tensor;
+
+/// Offsets of the 7 block linears inside the 9-tensor block parameter list
+/// (attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up, w_down).
+const LINEAR_OFFSETS: [usize; 7] = [1, 2, 3, 4, 6, 7, 8];
+
+fn tensor_of(v: &Value) -> Result<&Tensor> {
+    match v {
+        Value::F32(t) => Ok(t),
+        Value::I32(..) => bail!("expected f32 tensor input"),
+    }
+}
+
+fn tokens_of(v: &Value) -> Result<(&[usize], &[i32])> {
+    match v {
+        Value::I32(s, d) => Ok((s, d)),
+        Value::F32(_) => bail!("expected i32 token input"),
+    }
+}
+
+/// How one block linear is evaluated inside the shared block graph.
+enum Lin<'a> {
+    /// FP or dense-dequantized weight (a tape node, so grads can flow).
+    Dense(NodeId),
+    /// PTQ1.61 fused reconstruction (Eq. 9) with learnable scaling factors.
+    Quant {
+        a_s: NodeId,
+        r1: NodeId,
+        r2: NodeId,
+        mu: NodeId,
+        w_sal: &'a Tensor,
+        sign: &'a Tensor,
+    },
+    /// SmoothQuant W4A4 fake-quant linear (forward-only, Table 13).
+    W4A4 { w: &'a Tensor, smooth: &'a Tensor },
+}
+
+fn apply_lin(tp: &mut Tape, x: NodeId, lin: &Lin) -> NodeId {
+    match lin {
+        Lin::Dense(w) => tp.linear(x, *w),
+        Lin::Quant { a_s, r1, r2, mu, w_sal, sign } => {
+            tp.qlinear(x, *a_s, *r1, *r2, *mu, w_sal, sign)
+        }
+        Lin::W4A4 { w, smooth } => {
+            let y = w4a4_linear(tp.val(x), w, smooth);
+            tp.input(y)
+        }
+    }
+}
+
+/// SmoothQuant W4A4 fake-quant linear: migrate outliers via `smooth`, then
+/// 4-bit symmetric quantization — activations per-tensor, weights per
+/// output row (quant_ops.w4a4_linear).
+fn w4a4_linear(x: &Tensor, w: &Tensor, smooth: &Tensor) -> Tensor {
+    let inn = *x.shape.last().unwrap();
+    let rows = x.numel() / inn;
+    let out = w.shape[0];
+    let qmax = 7.0f32;
+    let mut xs = x.clone();
+    for r in 0..rows {
+        let xr = &mut xs.data[r * inn..(r + 1) * inn];
+        for (v, s) in xr.iter_mut().zip(&smooth.data) {
+            *v /= s;
+        }
+    }
+    let amax = xs.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let xscale = (amax / qmax).max(1e-8);
+    for v in xs.data.iter_mut() {
+        *v = (*v / xscale).round().clamp(-qmax, qmax) * xscale;
+    }
+    let mut wq = w.clone();
+    for o in 0..out {
+        let row = wq.row_mut(o);
+        for (v, s) in row.iter_mut().zip(&smooth.data) {
+            *v *= s;
+        }
+        let wmax = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let wscale = (wmax / qmax).max(1e-8);
+        for v in row.iter_mut() {
+            *v = (*v / wscale).round().clamp(-qmax, qmax) * wscale;
+        }
+    }
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    for r in 0..rows {
+        let xr = &xs.data[r * inn..(r + 1) * inn];
+        let yr = &mut y.data[r * out..(r + 1) * out];
+        for (o, yo) in yr.iter_mut().enumerate() {
+            let wr = &wq.data[o * inn..(o + 1) * inn];
+            *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
+        }
+    }
+    y
+}
+
+struct BlockIo {
+    x_attn: NodeId,
+    x_o: NodeId,
+    x_mlp: NodeId,
+    x_down: NodeId,
+    h_out: NodeId,
+}
+
+/// The shared transformer-block body (model.py `_block_pieces`): returns
+/// the four linear-input capture points plus the block output.
+fn block_graph(
+    tp: &mut Tape,
+    cfg: &ModelConfig,
+    h: NodeId,
+    attn_norm: NodeId,
+    mlp_norm: NodeId,
+    lins: &[Lin],
+) -> BlockIo {
+    assert_eq!(lins.len(), LINEARS.len());
+    let shape = tp.val(h).shape.clone();
+    let (b, t, d) = (shape[0], shape[1], shape[2]);
+    let nh = cfg.n_heads;
+    let hd = d / nh;
+    let x_attn = tp.rmsnorm(h, attn_norm);
+    let q = apply_lin(tp, x_attn, &lins[0]);
+    let k = apply_lin(tp, x_attn, &lins[1]);
+    let v = apply_lin(tp, x_attn, &lins[2]);
+    let q4 = tp.reshape(q, &[b, t, nh, hd]);
+    let k4 = tp.reshape(k, &[b, t, nh, hd]);
+    let v4 = tp.reshape(v, &[b, t, nh, hd]);
+    let qr = tp.rope(q4, ROPE_THETA);
+    let kr = tp.rope(k4, ROPE_THETA);
+    let s = tp.attn_scores(qr, kr);
+    let p = tp.causal_softmax(s);
+    let ctx = tp.attn_ctx(p, v4);
+    let x_o = tp.reshape(ctx, &[b, t, d]);
+    let attn_out = apply_lin(tp, x_o, &lins[3]);
+    let h2 = tp.add(h, attn_out);
+    let x_mlp = tp.rmsnorm(h2, mlp_norm);
+    let gate = apply_lin(tp, x_mlp, &lins[4]);
+    let up = apply_lin(tp, x_mlp, &lins[5]);
+    let sg = tp.silu(gate);
+    let x_down = tp.mul(sg, up);
+    let down = apply_lin(tp, x_down, &lins[6]);
+    let h_out = tp.add(h2, down);
+    BlockIo { x_attn, x_o, x_mlp, x_down, h_out }
+}
+
+/// Final norm + head: (nll node, logits node).
+fn head_graph(
+    tp: &mut Tape,
+    h: NodeId,
+    norm_f: NodeId,
+    w_out: NodeId,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+) -> (NodeId, NodeId) {
+    let xn = tp.rmsnorm(h, norm_f);
+    let logits = tp.linear(xn, w_out);
+    let nll = tp.nll_sum(logits, tokens, b, t);
+    (nll, logits)
+}
+
+/// Number of full-model parameter tensors (embed + 9/block + norm_f +
+/// w_out) — the lm_grad/lora_grad input prefix.
+fn n_params(cfg: &ModelConfig) -> usize {
+    9 * cfg.n_layers + 3
+}
+
+/// Execute one artifact natively. Shapes were validated against the
+/// manifest by `Runtime::run` (with a flexible leading batch dimension);
+/// batch sizes are re-derived here from the actual inputs.
+pub fn execute(spec: &ArtifactSpec, cfg: &ModelConfig, inputs: &[Value]) -> Result<Vec<Tensor>> {
+    match spec.base.as_str() {
+        "embed_fwd" => {
+            let (tshape, toks) = tokens_of(&inputs[0])?;
+            let embed = tensor_of(&inputs[1])?;
+            let (b, t) = (tshape[0], tshape[1]);
+            let mut tp = Tape::new();
+            let e = tp.input(embed.clone());
+            let h = tp.gather(e, toks, b, t);
+            Ok(vec![tp.val(h).clone()])
+        }
+        "block_fwd" | "block_capture" => {
+            let mut tp = Tape::new();
+            let hid = tp.input(tensor_of(&inputs[0])?.clone());
+            let mut ids = Vec::with_capacity(9);
+            for v in &inputs[1..10] {
+                let t = tensor_of(v)?.clone();
+                ids.push(tp.input(t));
+            }
+            let lins: Vec<Lin> =
+                LINEAR_OFFSETS.iter().map(|&o| Lin::Dense(ids[o])).collect();
+            let io = block_graph(&mut tp, cfg, hid, ids[0], ids[5], &lins);
+            if spec.base == "block_fwd" {
+                Ok(vec![tp.val(io.h_out).clone()])
+            } else {
+                Ok(vec![
+                    tp.val(io.x_attn).clone(),
+                    tp.val(io.x_o).clone(),
+                    tp.val(io.x_mlp).clone(),
+                    tp.val(io.x_down).clone(),
+                    tp.val(io.h_out).clone(),
+                ])
+            }
+        }
+        "qblock_fwd" => {
+            if inputs.len() != 3 + 6 * LINEARS.len() {
+                bail!("qblock_fwd wants {} inputs", 3 + 6 * LINEARS.len());
+            }
+            let mut tp = Tape::new();
+            let hid = tp.input(tensor_of(&inputs[0])?.clone());
+            let an = tp.input(tensor_of(&inputs[1])?.clone());
+            let mn = tp.input(tensor_of(&inputs[2])?.clone());
+            let mut lins: Vec<Lin> = Vec::with_capacity(LINEARS.len());
+            for j in 0..LINEARS.len() {
+                let base = 3 + 6 * j;
+                let w_sal = tensor_of(&inputs[base])?;
+                let sign = tensor_of(&inputs[base + 1])?;
+                let a_s = tp.input(tensor_of(&inputs[base + 2])?.clone());
+                let r1 = tp.input(tensor_of(&inputs[base + 3])?.clone());
+                let r2 = tp.input(tensor_of(&inputs[base + 4])?.clone());
+                let mu = tp.input(tensor_of(&inputs[base + 5])?.clone());
+                lins.push(Lin::Quant { a_s, r1, r2, mu, w_sal, sign });
+            }
+            let io = block_graph(&mut tp, cfg, hid, an, mn, &lins);
+            Ok(vec![tp.val(io.h_out).clone()])
+        }
+        "qblock_w4a4_fwd" => {
+            if inputs.len() != 14 {
+                bail!("qblock_w4a4_fwd wants 14 inputs");
+            }
+            let mut tp = Tape::new();
+            let hid = tp.input(tensor_of(&inputs[0])?.clone());
+            let an = tp.input(tensor_of(&inputs[1])?.clone());
+            let mn = tp.input(tensor_of(&inputs[6])?.clone());
+            // q/k/v share s_attn, gate/up share s_mlp (aot.py w4a4_fn)
+            let smooth_idx = [10, 10, 10, 11, 12, 12, 13];
+            let mut lins: Vec<Lin> = Vec::with_capacity(LINEARS.len());
+            for j in 0..LINEARS.len() {
+                lins.push(Lin::W4A4 {
+                    // block params occupy inputs[1..10]; offsets are 0-based
+                    w: tensor_of(&inputs[1 + LINEAR_OFFSETS[j]])?,
+                    smooth: tensor_of(&inputs[smooth_idx[j]])?,
+                });
+            }
+            let io = block_graph(&mut tp, cfg, hid, an, mn, &lins);
+            Ok(vec![tp.val(io.h_out).clone()])
+        }
+        "head_fwd" => {
+            let h = tensor_of(&inputs[0])?;
+            let (b, t) = (h.shape[0], h.shape[1]);
+            let (tshape, toks) = tokens_of(&inputs[3])?;
+            if tshape[0] != b || tshape[1] != t {
+                bail!("head_fwd: h batch {b}x{t} vs tokens {tshape:?}");
+            }
+            let mut tp = Tape::new();
+            let hid = tp.input(h.clone());
+            let nf = tp.input(tensor_of(&inputs[1])?.clone());
+            let wo = tp.input(tensor_of(&inputs[2])?.clone());
+            let (nll, logits) = head_graph(&mut tp, hid, nf, wo, toks, b, t);
+            Ok(vec![tp.val(nll).clone(), tp.val(logits).clone()])
+        }
+        "lm_grad" => {
+            let n = n_params(cfg);
+            if inputs.len() != n + 1 {
+                bail!("lm_grad wants {} inputs, got {}", n + 1, inputs.len());
+            }
+            let (tshape, toks) = tokens_of(&inputs[n])?;
+            let (b, t) = (tshape[0], tshape[1]);
+            let mut tp = Tape::new();
+            let mut ids = Vec::with_capacity(n);
+            for v in &inputs[..n] {
+                let tv = tensor_of(v)?.clone();
+                ids.push(tp.input(tv));
+            }
+            let mut h = tp.gather(ids[0], toks, b, t);
+            for l in 0..cfg.n_layers {
+                let base = 1 + 9 * l;
+                let lins: Vec<Lin> = LINEAR_OFFSETS
+                    .iter()
+                    .map(|&o| Lin::Dense(ids[base + o]))
+                    .collect();
+                let io = block_graph(&mut tp, cfg, h, ids[base], ids[base + 5], &lins);
+                h = io.h_out;
+            }
+            let (nll, _) = head_graph(&mut tp, h, ids[n - 2], ids[n - 1], toks, b, t);
+            let loss = tp.scale(nll, 1.0 / (b * (t - 1)) as f32);
+            let grads = tp.backward(loss);
+            let mut out = Vec::with_capacity(n + 1);
+            out.push(tp.val(loss).clone());
+            for (i, &id) in ids.iter().enumerate() {
+                let shape = tensor_of(&inputs[i])?.shape.clone();
+                out.push(Tape::grad(&grads, id, &shape));
+            }
+            Ok(out)
+        }
+        "lora_grad" => {
+            let n = n_params(cfg);
+            let nlin = cfg.n_layers * LINEARS.len();
+            if inputs.len() != n + 3 * nlin + 1 {
+                bail!("lora_grad wants {} inputs, got {}", n + 3 * nlin + 1, inputs.len());
+            }
+            let (tshape, toks) = tokens_of(&inputs[n + 3 * nlin])?;
+            let (b, t) = (tshape[0], tshape[1]);
+            let mut tp = Tape::new();
+            let mut pids = Vec::with_capacity(n);
+            for v in &inputs[..n] {
+                let tv = tensor_of(v)?.clone();
+                pids.push(tp.input(tv));
+            }
+            let mut ab_ids = Vec::with_capacity(2 * nlin);
+            for v in &inputs[n..n + 2 * nlin] {
+                let tv = tensor_of(v)?.clone();
+                ab_ids.push(tp.input(tv));
+            }
+            let inv_r = 1.0 / cfg.lora_rank as f32;
+            let mut h = tp.gather(pids[0], toks, b, t);
+            for l in 0..cfg.n_layers {
+                let base = 1 + 9 * l;
+                let mut lins: Vec<Lin> = Vec::with_capacity(LINEARS.len());
+                for (j, &off) in LINEAR_OFFSETS.iter().enumerate() {
+                    let idx = l * LINEARS.len() + j;
+                    let ba = tp.matmul2d(ab_ids[2 * idx + 1], ab_ids[2 * idx]);
+                    let delta = tp.scale(ba, inv_r);
+                    let w_eff = tp.add(pids[base + off], delta);
+                    let mask_t = tensor_of(&inputs[n + 2 * nlin + idx])?;
+                    let mask: Vec<bool> = mask_t.data.iter().map(|&x| x > 0.5).collect();
+                    let wq = tp.ste_quant(w_eff, mask);
+                    lins.push(Lin::Dense(wq));
+                }
+                let io = block_graph(&mut tp, cfg, h, pids[base], pids[base + 5], &lins);
+                h = io.h_out;
+            }
+            let (nll, _) = head_graph(&mut tp, h, pids[n - 2], pids[n - 1], toks, b, t);
+            let loss = tp.scale(nll, 1.0 / (b * (t - 1)) as f32);
+            let grads = tp.backward(loss);
+            let mut out = Vec::with_capacity(1 + 2 * nlin);
+            out.push(tp.val(loss).clone());
+            for (i, &id) in ab_ids.iter().enumerate() {
+                let shape = tensor_of(&inputs[n + i])?.shape.clone();
+                out.push(Tape::grad(&grads, id, &shape));
+            }
+            Ok(out)
+        }
+        "block_opt_grad" => {
+            let nl = LINEARS.len();
+            let want = 4 * nl + 5 + 2 * nl + 1;
+            if inputs.len() != want {
+                bail!("block_opt_grad wants {want} inputs, got {}", inputs.len());
+            }
+            let mut tp = Tape::new();
+            let mut learn_ids = Vec::with_capacity(4 * nl);
+            for v in &inputs[..4 * nl] {
+                let tv = tensor_of(v)?.clone();
+                learn_ids.push(tp.input(tv));
+            }
+            let xq = tp.input(tensor_of(&inputs[4 * nl])?.clone());
+            let f1 = tensor_of(&inputs[4 * nl + 1])?;
+            let f3 = tensor_of(&inputs[4 * nl + 2])?;
+            let an = tp.input(tensor_of(&inputs[4 * nl + 3])?.clone());
+            let mn = tp.input(tensor_of(&inputs[4 * nl + 4])?.clone());
+            let consts_base = 4 * nl + 5;
+            let nlc_w = tensor_of(&inputs[consts_base + 2 * nl])?.data[0];
+            let mut lins: Vec<Lin> = Vec::with_capacity(nl);
+            for j in 0..nl {
+                lins.push(Lin::Quant {
+                    a_s: learn_ids[4 * j],
+                    r1: learn_ids[4 * j + 1],
+                    r2: learn_ids[4 * j + 2],
+                    mu: learn_ids[4 * j + 3],
+                    w_sal: tensor_of(&inputs[consts_base + 2 * j])?,
+                    sign: tensor_of(&inputs[consts_base + 2 * j + 1])?,
+                });
+            }
+            let io = block_graph(&mut tp, cfg, xq, an, mn, &lins);
+            let d1 = tp.distance(io.h_out, f1, nlc_w);
+            let d2 = tp.distance(io.h_out, f3, nlc_w);
+            let loss = tp.add(d1, d2);
+            let grads = tp.backward(loss);
+            let mut out = Vec::with_capacity(1 + 4 * nl);
+            out.push(tp.val(loss).clone());
+            for (i, &id) in learn_ids.iter().enumerate() {
+                let shape = tensor_of(&inputs[i])?.shape.clone();
+                out.push(Tape::grad(&grads, id, &shape));
+            }
+            Ok(out)
+        }
+        other => bail!("native backend: unknown artifact base '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn w4a4_quantizes_both_sides() {
+        let x = Tensor::from_vec(&[1, 2, 3], vec![1.0, -2.0, 0.5, 8.0, 0.1, -0.3]);
+        let w = Tensor::from_vec(&[2, 3], vec![0.5, 0.2, -0.1, 1.0, -1.0, 0.25]);
+        let smooth = Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        let y = w4a4_linear(&x, &w, &smooth);
+        assert_eq!(y.shape, vec![1, 2, 2]);
+        // quantization is lossy but bounded: compare against FP product
+        let fp = x.clone().reshape(&[2, 3]).matmul(&w.t());
+        for (a, b) in y.data.iter().zip(&fp.data) {
+            assert!((a - b).abs() < 2.0, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear_offsets_match_block_layout() {
+        // block params: attn_norm, wq, wk, wv, wo, mlp_norm, w_gate, w_up,
+        // w_down — offsets must select the 7 linears in LINEARS order
+        let names = crate::model::block_param_names(0);
+        for (j, &off) in LINEAR_OFFSETS.iter().enumerate() {
+            assert_eq!(names[off], format!("l0.{}", LINEARS[j]));
+        }
+    }
+}

@@ -1,29 +1,75 @@
-//! Dynamic batcher: groups incoming generation requests into fixed-width
-//! device batches (b_eval lanes), FIFO with a max-wait cut. The coordinator
-//! invariants tested here (capacity, no starvation, FIFO within batch) are
-//! the property-test surface for the serving layer.
+//! Admission control for the serve engine: a FIFO queue with deadline and
+//! max-wait awareness.
+//!
+//! Both engine modes admit through `expire_overdue` + `pop_ready` (the
+//! engine's `admit`): continuous mode per freed lane, drain mode whenever
+//! all lanes are free. `next_batch`/`next_batch_timed` pop whole batches
+//! for one-shot callers, and `batch_ready`/`max_wait` are the admission
+//! gate for an asynchronous front-end that has to choose between waiting
+//! for a full batch and cutting a partial one — the synchronous engine's
+//! pre-queued workloads never wait, so nothing in-process consults them.
+//!
+//! The coordinator invariants tested here (capacity, no starvation, FIFO)
+//! are the property-test surface for the serving layer.
 
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use super::GenRequest;
+
+#[derive(Debug, Clone)]
+struct Queued {
+    id: u64,
+    req: GenRequest,
+    submitted: Instant,
+    deadline: Option<Duration>,
+}
 
 #[derive(Debug)]
 pub struct Batcher {
     pub capacity: usize,
-    queue: VecDeque<(u64, GenRequest)>,
+    /// drain-mode cut: launch a partial batch once the oldest request has
+    /// waited this long
+    pub max_wait: Duration,
+    queue: VecDeque<Queued>,
     next_id: u64,
 }
 
 impl Batcher {
     pub fn new(capacity: usize) -> Batcher {
         assert!(capacity > 0);
-        Batcher { capacity, queue: VecDeque::new(), next_id: 0 }
+        Batcher {
+            capacity,
+            max_wait: Duration::from_millis(50),
+            queue: VecDeque::new(),
+            next_id: 0,
+        }
+    }
+
+    pub fn with_max_wait(mut self, max_wait: Duration) -> Batcher {
+        self.max_wait = max_wait;
+        self
     }
 
     pub fn submit(&mut self, req: GenRequest) -> u64 {
+        self.submit_with_deadline(req, None)
+    }
+
+    /// Submit with a queue-time deadline: if the request is still waiting
+    /// for a lane after `deadline`, admission drops it (`expire_overdue`).
+    pub fn submit_with_deadline(
+        &mut self,
+        req: GenRequest,
+        deadline: Option<Duration>,
+    ) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back((id, req));
+        self.queue.push_back(Queued {
+            id,
+            req,
+            submitted: Instant::now(),
+            deadline,
+        });
         id
     }
 
@@ -33,11 +79,61 @@ impl Batcher {
 
     /// Pop the next batch (up to capacity, FIFO). Empty queue -> None.
     pub fn next_batch(&mut self) -> Option<Vec<(u64, GenRequest)>> {
+        self.next_batch_timed().map(|batch| {
+            batch.into_iter().map(|(id, req, _)| (id, req)).collect()
+        })
+    }
+
+    /// Like `next_batch` but also returns each request's submit time so
+    /// the engine can account queue latency.
+    pub fn next_batch_timed(&mut self) -> Option<Vec<(u64, GenRequest, Instant)>> {
         if self.queue.is_empty() {
             return None;
         }
         let n = self.capacity.min(self.queue.len());
-        Some(self.queue.drain(..n).collect())
+        Some(
+            self.queue
+                .drain(..n)
+                .map(|q| (q.id, q.req, q.submitted))
+                .collect(),
+        )
+    }
+
+    /// Drain-mode admission gate: a batch is worth launching when it is
+    /// full, or when the oldest waiter has exceeded `max_wait`.
+    pub fn batch_ready(&self, now: Instant) -> bool {
+        self.queue.len() >= self.capacity
+            || self
+                .queue
+                .front()
+                .map(|q| now.duration_since(q.submitted) >= self.max_wait)
+                .unwrap_or(false)
+    }
+
+    /// Continuous admission: pop the oldest queued request for a freed
+    /// lane. FIFO; deadline filtering is done by `expire_overdue` first.
+    pub fn pop_ready(&mut self, _now: Instant) -> Option<(u64, GenRequest, Instant)> {
+        self.queue.pop_front().map(|q| (q.id, q.req, q.submitted))
+    }
+
+    /// Remove and return every queued request whose deadline elapsed
+    /// before it was admitted.
+    pub fn expire_overdue(&mut self, now: Instant) -> Vec<(u64, GenRequest)> {
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        let mut expired = Vec::new();
+        for q in self.queue.drain(..) {
+            let overdue = q
+                .deadline
+                .map(|d| now.duration_since(q.submitted) >= d)
+                .unwrap_or(false);
+            if overdue {
+                expired.push((q.id, q.req));
+            } else {
+                kept.push_back(q);
+            }
+        }
+        self.queue = kept;
+        expired
     }
 }
 
@@ -108,5 +204,50 @@ mod tests {
         b.submit(req(1));
         assert!(b.next_batch().is_some());
         assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn max_wait_cut() {
+        let mut b = Batcher::new(4).with_max_wait(Duration::from_millis(20));
+        let now = Instant::now();
+        // empty queue is never ready
+        assert!(!b.batch_ready(now + Duration::from_secs(1)));
+        b.submit(req(1));
+        // fresh and underfull: wait for more work
+        assert!(!b.batch_ready(Instant::now()));
+        // the oldest waiter ages past max_wait: cut a partial batch
+        assert!(b.batch_ready(Instant::now() + Duration::from_millis(25)));
+        // a full batch is ready regardless of age
+        for i in 0..3 {
+            b.submit(req(i));
+        }
+        assert!(b.batch_ready(Instant::now()));
+    }
+
+    #[test]
+    fn deadline_expiry_drops_only_overdue() {
+        let mut b = Batcher::new(2);
+        let slow = b.submit_with_deadline(req(1), Some(Duration::from_millis(5)));
+        let patient = b.submit(req(2));
+        let lenient =
+            b.submit_with_deadline(req(3), Some(Duration::from_secs(3600)));
+        let expired = b.expire_overdue(Instant::now() + Duration::from_millis(10));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0, slow);
+        assert_eq!(b.pending(), 2);
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch[0].0, patient);
+        assert_eq!(batch[1].0, lenient);
+    }
+
+    #[test]
+    fn pop_ready_is_fifo() {
+        let mut b = Batcher::new(2);
+        let a = b.submit(req(1));
+        let c = b.submit(req(2));
+        let now = Instant::now();
+        assert_eq!(b.pop_ready(now).unwrap().0, a);
+        assert_eq!(b.pop_ready(now).unwrap().0, c);
+        assert!(b.pop_ready(now).is_none());
     }
 }

@@ -1,0 +1,262 @@
+//! Continuous-batching serve engine.
+//!
+//! A slot-based scheduler over the pipeline's `b_eval` lanes: each decode
+//! step runs one full-window forward over the *compacted* set of active
+//! lanes (the native runtime accepts any leading batch dimension, so cost
+//! scales with active lanes), appends one greedy token per lane, and frees
+//! finished lanes. Freed lanes are refilled from the admission queue on
+//! the next step — a request never waits for the rest of its batch to
+//! drain. `run_drain` is the classic static-batching baseline for
+//! comparison: it admits whole batches and keeps the fixed `b_eval` batch
+//! shape until every lane in the batch finishes, exactly what a
+//! fixed-shape deployment without in-flight refill pays.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::metrics::{MetricsRegistry, RequestMetric};
+use super::{GenRequest, GenResponse};
+use crate::coordinator::Pipeline;
+use crate::eval::ModelEval;
+use crate::model::tokenizer::ByteTokenizer;
+
+#[derive(Debug, Clone)]
+pub struct EngineCfg {
+    /// hard cap on decode steps per run (runaway guard)
+    pub max_steps: usize,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg { max_steps: 100_000 }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Lane {
+    id: u64,
+    seq: Vec<i32>,
+    prompt_len: usize,
+    max_new: usize,
+    submitted: Instant,
+    admitted: Instant,
+}
+
+pub struct Engine<'a> {
+    pipe: &'a Pipeline<'a>,
+    model: &'a ModelEval<'a>,
+    pub cfg: EngineCfg,
+    lanes: Vec<Option<Lane>>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(pipe: &'a Pipeline<'a>, model: &'a ModelEval<'a>) -> Engine<'a> {
+        let lanes = (0..pipe.cfg.b_eval).map(|_| None).collect();
+        Engine { pipe, model, cfg: EngineCfg::default(), lanes }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn active_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    fn make_lane(
+        &self,
+        id: u64,
+        req: &GenRequest,
+        submitted: Instant,
+        admitted: Instant,
+    ) -> Lane {
+        let t = self.pipe.cfg.seq;
+        let tk = ByteTokenizer;
+        let mut seq = tk.encode(&req.prompt);
+        seq.truncate(t - 1);
+        if seq.is_empty() {
+            seq.push(b' ' as i32);
+        }
+        let prompt_len = seq.len();
+        let max_new = req.max_new_tokens.min(t - prompt_len);
+        Lane { id, seq, prompt_len, max_new, submitted, admitted }
+    }
+
+    fn finish(lane: Lane, now: Instant, metrics: &mut MetricsRegistry) -> GenResponse {
+        let tk = ByteTokenizer;
+        let queue_ms =
+            lane.admitted.duration_since(lane.submitted).as_secs_f64() * 1000.0;
+        let decode_ms = now.duration_since(lane.admitted).as_secs_f64() * 1000.0;
+        let new_tokens = lane.seq.len() - lane.prompt_len;
+        metrics.record_request(RequestMetric {
+            id: lane.id,
+            queue_ms,
+            decode_ms,
+            total_ms: queue_ms + decode_ms,
+            new_tokens,
+        });
+        GenResponse {
+            id: lane.id,
+            text: tk.decode(&lane.seq),
+            new_tokens,
+            queue_ms,
+            decode_ms,
+            latency_ms: queue_ms + decode_ms,
+        }
+    }
+
+    /// Admit queued requests into free lanes (continuous mode). Requests
+    /// whose deadline lapsed in the queue are dropped; zero-token requests
+    /// complete immediately without occupying a lane.
+    fn admit(
+        &mut self,
+        batcher: &mut Batcher,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) {
+        let now = Instant::now();
+        metrics.record_expired(batcher.expire_overdue(now).len());
+        for i in 0..self.lanes.len() {
+            while self.lanes[i].is_none() {
+                let Some((id, req, submitted)) = batcher.pop_ready(now) else {
+                    return;
+                };
+                let lane = self.make_lane(id, &req, submitted, now);
+                if lane.max_new == 0 {
+                    out.push(Self::finish(lane, now, metrics));
+                } else {
+                    self.lanes[i] = Some(lane);
+                }
+            }
+        }
+    }
+
+    /// One decode step. In compact mode only active lanes enter the
+    /// forward (cost scales with load); in fixed-width mode every lane
+    /// slot is computed, finished-lane rows as padding — the static
+    /// batching cost model.
+    fn decode_step(
+        &mut self,
+        fixed_width: bool,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) -> Result<()> {
+        let (t, vocab) = (self.pipe.cfg.seq, self.pipe.cfg.vocab);
+        let layout: Vec<Option<usize>> = if fixed_width {
+            (0..self.lanes.len())
+                .map(|i| self.lanes[i].is_some().then_some(i))
+                .collect()
+        } else {
+            (0..self.lanes.len())
+                .filter(|&i| self.lanes[i].is_some())
+                .map(Some)
+                .collect()
+        };
+        let n_active = layout.iter().filter(|r| r.is_some()).count();
+        if n_active == 0 {
+            return Ok(());
+        }
+        let b = layout.len();
+        let mut tokens = vec![0i32; b * t];
+        for (row, slot) in layout.iter().enumerate() {
+            if let Some(li) = slot {
+                let lane = self.lanes[*li].as_ref().unwrap();
+                tokens[row * t..row * t + lane.seq.len()].copy_from_slice(&lane.seq);
+            }
+        }
+        let step_started = Instant::now();
+        let h = self.model.forward_h(self.pipe, &tokens)?;
+        let (_, logits) = self.pipe.head(self.model.params(), &h, &tokens)?;
+        metrics.record_step_from(step_started, n_active, self.lanes.len());
+        let now = Instant::now();
+        for (row, slot) in layout.iter().enumerate() {
+            let Some(li) = slot else { continue };
+            let done = {
+                let lane = self.lanes[*li].as_mut().unwrap();
+                let pos = lane.seq.len() - 1;
+                let base = (row * t + pos) * vocab;
+                let next = logits.data[base..base + vocab]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as i32)
+                    .unwrap();
+                lane.seq.push(next);
+                lane.seq.len() - lane.prompt_len >= lane.max_new
+                    || lane.seq.len() >= t
+            };
+            metrics.record_tokens(1);
+            if done {
+                let lane = self.lanes[*li].take().unwrap();
+                out.push(Self::finish(lane, now, metrics));
+            }
+        }
+        Ok(())
+    }
+
+    /// Continuous batching: a finished sequence's lane is refilled from
+    /// the queue on the next decode step.
+    pub fn run(
+        &mut self,
+        batcher: &mut Batcher,
+        metrics: &mut MetricsRegistry,
+    ) -> Result<Vec<GenResponse>> {
+        let mut out = Vec::new();
+        for _ in 0..self.cfg.max_steps {
+            self.admit(batcher, metrics, &mut out);
+            if self.active_lanes() == 0 {
+                if batcher.pending() == 0 {
+                    break;
+                }
+                continue;
+            }
+            self.decode_step(false, metrics, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Drain (static) batching baseline: admit a full batch, decode at
+    /// fixed width until every lane finishes, only then take the next
+    /// batch. Admission goes through the same deadline-aware `admit` as
+    /// continuous mode (called only when every lane is free, which is
+    /// exactly batch admission), so oversized queues and lapsed deadlines
+    /// are handled per batch, not just once up front.
+    pub fn run_drain(
+        &mut self,
+        batcher: &mut Batcher,
+        metrics: &mut MetricsRegistry,
+    ) -> Result<Vec<GenResponse>> {
+        let mut out = Vec::new();
+        let mut total_steps = 0;
+        while total_steps < self.cfg.max_steps {
+            self.admit(batcher, metrics, &mut out);
+            if self.active_lanes() == 0 {
+                break;
+            }
+            while self.active_lanes() > 0 && total_steps < self.cfg.max_steps {
+                self.decode_step(true, metrics, &mut out)?;
+                total_steps += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// One-shot drain over an explicit request list (the legacy
+    /// `generate_batch` contract): responses in request order.
+    pub fn run_drain_batch(
+        &mut self,
+        requests: &[GenRequest],
+        metrics: &mut MetricsRegistry,
+    ) -> Result<Vec<GenResponse>> {
+        assert!(requests.len() <= self.capacity(), "batch too wide");
+        let mut batcher = Batcher::new(self.capacity());
+        for r in requests {
+            batcher.submit(r.clone());
+        }
+        let mut out = self.run_drain(&mut batcher, metrics)?;
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+}

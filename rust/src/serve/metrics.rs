@@ -1,0 +1,274 @@
+//! Serving metrics registry: per-request latency split (queue vs decode),
+//! decode throughput, latency percentiles, and lane occupancy — exported
+//! as JSON into `runs_dir()` so sustained-traffic runs leave an auditable
+//! record next to the experiment CSVs.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Empirical percentile with nearest-rank rounding. Empty input -> 0,
+/// single element -> that element.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((v.len() - 1) as f64 * p.clamp(0.0, 1.0)).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// One finished request's accounting.
+#[derive(Debug, Clone)]
+pub struct RequestMetric {
+    pub id: u64,
+    /// submit -> lane admission
+    pub queue_ms: f64,
+    /// lane admission -> last token
+    pub decode_ms: f64,
+    /// submit -> last token
+    pub total_ms: f64,
+    pub new_tokens: usize,
+}
+
+#[derive(Debug)]
+pub struct MetricsRegistry {
+    pub label: String,
+    created: Instant,
+    first_step: Option<Instant>,
+    last_step: Option<Instant>,
+    pub steps: usize,
+    /// sum over steps of the number of active lanes (== decoded tokens)
+    pub active_lane_steps: usize,
+    pub capacity: usize,
+    pub total_tokens: usize,
+    pub requests: Vec<RequestMetric>,
+    pub expired: usize,
+}
+
+impl MetricsRegistry {
+    pub fn new(label: &str) -> MetricsRegistry {
+        MetricsRegistry {
+            label: label.to_string(),
+            created: Instant::now(),
+            first_step: None,
+            last_step: None,
+            steps: 0,
+            active_lane_steps: 0,
+            capacity: 0,
+            total_tokens: 0,
+            requests: Vec::new(),
+            expired: 0,
+        }
+    }
+
+    pub fn record_step(&mut self, active: usize, capacity: usize) {
+        self.record_step_from(Instant::now(), active, capacity);
+    }
+
+    /// Record a step whose forward began at `started` — the decode window
+    /// then includes the first step's duration, so single-step runs don't
+    /// report a near-zero window (and absurd throughput).
+    pub fn record_step_from(&mut self, started: Instant, active: usize, capacity: usize) {
+        self.first_step.get_or_insert(started);
+        self.last_step = Some(Instant::now());
+        self.steps += 1;
+        self.active_lane_steps += active;
+        self.capacity = capacity.max(self.capacity);
+    }
+
+    pub fn record_tokens(&mut self, n: usize) {
+        self.total_tokens += n;
+    }
+
+    pub fn record_request(&mut self, m: RequestMetric) {
+        self.requests.push(m);
+    }
+
+    pub fn record_expired(&mut self, n: usize) {
+        self.expired += n;
+    }
+
+    /// Wall-clock of the decode loop in ms (first step -> now-ish).
+    pub fn decode_window_ms(&self) -> f64 {
+        match (self.first_step, self.last_step) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64() * 1000.0,
+            _ => self.created.elapsed().as_secs_f64() * 1000.0,
+        }
+    }
+
+    pub fn throughput_tok_s(&self) -> f64 {
+        1000.0 * self.total_tokens as f64 / self.decode_window_ms().max(1e-6)
+    }
+
+    /// Mean fraction of lanes busy per decode step (1.0 = every lane busy
+    /// every step — what continuous batching buys on skewed workloads).
+    pub fn lane_occupancy(&self) -> f64 {
+        let denom = (self.steps * self.capacity.max(1)) as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        self.active_lane_steps as f64 / denom
+    }
+
+    fn totals_ms(&self) -> Vec<f64> {
+        self.requests.iter().map(|r| r.total_ms).collect()
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        percentile(&self.totals_ms(), 0.50)
+    }
+
+    pub fn p95_ms(&self) -> f64 {
+        percentile(&self.totals_ms(), 0.95)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        percentile(&self.totals_ms(), 0.99)
+    }
+
+    pub fn mean_queue_ms(&self) -> f64 {
+        let n = self.requests.len().max(1) as f64;
+        self.requests.iter().map(|r| r.queue_ms).sum::<f64>() / n
+    }
+
+    pub fn mean_decode_ms(&self) -> f64 {
+        let n = self.requests.len().max(1) as f64;
+        self.requests.iter().map(|r| r.decode_ms).sum::<f64>() / n
+    }
+
+    pub fn snapshot(&self) -> Json {
+        obj(vec![
+            ("label", s(&self.label)),
+            ("requests", num(self.requests.len() as f64)),
+            ("expired", num(self.expired as f64)),
+            ("total_new_tokens", num(self.total_tokens as f64)),
+            ("decode_steps", num(self.steps as f64)),
+            ("lane_capacity", num(self.capacity as f64)),
+            ("lane_occupancy", num(self.lane_occupancy())),
+            ("decode_window_ms", num(self.decode_window_ms())),
+            ("throughput_tok_s", num(self.throughput_tok_s())),
+            ("p50_ms", num(self.p50_ms())),
+            ("p95_ms", num(self.p95_ms())),
+            ("p99_ms", num(self.p99_ms())),
+            ("mean_queue_ms", num(self.mean_queue_ms())),
+            ("mean_decode_ms", num(self.mean_decode_ms())),
+            (
+                "per_request",
+                arr(self.requests.iter().map(|r| {
+                    obj(vec![
+                        ("id", num(r.id as f64)),
+                        ("queue_ms", num(r.queue_ms)),
+                        ("decode_ms", num(r.decode_ms)),
+                        ("total_ms", num(r.total_ms)),
+                        ("new_tokens", num(r.new_tokens as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.snapshot().dump())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn print_summary(&self) {
+        println!(
+            "[{}] {} reqs ({} expired) | {} tok in {} steps | {:.1} tok/s | \
+             occupancy {:.2} | p50 {:.0} ms p95 {:.0} ms p99 {:.0} ms | \
+             queue {:.0} ms avg",
+            self.label,
+            self.requests.len(),
+            self.expired,
+            self.total_tokens,
+            self.steps,
+            self.throughput_tok_s(),
+            self.lane_occupancy(),
+            self.p50_ms(),
+            self.p95_ms(),
+            self.p99_ms(),
+            self.mean_queue_ms(),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_empty_is_zero() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 0.99), 0.0);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile(&[42.0], 0.0), 42.0);
+        assert_eq!(percentile(&[42.0], 0.5), 42.0);
+        assert_eq!(percentile(&[42.0], 1.0), 42.0);
+    }
+
+    #[test]
+    fn percentile_orders_input() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_clamps_p() {
+        let xs = vec![1.0, 2.0];
+        assert_eq!(percentile(&xs, -1.0), 1.0);
+        assert_eq!(percentile(&xs, 2.0), 2.0);
+    }
+
+    #[test]
+    fn registry_accounting() {
+        let mut m = MetricsRegistry::new("test");
+        m.record_step(2, 4);
+        m.record_step(4, 4);
+        m.record_tokens(6);
+        m.record_request(RequestMetric {
+            id: 0,
+            queue_ms: 10.0,
+            decode_ms: 30.0,
+            total_ms: 40.0,
+            new_tokens: 6,
+        });
+        assert_eq!(m.steps, 2);
+        assert!((m.lane_occupancy() - 0.75).abs() < 1e-9);
+        assert_eq!(m.p50_ms(), 40.0);
+        assert_eq!(m.p99_ms(), 40.0);
+        assert!((m.mean_queue_ms() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json() {
+        let mut m = MetricsRegistry::new("snap");
+        m.record_step(1, 2);
+        m.record_tokens(3);
+        let dumped = m.snapshot().dump();
+        let back = Json::parse(&dumped).unwrap();
+        assert_eq!(back.get("label").and_then(Json::as_str), Some("snap"));
+        assert_eq!(back.get("total_new_tokens").and_then(Json::as_usize), Some(3));
+        assert!(back.get("throughput_tok_s").and_then(Json::as_f64).is_some());
+        assert!(back.get("p95_ms").is_some());
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let m = MetricsRegistry::new("file");
+        let path = std::env::temp_dir().join("ptq161_metrics_test.json");
+        m.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,118 +1,60 @@
-//! Serving: batched greedy generation over the eval pipeline, with
-//! latency/throughput accounting (the paper's F.3 discussion; at this
-//! scale the numbers characterize the fake-quant CPU path, and the packed
-//! memory wins come from packing::memory).
+//! Serving layer: continuous-batching generation over the eval pipeline.
+//!
+//! * [`batcher`] — admission queue (FIFO, max-wait cut, deadlines)
+//! * [`engine`] — slot-based continuous-batching decode loop (plus the
+//!   drain/static baseline it is benchmarked against)
+//! * [`metrics`] — per-request latency split, percentiles, lane occupancy,
+//!   JSON export into `runs_dir()`
+//!
+//! At this scale the absolute numbers characterize the native CPU path
+//! (the paper's F.3 discussion); the packed memory wins come from
+//! packing::memory. The scheduling wins — lane refill beating batch drain
+//! on skewed request lengths — are measured by `benches/bench_serve.rs`.
 
 pub mod batcher;
-
-use std::time::Instant;
+pub mod engine;
+pub mod metrics;
 
 use anyhow::Result;
 
+pub use engine::{Engine, EngineCfg};
+pub use metrics::{percentile, MetricsRegistry, RequestMetric};
+
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
-use crate::model::tokenizer::ByteTokenizer;
 
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// Byte-tokenized verbatim; an empty prompt is seeded with a single
+    /// space token (the decoder needs at least one context position), so
+    /// its response text starts with that space.
     pub prompt: String,
     pub max_new_tokens: usize,
 }
 
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    pub id: u64,
     pub text: String,
-    pub latency_ms: f64,
     pub new_tokens: usize,
+    /// submit -> lane admission
+    pub queue_ms: f64,
+    /// lane admission -> last token
+    pub decode_ms: f64,
+    /// submit -> last token
+    pub latency_ms: f64,
 }
 
-#[derive(Debug, Default, Clone)]
-pub struct ServeStats {
-    pub requests: usize,
-    pub total_new_tokens: usize,
-    pub total_ms: f64,
-    pub per_request_ms: Vec<f64>,
-}
-
-impl ServeStats {
-    pub fn throughput_tok_s(&self) -> f64 {
-        1000.0 * self.total_new_tokens as f64 / self.total_ms.max(1e-9)
-    }
-
-    pub fn p50_ms(&self) -> f64 {
-        percentile(&self.per_request_ms, 0.5)
-    }
-
-    pub fn p95_ms(&self) -> f64 {
-        percentile(&self.per_request_ms, 0.95)
-    }
-}
-
-fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
-        return 0.0;
-    }
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    v[((v.len() - 1) as f64 * p) as usize]
-}
-
-/// Greedy-generate for up to b_eval requests at once. Each step runs the
-/// full window (no KV cache in the AOT artifact — fixed shapes), so the
-/// cost model is steps x full-forward; the batcher amortizes it 4-wide.
+/// Greedy-generate for up to b_eval requests at once (legacy one-shot
+/// contract, now a thin wrapper over the engine's drain mode). Responses
+/// come back in request order.
 pub fn generate_batch(
     pipe: &Pipeline,
     model: &ModelEval,
     requests: &[GenRequest],
 ) -> Result<Vec<GenResponse>> {
-    let tk = ByteTokenizer;
-    let (b, t, vocab) = (pipe.cfg.b_eval, pipe.cfg.seq, pipe.cfg.vocab);
-    assert!(requests.len() <= b, "batch too wide");
-    let mut seqs: Vec<Vec<i32>> =
-        requests.iter().map(|r| tk.encode(&r.prompt)).collect();
-    for s in seqs.iter_mut() {
-        s.truncate(t - 1);
-    }
-    let lens0: Vec<usize> = seqs.iter().map(Vec::len).collect();
-    let max_new = requests
-        .iter()
-        .map(|r| r.max_new_tokens)
-        .max()
-        .unwrap_or(0)
-        .min(t - seqs.iter().map(Vec::len).max().unwrap_or(0));
-    let t0 = Instant::now();
-    for _ in 0..max_new {
-        let mut tokens = vec![0i32; b * t];
-        for (i, s) in seqs.iter().enumerate() {
-            tokens[i * t..i * t + s.len()].copy_from_slice(s);
-        }
-        let h = model.forward_h(pipe, &tokens)?;
-        let (_, logits) = pipe.head(model.params(), &h, &tokens)?;
-        for (i, s) in seqs.iter_mut().enumerate() {
-            if s.len() >= t || s.len() - lens0[i] >= requests[i].max_new_tokens
-            {
-                continue;
-            }
-            let pos = s.len() - 1;
-            let row = &logits.data[(i * t + pos) * vocab..(i * t + pos + 1) * vocab];
-            let next = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j as i32)
-                .unwrap();
-            s.push(next);
-        }
-    }
-    let elapsed = t0.elapsed().as_secs_f64() * 1000.0;
-    Ok(seqs
-        .into_iter()
-        .zip(requests)
-        .zip(lens0)
-        .map(|((s, _r), l0)| GenResponse {
-            text: tk.decode(&s),
-            latency_ms: elapsed,
-            new_tokens: s.len() - l0.min(s.len()),
-        })
-        .collect())
+    let mut engine = Engine::new(pipe, model);
+    let mut metrics = MetricsRegistry::new("generate_batch");
+    engine.run_drain_batch(requests, &mut metrics)
 }
+

@@ -1,0 +1,295 @@
+//! Native-backend + serve-engine integration tests. These need no
+//! artifacts directory: `Runtime::native()` serves the built-in manifest
+//! and the pure-Rust executor, so they run in every environment — they are
+//! the tier-1 proof that the gradient stack and the continuous-batching
+//! engine actually work.
+
+use ptq161::coordinator::pretrain::lm_grad;
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::model::{Params, LINEARS};
+use ptq161::quant::ptq161::initial_parts;
+use ptq161::runtime::{Runtime, Value};
+use ptq161::serve::batcher::Batcher;
+use ptq161::serve::{generate_batch, Engine, GenRequest, MetricsRegistry};
+use ptq161::tensor::Tensor;
+use ptq161::util::rng::Rng;
+
+fn demo_tokens(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(256) as i32).collect()
+}
+
+#[test]
+fn native_forward_is_deterministic_and_near_uniform_at_init() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(3);
+    let tokens = demo_tokens(pipe.cfg.b_eval * pipe.cfg.seq, 4);
+    let n1 = pipe.nll_sum(&params, &tokens).unwrap();
+    let n2 = pipe.nll_sum(&params, &tokens).unwrap();
+    assert_eq!(n1, n2);
+    // random init => near-uniform next-token distribution
+    let per_tok = n1 / pipe.tokens_per_batch() as f32;
+    assert!((per_tok - (256f32).ln()).abs() < 0.5, "per-token nll {per_tok}");
+}
+
+#[test]
+fn lm_grad_descends_loss() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let mut params = pipe.init_params(5);
+    let tokens = demo_tokens(pipe.cfg.b_train * pipe.cfg.seq, 6);
+    let (l0, grads) = lm_grad(&pipe, &params, &tokens).unwrap();
+    for (p, g) in params.tensors.iter_mut().zip(&grads) {
+        for (x, gx) in p.data.iter_mut().zip(&g.data) {
+            *x -= 0.5 * gx;
+        }
+    }
+    let (l1, _) = lm_grad(&pipe, &params, &tokens).unwrap();
+    assert!(l1 < l0, "{l1} !< {l0}");
+}
+
+#[test]
+fn lm_grad_matches_directional_finite_difference() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(7);
+    let tokens = demo_tokens(pipe.cfg.b_train * pipe.cfg.seq, 8);
+    let (_, grads) = lm_grad(&pipe, &params, &tokens).unwrap();
+    // random unit direction over the full parameter vector
+    let mut rng = Rng::new(9);
+    let dirs: Vec<Tensor> = params
+        .tensors
+        .iter()
+        .map(|t| Tensor::randn(&t.shape, 1.0, &mut rng))
+        .collect();
+    let norm: f64 = dirs
+        .iter()
+        .flat_map(|d| d.data.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    let analytic: f64 = grads
+        .iter()
+        .zip(&dirs)
+        .flat_map(|(g, d)| g.data.iter().zip(&d.data))
+        .map(|(&g, &d)| (g as f64) * (d as f64))
+        .sum::<f64>()
+        / norm;
+    let loss_at = |eps: f32| -> f64 {
+        let mut p = params.clone();
+        for (t, d) in p.tensors.iter_mut().zip(&dirs) {
+            for (x, dx) in t.data.iter_mut().zip(&d.data) {
+                *x += eps * dx / norm as f32;
+            }
+        }
+        lm_grad(&pipe, &p, &tokens).unwrap().0 as f64
+    };
+    let eps = 1e-2f32;
+    let numeric = (loss_at(eps) - loss_at(-eps)) / (2.0 * eps as f64);
+    let tol = 0.1 * numeric.abs().max(analytic.abs()).max(0.02);
+    assert!(
+        (numeric - analytic).abs() < tol,
+        "finite diff {numeric} vs analytic {analytic}"
+    );
+}
+
+/// Build PTQ1.61 parts for every linear of one micro layer with a fixed
+/// structured mask (every 4th input channel salient).
+fn layer_parts(params: &Params, l: usize) -> Vec<[Tensor; 6]> {
+    LINEARS
+        .iter()
+        .map(|lin| {
+            let w = params.get(&format!("l{l}.{lin}"));
+            let mask: Vec<bool> = (0..w.cols()).map(|j| j % 4 == 0).collect();
+            let p = initial_parts(w, &mask);
+            let out = p.alpha_s.len();
+            let inn = p.alpha_r2.len();
+            [
+                p.w_sal.clone(),
+                p.sign_ns.clone(),
+                Tensor::from_vec(&[out], p.alpha_s.clone()),
+                Tensor::from_vec(&[out], p.alpha_r1.clone()),
+                Tensor::from_vec(&[inn], p.alpha_r2.clone()),
+                Tensor::from_vec(&[out], p.mu.clone()),
+            ]
+        })
+        .collect()
+}
+
+#[test]
+fn fused_qblock_matches_dense_dequantized_block() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(11);
+    let mut rng = Rng::new(12);
+    let h = Tensor::randn(&[pipe.cfg.b_eval, pipe.cfg.seq, pipe.cfg.d], 1.0, &mut rng);
+    let qparts = layer_parts(&params, 0);
+    // dense path: same block with the dequantized weights substituted
+    let mut dense = params.clone();
+    for lin in LINEARS {
+        let w = params.get(&format!("l0.{lin}"));
+        let mask: Vec<bool> = (0..w.cols()).map(|j| j % 4 == 0).collect();
+        *dense.get_mut(&format!("l0.{lin}")) = initial_parts(w, &mask).dequantize();
+    }
+    let fused = pipe
+        .qblock_fwd(&h, params.get("l0.attn_norm"), params.get("l0.mlp_norm"), &qparts)
+        .unwrap();
+    let ref_out = pipe.block_fwd(&h, &dense.block(0)).unwrap();
+    let rel = fused.mse(&ref_out) / ref_out.frob_norm().powi(2).max(1e-9)
+        * ref_out.numel() as f32;
+    assert!(rel < 1e-6, "fused vs dense relative mse {rel}");
+}
+
+#[test]
+fn block_opt_grad_matches_directional_finite_difference() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(13);
+    let mut rng = Rng::new(14);
+    let x_q =
+        Tensor::randn(&[pipe.cfg.b_eval, pipe.cfg.seq, pipe.cfg.d], 1.0, &mut rng);
+    let block = params.block(0);
+    let f1 = pipe.block_fwd(&x_q, &block).unwrap();
+    let f3 = f1.scale(1.05);
+    let attn_norm = params.get("l0.attn_norm").clone();
+    let mlp_norm = params.get("l0.mlp_norm").clone();
+    let qparts = layer_parts(&params, 0);
+    let learn: Vec<Tensor> = qparts
+        .iter()
+        .flat_map(|p| [p[2].clone(), p[3].clone(), p[4].clone(), p[5].clone()])
+        .collect();
+    let consts: Vec<Tensor> =
+        qparts.iter().flat_map(|p| [p[0].clone(), p[1].clone()]).collect();
+    let run = |learn: &[Tensor]| -> (f32, Vec<Tensor>) {
+        let mut inputs: Vec<Value> = learn.iter().map(Value::from).collect();
+        inputs.push((&x_q).into());
+        inputs.push((&f1).into());
+        inputs.push((&f3).into());
+        inputs.push((&attn_norm).into());
+        inputs.push((&mlp_norm).into());
+        inputs.extend(consts.iter().map(Value::from));
+        inputs.push(Tensor::from_vec(&[], vec![1.0]).into());
+        let mut out = rt.run_cfg("block_opt_grad", "micro", &inputs).unwrap();
+        let grads = out.split_off(1);
+        (out[0].data[0], grads)
+    };
+    let (_, grads) = run(&learn);
+    let dirs: Vec<Tensor> = learn
+        .iter()
+        .map(|t| Tensor::randn(&t.shape, 1.0, &mut rng))
+        .collect();
+    let norm: f64 = dirs
+        .iter()
+        .flat_map(|d| d.data.iter())
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    let analytic: f64 = grads
+        .iter()
+        .zip(&dirs)
+        .flat_map(|(g, d)| g.data.iter().zip(&d.data))
+        .map(|(&g, &d)| (g as f64) * (d as f64))
+        .sum::<f64>()
+        / norm;
+    let loss_at = |eps: f32| -> f64 {
+        let shifted: Vec<Tensor> = learn
+            .iter()
+            .zip(&dirs)
+            .map(|(t, d)| {
+                t.zip(&d.scale(eps / norm as f32), |a, b| a + b)
+            })
+            .collect();
+        run(&shifted).0 as f64
+    };
+    let eps = 5e-3f32;
+    let numeric = (loss_at(eps) - loss_at(-eps)) / (2.0 * eps as f64);
+    let tol = 0.1 * numeric.abs().max(analytic.abs()).max(0.02);
+    assert!(
+        (numeric - analytic).abs() < tol,
+        "finite diff {numeric} vs analytic {analytic}"
+    );
+}
+
+#[test]
+fn engine_refills_lanes_mid_flight() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(21);
+    let me = ModelEval::Dense(&params);
+    assert_eq!(pipe.cfg.b_eval, 2);
+    let lens = [1usize, 6, 1, 1, 2];
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for (i, &n) in lens.iter().enumerate() {
+        batcher.submit(GenRequest {
+            prompt: format!("ab{i}"),
+            max_new_tokens: n,
+        });
+    }
+    let mut metrics = MetricsRegistry::new("refill");
+    let mut engine = Engine::new(&pipe, &me);
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), lens.len());
+    for (r, &want) in resps.iter().zip(&lens) {
+        assert_eq!(r.new_tokens, want, "request {} token count", r.id);
+        // the latency split reported by Engine::finish must be consistent
+        assert!((r.queue_ms + r.decode_ms - r.latency_ms).abs() < 1e-6);
+        assert!(r.queue_ms >= 0.0 && r.decode_ms >= 0.0);
+    }
+    let total: usize = lens.iter().sum();
+    // every decode step produced one token per active lane
+    assert_eq!(metrics.total_tokens, total);
+    assert_eq!(metrics.active_lane_steps, total);
+    // continuous batching: finished lanes refill mid-flight, so the whole
+    // workload fits in far fewer steps than the drained equivalent
+    // (batches of (1,6), (1,1), (2) -> 6+1+2 = 9 fixed-width steps)
+    assert!(metrics.steps >= total.div_ceil(pipe.cfg.b_eval));
+    assert!(metrics.steps <= 7, "steps {}", metrics.steps);
+    assert!(metrics.lane_occupancy() > 0.7, "occupancy {}", metrics.lane_occupancy());
+}
+
+#[test]
+fn engine_zero_token_requests_complete_immediately() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(22);
+    let me = ModelEval::Dense(&params);
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    batcher.submit(GenRequest { prompt: "hi".into(), max_new_tokens: 0 });
+    batcher.submit(GenRequest { prompt: "yo".into(), max_new_tokens: 3 });
+    let mut metrics = MetricsRegistry::new("zero");
+    let mut engine = Engine::new(&pipe, &me);
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), 2);
+    assert_eq!(resps[0].new_tokens, 0);
+    assert_eq!(resps[0].text, "hi");
+    assert_eq!(resps[1].new_tokens, 3);
+    // an all-zero-token workload must terminate without a forward pass
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for _ in 0..3 {
+        batcher.submit(GenRequest { prompt: "p".into(), max_new_tokens: 0 });
+    }
+    let mut m2 = MetricsRegistry::new("zero-only");
+    let resps = engine.run(&mut batcher, &mut m2).unwrap();
+    assert_eq!(resps.len(), 3);
+    assert_eq!(m2.steps, 0);
+}
+
+#[test]
+fn generate_batch_keeps_request_order() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(23);
+    let me = ModelEval::Dense(&params);
+    let reqs: Vec<GenRequest> = [3usize, 1]
+        .iter()
+        .map(|&n| GenRequest { prompt: "q".into(), max_new_tokens: n })
+        .collect();
+    let resps = generate_batch(&pipe, &me, &reqs).unwrap();
+    assert_eq!(resps.len(), 2);
+    assert_eq!(resps[0].new_tokens, 3);
+    assert_eq!(resps[1].new_tokens, 1);
+}
