@@ -37,6 +37,12 @@ fn main() -> Result<()> {
     }
     let mut metrics = MetricsRegistry::new("serve_demo");
     let mut engine = Engine::new(&pipe, &model);
+    println!(
+        "kv cache: {} slots x {} positions ({:.1} KiB resident)",
+        engine.kv_cache().slots(),
+        engine.kv_cache().capacity(),
+        engine.kv_cache().bytes() as f64 / 1024.0
+    );
     let resps = engine.run(&mut batcher, &mut metrics)?;
     for r in resps {
         let text: String = r.text.replace('\n', " ").chars().take(64).collect();

@@ -1,9 +1,20 @@
-//! Serve-engine bench: drain (static) batching vs continuous batching on
-//! a skewed request-length workload. With skewed lengths a drained batch
-//! idles three lanes while its longest request finishes; continuous
-//! batching refills freed lanes mid-flight, so decode cost tracks the
-//! offered load. Runs on FP-initialized weights (scheduling cost is
-//! independent of training) and needs no artifacts directory.
+//! Serve-engine bench: scheduling (drain vs continuous) and decode-path
+//! (full-window vs KV-cached) comparisons, with a correctness gate.
+//!
+//! Part 1 replays one skewed request-length workload through three
+//! configurations — static drain batching, continuous batching over the
+//! full-window forward, and continuous batching with the KV cache — and
+//! asserts all three produce token-identical responses (greedy decode is
+//! per-lane deterministic, so scheduling and caching must not change a
+//! single token).
+//!
+//! Part 2 decodes long sequences and reports per-step wall time early vs
+//! late in the sequence: the full-window path grows with position (each
+//! step re-runs the whole window), the KV-cached path stays roughly flat
+//! (each step runs one token against cached K/V).
+//!
+//! Runs on FP-initialized weights (scheduling/caching cost is independent
+//! of training) and needs no artifacts directory.
 
 use std::time::Instant;
 
@@ -11,13 +22,50 @@ use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::Batcher;
-use ptq161::serve::{Engine, GenRequest, MetricsRegistry};
+use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
+
+fn run_mode(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    reqs: &[GenRequest],
+    label: &str,
+    drain: bool,
+    kv: bool,
+) -> (MetricsRegistry, Vec<GenResponse>, f64) {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new(label);
+    let mut engine = Engine::new(pipe, model);
+    engine.cfg.use_kv_cache = kv;
+    let t0 = Instant::now();
+    let mut resps = if drain {
+        engine.run_drain(&mut batcher, &mut metrics).unwrap()
+    } else {
+        engine.run(&mut batcher, &mut metrics).unwrap()
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(resps.len(), reqs.len(), "{label}: lost requests");
+    assert_eq!(engine.kv_cache().in_use_count(), 0, "{label}: leaked slots");
+    resps.sort_by_key(|r| r.id);
+    (metrics, resps, wall)
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
 
 fn main() {
     let rt = Runtime::open(&ptq161::artifacts_dir()).unwrap();
     let pipe = Pipeline::new(&rt, "tiny").unwrap();
     let params = pipe.init_params(7);
     let model = ModelEval::Dense(&params);
+
+    // ---- part 1: scheduling + decode-path throughput --------------------
     // 16 requests, 1-in-4 long: the regime where batch drain stalls lanes
     let reqs: Vec<GenRequest> = (0..16)
         .map(|i| GenRequest {
@@ -33,23 +81,15 @@ fn main() {
         pipe.cfg.b_eval
     );
     let mut results: Vec<(String, f64, f64)> = Vec::new();
-    for (label, drain) in [("drain", true), ("continuous", false)] {
-        let mut batcher = Batcher::new(pipe.cfg.b_eval);
-        for r in &reqs {
-            batcher.submit(r.clone());
-        }
-        let mut metrics = MetricsRegistry::new(label);
-        let mut engine = Engine::new(&pipe, &model);
-        let t0 = Instant::now();
-        let resps = if drain {
-            engine.run_drain(&mut batcher, &mut metrics).unwrap()
-        } else {
-            engine.run(&mut batcher, &mut metrics).unwrap()
-        };
-        let wall = t0.elapsed().as_secs_f64();
-        assert_eq!(resps.len(), reqs.len(), "{label}: lost requests");
+    let mut texts: Vec<Vec<String>> = Vec::new();
+    for (label, drain, kv) in [
+        ("drain", true, true),
+        ("full-window", false, false),
+        ("continuous+kv", false, true),
+    ] {
+        let (metrics, resps, wall) = run_mode(&pipe, &model, &reqs, label, drain, kv);
         println!(
-            "{label:<11} {:>3} steps  occupancy {:.2}  {:>7.1} tok/s  \
+            "{label:<14} {:>3} steps  occupancy {:.2}  {:>7.1} tok/s  \
              wall {:.2}s  p50 {:>6.0} ms  p95 {:>6.0} ms",
             metrics.steps,
             metrics.lane_occupancy(),
@@ -59,7 +99,55 @@ fn main() {
             metrics.p95_ms()
         );
         results.push((label.to_string(), metrics.throughput_tok_s(), wall));
+        texts.push(resps.into_iter().map(|r| r.text).collect());
     }
-    let speedup = results[1].1 / results[0].1.max(1e-9);
-    println!("continuous/drain throughput ratio: {speedup:.2}x");
+    // correctness gate: every configuration must emit identical tokens
+    for (mode, t) in texts.iter().enumerate().skip(1) {
+        assert_eq!(
+            t, &texts[0],
+            "{}: output differs from {}",
+            results[mode].0, results[0].0
+        );
+    }
+    println!("token-identical across all modes: ok");
+    let sched = results[2].1 / results[0].1.max(1e-9);
+    let cache = results[2].1 / results[1].1.max(1e-9);
+    println!("continuous+kv / drain throughput:       {sched:.2}x");
+    println!("continuous+kv / full-window throughput: {cache:.2}x");
+
+    // ---- part 2: per-step decode time vs sequence position --------------
+    // every lane decodes a long sequence; per-step time early vs late in
+    // the run shows full-window growing and cached staying flat
+    let long = pipe.cfg.seq - 16;
+    let long_reqs: Vec<GenRequest> = (0..pipe.cfg.b_eval)
+        .map(|i| GenRequest {
+            prompt: format!("position scan {i} "),
+            max_new_tokens: long,
+        })
+        .collect();
+    println!("\n# per-step decode time over {long} positions");
+    let mut step_series: Vec<Vec<f64>> = Vec::new();
+    for (label, kv) in [("full-window", false), ("kv-cached", true)] {
+        let (metrics, _, _) = run_mode(&pipe, &model, &long_reqs, label, false, kv);
+        let steps = &metrics.step_ms;
+        let q = (steps.len() / 4).max(1);
+        let early = mean(&steps[..q]);
+        let late = mean(&steps[steps.len() - q..]);
+        println!(
+            "{label:<12} first-quartile step {early:>7.2} ms   \
+             last-quartile step {late:>7.2} ms   late/early {:.2}x",
+            late / early.max(1e-9)
+        );
+        step_series.push(steps.clone());
+    }
+    let growth = |s: &[f64]| {
+        let q = (s.len() / 4).max(1);
+        mean(&s[s.len() - q..]) / mean(&s[..q]).max(1e-9)
+    };
+    println!(
+        "growth in step time, full-window {:.2}x vs kv-cached {:.2}x \
+         (cached decode is ~flat in sequence position)",
+        growth(&step_series[0]),
+        growth(&step_series[1])
+    );
 }

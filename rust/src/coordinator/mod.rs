@@ -123,6 +123,136 @@ impl<'a> Pipeline<'a> {
         Ok(out.into_iter().next().unwrap())
     }
 
+    // ---- KV-cached incremental decode ------------------------------
+    // The `*_decode` bases run the model over *new* token positions only,
+    // against per-lane cached K/V (runtime::kv::KvCache). `lens[i]` is
+    // lane i's valid cached length == the absolute position of its first
+    // new token. See ARCHITECTURE.md for the full contract.
+
+    /// Embed a compacted chunk of new positions: `tokens` is `b * t_new`
+    /// ids with `t_new <= seq` (prefill passes the prompt, a decode step
+    /// passes one token per lane).
+    pub fn embed_decode(
+        &self,
+        params: &Params,
+        tokens: &[i32],
+        b: usize,
+        t_new: usize,
+    ) -> Result<Tensor> {
+        assert_eq!(tokens.len(), b * t_new, "embed_decode token count");
+        let out = self.rt.run_cfg(
+            "embed_fwd_decode",
+            &self.cfg.name,
+            &[
+                Value::tokens(&[b, t_new], tokens.to_vec()),
+                params.get("embed").into(),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// The `h_new + caches + lens` input prefix every block decode shares.
+    fn decode_prefix(
+        h_new: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        lens: &[usize],
+    ) -> Vec<Value> {
+        vec![
+            h_new.into(),
+            k_cache.into(),
+            v_cache.into(),
+            Value::tokens(&[lens.len()], lens.iter().map(|&l| l as i32).collect()),
+        ]
+    }
+
+    fn unpack_decode(out: Vec<Tensor>) -> (Tensor, Tensor, Tensor) {
+        let mut it = out.into_iter();
+        let h = it.next().unwrap();
+        let k = it.next().unwrap();
+        let v = it.next().unwrap();
+        (h, k, v)
+    }
+
+    /// One FP (or dense-dequantized) block over new positions against
+    /// cached K/V: returns `(h_out, k_new, v_new)` — the new K rows come
+    /// back roped, ready to append to the cache.
+    pub fn block_fwd_decode(
+        &self,
+        h_new: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        lens: &[usize],
+        block: &[&Tensor],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let mut inputs = Self::decode_prefix(h_new, k_cache, v_cache, lens);
+        inputs.extend(block.iter().map(|&t| Value::from(t)));
+        let out = self.rt.run_cfg("block_fwd_decode", &self.cfg.name, &inputs)?;
+        Ok(Self::unpack_decode(out))
+    }
+
+    /// PTQ1.61 fused quantized block over new positions (decode variant
+    /// of [`Self::qblock_fwd`]): `qparts` per LINEARS as (w_sal, sign_ns,
+    /// alpha_s, alpha_r1, alpha_r2, mu).
+    pub fn qblock_fwd_decode(
+        &self,
+        h_new: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        lens: &[usize],
+        attn_norm: &Tensor,
+        mlp_norm: &Tensor,
+        qparts: &[[Tensor; 6]],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        assert_eq!(qparts.len(), LINEARS.len());
+        let mut inputs = Self::decode_prefix(h_new, k_cache, v_cache, lens);
+        inputs.push(attn_norm.into());
+        inputs.push(mlp_norm.into());
+        for parts in qparts {
+            for p in parts {
+                inputs.push(p.into());
+            }
+        }
+        let out = self.rt.run_cfg("qblock_fwd_decode", &self.cfg.name, &inputs)?;
+        Ok(Self::unpack_decode(out))
+    }
+
+    /// SmoothQuant W4A4 block over new positions (decode variant of
+    /// [`Self::qblock_w4a4`]). Note: its activation scale is computed over
+    /// the current chunk, so it is numerically close but not bit-equal to
+    /// the full-window fake-quant.
+    pub fn qblock_w4a4_decode(
+        &self,
+        h_new: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        lens: &[usize],
+        block: &[&Tensor],
+        smooth: &[Tensor; 4],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let mut inputs = Self::decode_prefix(h_new, k_cache, v_cache, lens);
+        inputs.extend(block.iter().map(|&t| Value::from(t)));
+        inputs.extend(smooth.iter().map(Value::from));
+        let out =
+            self.rt.run_cfg("qblock_w4a4_fwd_decode", &self.cfg.name, &inputs)?;
+        Ok(Self::unpack_decode(out))
+    }
+
+    /// Final norm + output projection for new positions only: logits
+    /// `(b, t_new, vocab)`, no NLL (decode never needs the loss).
+    pub fn head_decode(&self, params: &Params, h_new: &Tensor) -> Result<Tensor> {
+        let out = self.rt.run_cfg(
+            "head_fwd_decode",
+            &self.cfg.name,
+            &[
+                h_new.into(),
+                params.get("norm_f").into(),
+                params.get("w_out").into(),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
     /// Final norm + head: returns (nll_sum, logits). Batch dimension is
     /// derived from the token count, matching `embed`.
     pub fn head(

@@ -7,9 +7,30 @@ pub mod zeroshot;
 use crate::coordinator::Pipeline;
 use crate::model::{Params, LINEARS};
 use crate::quant::Ptq161Parts;
+use crate::runtime::kv::KvCache;
 use crate::tensor::Tensor;
 
 use anyhow::Result;
+
+/// One layer's PTQ1.61 parts as the 6-tensor arrays the fused artifacts
+/// take, in LINEARS order.
+fn fused_layer_inputs(parts: &[Ptq161Parts]) -> Vec<[Tensor; 6]> {
+    parts
+        .iter()
+        .map(|p| {
+            let out = p.alpha_s.len();
+            let inn = p.alpha_r2.len();
+            [
+                p.w_sal.clone(),
+                p.sign_ns.clone(),
+                Tensor::from_vec(&[out], p.alpha_s.clone()),
+                Tensor::from_vec(&[out], p.alpha_r1.clone()),
+                Tensor::from_vec(&[inn], p.alpha_r2.clone()),
+                Tensor::from_vec(&[out], p.mu.clone()),
+            ]
+        })
+        .collect()
+}
 
 /// How to run the model forward — dense fake-quant (paper's eval contract),
 /// the fused Pallas-kernel path (proves the packed representation), or the
@@ -37,21 +58,7 @@ impl<'a> ModelEval<'a> {
             h = match self {
                 ModelEval::Dense(p) => pipe.block_fwd(&h, &p.block(l))?,
                 ModelEval::Fused { params, parts } => {
-                    let qp: Vec<[Tensor; 6]> = parts[l]
-                        .iter()
-                        .map(|p| {
-                            let out = p.alpha_s.len();
-                            let inn = p.alpha_r2.len();
-                            [
-                                p.w_sal.clone(),
-                                p.sign_ns.clone(),
-                                Tensor::from_vec(&[out], p.alpha_s.clone()),
-                                Tensor::from_vec(&[out], p.alpha_r1.clone()),
-                                Tensor::from_vec(&[inn], p.alpha_r2.clone()),
-                                Tensor::from_vec(&[out], p.mu.clone()),
-                            ]
-                        })
-                        .collect();
+                    let qp = fused_layer_inputs(&parts[l]);
                     let attn_norm = params.get(&format!("l{l}.attn_norm"));
                     let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
                     pipe.qblock_fwd(&h, attn_norm, mlp_norm, &qp)?
@@ -60,6 +67,71 @@ impl<'a> ModelEval<'a> {
                     pipe.qblock_w4a4(&h, &params.block(l), &smooth[l])?
                 }
             };
+        }
+        Ok(h)
+    }
+
+    /// Hidden states for *new* token positions only, against per-lane
+    /// cached K/V — the incremental counterpart of [`Self::forward_h`].
+    ///
+    /// `slots` names one cache slot per compacted-batch row and `tokens`
+    /// holds `slots.len() * t_new` ids: prefill passes the whole prompt
+    /// (`t_new` = prompt length, empty cache), a decode step passes the
+    /// single newest token per lane. Each lane's new positions start at
+    /// its cached length; the new K/V rows are appended to the cache and
+    /// the lengths advanced before returning, so consecutive calls chain.
+    /// For the dense and PTQ1.61-fused paths the result is bit-identical
+    /// to [`Self::forward_h`] over the same prefix (see `runtime::native`
+    /// on the W4A4 exception).
+    pub fn forward_h_incremental(
+        &self,
+        pipe: &Pipeline,
+        cache: &mut KvCache,
+        slots: &[usize],
+        tokens: &[i32],
+    ) -> Result<Tensor> {
+        let b = slots.len();
+        assert!(b > 0 && tokens.len() % b == 0, "ragged incremental batch");
+        let t_new = tokens.len() / b;
+        let params = self.params();
+        let mut h = pipe.embed_decode(params, tokens, b, t_new)?;
+        for l in 0..pipe.cfg.n_layers {
+            // gather only the live prefix plus room for the new positions
+            let (kc, vc, lens) = cache.gather(l, slots, t_new);
+            let (h_out, k_new, v_new) = match self {
+                ModelEval::Dense(p) => {
+                    pipe.block_fwd_decode(&h, &kc, &vc, &lens, &p.block(l))?
+                }
+                ModelEval::Fused { params, parts } => {
+                    let qp = fused_layer_inputs(&parts[l]);
+                    let attn_norm = params.get(&format!("l{l}.attn_norm"));
+                    let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
+                    pipe.qblock_fwd_decode(
+                        &h, &kc, &vc, &lens, attn_norm, mlp_norm, &qp,
+                    )?
+                }
+                ModelEval::W4A4 { params, smooth } => pipe.qblock_w4a4_decode(
+                    &h,
+                    &kc,
+                    &vc,
+                    &lens,
+                    &params.block(l),
+                    &smooth[l],
+                )?,
+            };
+            let row = t_new * k_new.shape[2] * k_new.shape[3];
+            for (r, &slot) in slots.iter().enumerate() {
+                cache.append(
+                    slot,
+                    l,
+                    &k_new.data[r * row..(r + 1) * row],
+                    &v_new.data[r * row..(r + 1) * row],
+                );
+            }
+            h = h_out;
+        }
+        for &slot in slots {
+            cache.advance(slot, t_new);
         }
         Ok(h)
     }

@@ -6,7 +6,8 @@
 //!   quantize    --model tiny --method ptq161 [--preprocessed]
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
-//!               (quick-scale by default; --full for the full pipeline;
+//!               [--no-kv]  (quick-scale by default; --full for the full
+//!               pipeline; KV-cached incremental decode unless --no-kv;
 //!               writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
@@ -91,6 +92,10 @@ fn main() -> Result<()> {
             let label = if args.flag("drain") { "drain" } else { "continuous" };
             let mut metrics = MetricsRegistry::new(label);
             let mut engine = Engine::new(&pipe, &me);
+            // KV-cached incremental decode is the default; --no-kv selects
+            // the full-window baseline (token-identical, but per-step cost
+            // grows with sequence position)
+            engine.cfg.use_kv_cache = !args.flag("no-kv");
             let resps = if args.flag("drain") {
                 engine.run_drain(&mut batcher, &mut metrics)?
             } else {

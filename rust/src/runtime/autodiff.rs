@@ -1,4 +1,5 @@
-//! Reverse-mode autodiff tape over host tensors.
+//! Reverse-mode autodiff tape over host tensors, plus the forward-only
+//! incremental-decode kernels.
 //!
 //! The native backend (runtime::native) builds every model graph — forward
 //! *and* the three gradient artifacts (`lm_grad`, `lora_grad`,
@@ -7,10 +8,18 @@
 //! registers a backward closure capturing exactly the values it needs;
 //! `Tape::backward` walks the (already topologically ordered) tape in
 //! reverse accumulating gradients per node.
+//!
+//! The free functions at the bottom ([`linear_fwd`], [`rmsnorm_fwd`],
+//! [`qlinear_fwd`], [`rope_at`], [`attn_decode`], [`silu_mul_fwd`]) are
+//! the KV-cached decode kernels: tape-free forwards whose math is shared
+//! with (or bit-identical to) the corresponding tape ops, which is what
+//! makes cached decode token-identical to the full-window path.
 
 use crate::tensor::Tensor;
 
+/// RMSNorm variance epsilon (matches python/compile/model.py).
 pub const EPS: f32 = 1e-5;
+/// Rotary-embedding base frequency (matches python/compile/model.py).
 pub const ROPE_THETA: f32 = 10000.0;
 
 pub type NodeId = usize;
@@ -212,20 +221,8 @@ impl Tape {
         let xv = self.vals[x].clone();
         let gv = self.vals[gain].clone();
         let d = *xv.shape.last().unwrap();
-        assert_eq!(gv.shape, vec![d], "rmsnorm gain shape");
         let rows = xv.numel() / d;
-        let mut y = Tensor::zeros(&xv.shape);
-        let mut inv = vec![0.0f32; rows];
-        for r in 0..rows {
-            let xr = &xv.data[r * d..(r + 1) * d];
-            let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32 + EPS;
-            let rinv = 1.0 / ms.sqrt();
-            inv[r] = rinv;
-            let yr = &mut y.data[r * d..(r + 1) * d];
-            for i in 0..d {
-                yr[i] = xr[i] * gv.data[i] * rinv;
-            }
-        }
+        let (y, inv) = rmsnorm_fwd_with_inv(&xv, &gv);
         self.push(
             y,
             Some(Box::new(move |g| {
@@ -256,23 +253,9 @@ impl Tape {
         let xv = self.vals[x].clone();
         let wv = self.vals[w].clone();
         let inn = *xv.shape.last().unwrap();
-        let (out, w_in) = (wv.shape[0], wv.shape[1]);
-        assert_eq!(inn, w_in, "linear contraction {inn} vs {w_in}");
+        let out = wv.shape[0];
         let rows = xv.numel() / inn;
-        let mut yshape = xv.shape.clone();
-        *yshape.last_mut().unwrap() = out;
-        let mut y = Tensor::zeros(&yshape);
-        {
-            let xd = &xv.data;
-            let wd = &wv.data;
-            par_rows(&mut y.data, out, &|r, yr| {
-                let xr = &xd[r * inn..(r + 1) * inn];
-                for (o, yo) in yr.iter_mut().enumerate() {
-                    let wr = &wd[o * inn..(o + 1) * inn];
-                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
-                }
-            });
-        }
+        let y = linear_fwd(&xv, &wv);
         let xshape = xv.shape.clone();
         self.push(
             y,
@@ -672,41 +655,11 @@ impl Tape {
         let (out, inn) = (wsal.shape[0], wsal.shape[1]);
         assert_eq!(*xv.shape.last().unwrap(), inn, "qlinear contraction");
         let rows = xv.numel() / inn;
-        // reconstruct Wq' once (Eq. 9)
-        let mut wq = Tensor::zeros(&[out, inn]);
-        for o in 0..out {
-            let c = r1v.data[o] * asv.data[o];
-            let wr = &mut wq.data[o * inn..(o + 1) * inn];
-            let sr = &signv.data[o * inn..(o + 1) * inn];
-            let wsr = &wsal.data[o * inn..(o + 1) * inn];
-            for i in 0..inn {
-                wr[i] = wsr[i] + c * r2v.data[i] * sr[i];
-            }
-        }
-        // binarized-column indicator from the first sign row
-        let ns: Vec<f32> = signv.data[..inn].iter().map(|v| v.abs()).collect();
-        let mut xs = vec![0.0f32; rows];
-        for (r, x_s) in xs.iter_mut().enumerate() {
-            let xr = &xv.data[r * inn..(r + 1) * inn];
-            *x_s = xr.iter().zip(&ns).map(|(a, b)| a * b).sum();
-        }
-        let mut yshape = xv.shape.clone();
-        *yshape.last_mut().unwrap() = out;
-        let mut y = Tensor::zeros(&yshape);
-        {
-            let xd = &xv.data;
-            let wd = &wq.data;
-            let mud = &muv.data;
-            let xsd = &xs;
-            par_rows(&mut y.data, out, &|r, yr| {
-                let xr = &xd[r * inn..(r + 1) * inn];
-                for (o, yo) in yr.iter_mut().enumerate() {
-                    let wr = &wd[o * inn..(o + 1) * inn];
-                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>()
-                        + xsd[r] * mud[o];
-                }
-            });
-        }
+        // reconstruct Wq' once (Eq. 9), project x onto the binarized
+        // columns, then run the fused matmul — shared with qlinear_fwd
+        let wq = qlinear_weight(&asv, &r1v, &r2v, &wsal, &signv);
+        let (ns, xs) = qlinear_xsal(&xv, &signv);
+        let y = qlinear_matmul(&xv, &wq, &xs, &muv);
         let xshape = xv.shape.clone();
         self.push(
             y,
@@ -782,6 +735,251 @@ impl Tape {
             })),
         )
     }
+}
+
+// ---------------------------------------------------------------------
+// forward-only kernels
+//
+// Tape-free forwards shared by the tape ops above and by the KV-cached
+// incremental-decode artifacts (`*_decode` in runtime::native). Keeping
+// one implementation per op — same loop order, same accumulation order —
+// is what guarantees cached decode is bit-identical to full-window
+// decode for the dense and PTQ1.61-fused paths.
+// ---------------------------------------------------------------------
+
+/// Forward of [`Tape::linear`]: y = x @ w^T over the last axis.
+pub fn linear_fwd(x: &Tensor, w: &Tensor) -> Tensor {
+    let inn = *x.shape.last().unwrap();
+    let (out, w_in) = (w.shape[0], w.shape[1]);
+    assert_eq!(inn, w_in, "linear contraction {inn} vs {w_in}");
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    let xd = &x.data;
+    let wd = &w.data;
+    par_rows(&mut y.data, out, &|r, yr| {
+        let xr = &xd[r * inn..(r + 1) * inn];
+        for (o, yo) in yr.iter_mut().enumerate() {
+            let wr = &wd[o * inn..(o + 1) * inn];
+            *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
+        }
+    });
+    y
+}
+
+/// Forward of [`Tape::rmsnorm`] plus the per-row `1/rms` factors the
+/// backward pass reuses.
+pub(crate) fn rmsnorm_fwd_with_inv(x: &Tensor, gain: &Tensor) -> (Tensor, Vec<f32>) {
+    let d = *x.shape.last().unwrap();
+    assert_eq!(gain.shape, vec![d], "rmsnorm gain shape");
+    let rows = x.numel() / d;
+    let mut y = Tensor::zeros(&x.shape);
+    let mut inv = vec![0.0f32; rows];
+    for r in 0..rows {
+        let xr = &x.data[r * d..(r + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32 + EPS;
+        let rinv = 1.0 / ms.sqrt();
+        inv[r] = rinv;
+        let yr = &mut y.data[r * d..(r + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * gain.data[i] * rinv;
+        }
+    }
+    (y, inv)
+}
+
+/// Forward of [`Tape::rmsnorm`]: y = x * gain / rms(x, last axis).
+pub fn rmsnorm_fwd(x: &Tensor, gain: &Tensor) -> Tensor {
+    rmsnorm_fwd_with_inv(x, gain).0
+}
+
+/// Reconstruct the PTQ1.61 fused weight Wq' (Eq. 9):
+/// `w_sal + (r1 ⊙ a_s)[:,None] * r2[None,:] * sign_ns`.
+pub(crate) fn qlinear_weight(
+    a_s: &Tensor,
+    r1: &Tensor,
+    r2: &Tensor,
+    w_sal: &Tensor,
+    sign: &Tensor,
+) -> Tensor {
+    let (out, inn) = (w_sal.shape[0], w_sal.shape[1]);
+    let mut wq = Tensor::zeros(&[out, inn]);
+    for o in 0..out {
+        let c = r1.data[o] * a_s.data[o];
+        let wr = &mut wq.data[o * inn..(o + 1) * inn];
+        let sr = &sign.data[o * inn..(o + 1) * inn];
+        let wsr = &w_sal.data[o * inn..(o + 1) * inn];
+        for i in 0..inn {
+            wr[i] = wsr[i] + c * r2.data[i] * sr[i];
+        }
+    }
+    wq
+}
+
+/// Binarized-column indicator `|sign_ns|[0]` and the per-row projection
+/// `x · ns` that feeds the mean-shift term of the fused qlinear.
+pub(crate) fn qlinear_xsal(x: &Tensor, sign: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let inn = sign.shape[1];
+    let rows = x.numel() / inn;
+    let ns: Vec<f32> = sign.data[..inn].iter().map(|v| v.abs()).collect();
+    let mut xs = vec![0.0f32; rows];
+    for (r, x_s) in xs.iter_mut().enumerate() {
+        let xr = &x.data[r * inn..(r + 1) * inn];
+        *x_s = xr.iter().zip(&ns).map(|(a, b)| a * b).sum();
+    }
+    (ns, xs)
+}
+
+/// The fused qlinear matmul: y = x @ Wq'^T + xs ⊗ mu.
+pub(crate) fn qlinear_matmul(x: &Tensor, wq: &Tensor, xs: &[f32], mu: &Tensor) -> Tensor {
+    let (out, inn) = (wq.shape[0], wq.shape[1]);
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    let xd = &x.data;
+    let wd = &wq.data;
+    let mud = &mu.data;
+    par_rows(&mut y.data, out, &|r, yr| {
+        let xr = &xd[r * inn..(r + 1) * inn];
+        for (o, yo) in yr.iter_mut().enumerate() {
+            let wr = &wd[o * inn..(o + 1) * inn];
+            *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>() + xs[r] * mud[o];
+        }
+    });
+    y
+}
+
+/// Forward of [`Tape::qlinear`]: the PTQ1.61 fused quantized linear
+/// without a tape node (decode path).
+pub fn qlinear_fwd(
+    x: &Tensor,
+    a_s: &Tensor,
+    r1: &Tensor,
+    r2: &Tensor,
+    mu: &Tensor,
+    w_sal: &Tensor,
+    sign: &Tensor,
+) -> Tensor {
+    assert_eq!(*x.shape.last().unwrap(), w_sal.shape[1], "qlinear contraction");
+    let wq = qlinear_weight(a_s, r1, r2, w_sal, sign);
+    let (_, xs) = qlinear_xsal(x, sign);
+    qlinear_matmul(x, &wq, &xs, mu)
+}
+
+/// Rotary embedding over `(b, t_new, h, hd)` where lane `bi`'s row `j`
+/// sits at absolute position `starts[bi] + j`. With `starts = [0; b]`
+/// and `t_new = t` this is exactly [`Tape::rope`]'s forward.
+pub fn rope_at(x: &Tensor, starts: &[usize], theta: f32) -> Tensor {
+    let (b, tn, nh, hd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(starts.len(), b, "rope_at: one start per lane");
+    let half = hd / 2;
+    let mut y = Tensor::zeros(&x.shape);
+    for bi in 0..b {
+        for j in 0..tn {
+            let pos = starts[bi] + j;
+            // trig is per (position, i): hoist it out of the head loop
+            for i in 0..half {
+                let freq = 1.0 / theta.powf(i as f32 / half as f32);
+                let ang = pos as f32 * freq;
+                let (c, s) = (ang.cos(), ang.sin());
+                for hi in 0..nh {
+                    let base = ((bi * tn + j) * nh + hi) * hd;
+                    let x1 = x.data[base + i];
+                    let x2 = x.data[base + half + i];
+                    y.data[base + i] = x1 * c - x2 * s;
+                    y.data[base + half + i] = x1 * s + x2 * c;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Causal attention of new positions against cached + new K/V.
+///
+/// `q`, `k_new`, `v_new` are `(b, t_new, h, hd)` (q and k_new already
+/// roped); `k_cache`/`v_cache` are `(b, capacity, h, hd)` with `lens[bi]`
+/// valid positions. New row `j` of lane `bi` attends to cached positions
+/// `0..lens[bi]` and new positions `0..=j` — the same score, softmax and
+/// context accumulation order as the full-window
+/// [`Tape::attn_scores`] → [`Tape::causal_softmax`] → [`Tape::attn_ctx`]
+/// pipeline, so the result is bit-identical.
+pub fn attn_decode(
+    q: &Tensor,
+    k_new: &Tensor,
+    v_new: &Tensor,
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    lens: &[usize],
+) -> Tensor {
+    let (b, tn, nh, hd) = (q.shape[0], q.shape[1], q.shape[2], q.shape[3]);
+    let cap = k_cache.shape[1];
+    assert_eq!(lens.len(), b, "attn_decode: one length per lane");
+    let inv = 1.0 / (hd as f32).sqrt();
+    let idx_new = |bi: usize, ti: usize, hi: usize| ((bi * tn + ti) * nh + hi) * hd;
+    let idx_cache = |bi: usize, si: usize, hi: usize| ((bi * cap + si) * nh + hi) * hd;
+    let mut ctx = Tensor::zeros(&q.shape);
+    let mut scores = vec![0.0f32; cap + tn];
+    for bi in 0..b {
+        let past = lens[bi];
+        assert!(past + tn <= cap, "attn_decode: window overflow");
+        for hi in 0..nh {
+            for j in 0..tn {
+                let total = past + j + 1;
+                let qb = idx_new(bi, j, hi);
+                let qr = &q.data[qb..qb + hd];
+                for (s, sc) in scores.iter_mut().enumerate().take(total) {
+                    let kb = if s < past {
+                        idx_cache(bi, s, hi)
+                    } else {
+                        idx_new(bi, s - past, hi)
+                    };
+                    let kr = if s < past { &k_cache.data } else { &k_new.data };
+                    *sc = qr
+                        .iter()
+                        .zip(&kr[kb..kb + hd])
+                        .map(|(a, c)| a * c)
+                        .sum::<f32>()
+                        * inv;
+                }
+                let mx = scores[..total]
+                    .iter()
+                    .cloned()
+                    .fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0f32;
+                for sc in scores.iter_mut().take(total) {
+                    let e = (*sc - mx).exp();
+                    *sc = e;
+                    z += e;
+                }
+                for sc in scores.iter_mut().take(total) {
+                    *sc /= z;
+                }
+                let cb = idx_new(bi, j, hi);
+                for (s, &p) in scores.iter().enumerate().take(total) {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vb = if s < past {
+                        idx_cache(bi, s, hi)
+                    } else {
+                        idx_new(bi, s - past, hi)
+                    };
+                    let vd = if s < past { &v_cache.data } else { &v_new.data };
+                    for c in 0..hd {
+                        ctx.data[cb + c] += p * vd[vb + c];
+                    }
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// Forward of [`Tape::silu`] followed by [`Tape::mul`]:
+/// `silu(gate) * up`, the SwiGLU gate of the MLP.
+pub fn silu_mul_fwd(gate: &Tensor, up: &Tensor) -> Tensor {
+    gate.zip(up, |x, u| x / (1.0 + (-x).exp()) * u)
 }
 
 #[cfg(test)]
@@ -945,6 +1143,76 @@ mod tests {
             let y = tp.qlinear(xid, a_s, r1, r2, mu, &w_sal, &sign);
             tp.distance(y, &tgt, 0.5)
         });
+    }
+
+    #[test]
+    fn rope_at_matches_tape_rope() {
+        let (b, t, nh, hd) = (2, 5, 2, 4);
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let mut tp = Tape::new();
+        let xid = tp.input(x.clone());
+        let rid = tp.rope(xid, ROPE_THETA);
+        let full = tp.val(rid).clone();
+        // zero starts over the full window reproduce the tape op exactly
+        assert_eq!(rope_at(&x, &[0, 0], ROPE_THETA).data, full.data);
+        // per-lane offsets: row j of a chunk starting at position s must
+        // equal row s+j of the full-window rotation
+        let chunk = Tensor::from_vec(
+            &[1, 2, nh, hd],
+            x.data[(t - 2) * nh * hd..t * nh * hd].to_vec(),
+        );
+        let shifted = rope_at(&chunk, &[t - 2], ROPE_THETA);
+        assert_eq!(shifted.data[..], full.data[(t - 2) * nh * hd..t * nh * hd]);
+    }
+
+    #[test]
+    fn attn_decode_matches_full_window_pipeline() {
+        let (b, t, nh, hd) = (2, 6, 2, 4);
+        let mut rng = Rng::new(32);
+        let q = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let k = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let v = Tensor::randn(&[b, t, nh, hd], 1.0, &mut rng);
+        let mut tp = Tape::new();
+        let qid = tp.input(q.clone());
+        let kid = tp.input(k.clone());
+        let vid = tp.input(v.clone());
+        let s = tp.attn_scores(qid, kid);
+        let p = tp.causal_softmax(s);
+        let cid = tp.attn_ctx(p, vid);
+        let full = tp.val(cid).clone();
+        // split the window: first `past` positions cached, rest new
+        let past = 4;
+        let tn = t - past;
+        let re = nh * hd;
+        let mut kc = Tensor::zeros(&[b, t, nh, hd]);
+        let mut vc = Tensor::zeros(&[b, t, nh, hd]);
+        let mut qn = Tensor::zeros(&[b, tn, nh, hd]);
+        let mut kn = Tensor::zeros(&[b, tn, nh, hd]);
+        let mut vn = Tensor::zeros(&[b, tn, nh, hd]);
+        for bi in 0..b {
+            let w0 = bi * t * re;
+            kc.data[bi * t * re..bi * t * re + past * re]
+                .copy_from_slice(&k.data[w0..w0 + past * re]);
+            vc.data[bi * t * re..bi * t * re + past * re]
+                .copy_from_slice(&v.data[w0..w0 + past * re]);
+            let n0 = bi * tn * re;
+            qn.data[n0..n0 + tn * re]
+                .copy_from_slice(&q.data[w0 + past * re..w0 + t * re]);
+            kn.data[n0..n0 + tn * re]
+                .copy_from_slice(&k.data[w0 + past * re..w0 + t * re]);
+            vn.data[n0..n0 + tn * re]
+                .copy_from_slice(&v.data[w0 + past * re..w0 + t * re]);
+        }
+        let ctx = attn_decode(&qn, &kn, &vn, &kc, &vc, &[past, past]);
+        // incremental rows must equal the full pipeline's last tn rows
+        for bi in 0..b {
+            let got = &ctx.data[bi * tn * re..(bi + 1) * tn * re];
+            let want = &full.data[(bi * t + past) * re..(bi + 1) * t * re];
+            for (a, e) in got.iter().zip(want) {
+                assert_eq!(a, e, "attn_decode deviates from full window");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,292 @@
+//! Per-lane KV cache for incremental decode.
+//!
+//! The serve engine owns one [`KvCache`] sized to its lane pool: each lane
+//! holds one *slot*, and a slot stores the roped attention keys and the
+//! values of every layer for the positions that lane has already decoded.
+//! A decode step then only runs the model over the *new* token positions —
+//! the quadratic re-read of the window is replaced by one cached-K/V
+//! attention pass, so per-token cost is flat in sequence position (the
+//! deployment efficiency extreme low-bit PTQ exists to buy; see
+//! `ARCHITECTURE.md`).
+//!
+//! Layout: one contiguous `f32` buffer per side (K and V), indexed as
+//! `[slot][layer][position][head][head_dim]`. Rows for a new chunk are
+//! written by [`KvCache::append`] layer by layer at the slot's current
+//! length, and the length is bumped once per chunk by [`KvCache::advance`]
+//! after *all* layers have appended (every layer of one forward must see
+//! the same past length). [`KvCache::gather`] materializes the compacted
+//! per-step batch the native decode kernels consume: K/V tensors covering
+//! only the *live prefix* of the window plus the per-lane valid lengths
+//! (the kernel never reads rows at or beyond a lane's length, so stale
+//! rows need no zeroing and the dead tail is never copied).
+//!
+//! Slots are recycled through a free list: [`KvCache::alloc`] on lane
+//! admission, [`KvCache::free`] when the lane finishes, and
+//! [`KvCache::total_allocs`] counts lifetime allocations so tests can
+//! assert that a finished lane's slot really is reused by the next
+//! request.
+
+use crate::tensor::Tensor;
+
+/// Per-lane, per-layer K/V store for incremental decode (see the module
+/// docs for the layout and the append/advance protocol).
+#[derive(Debug)]
+pub struct KvCache {
+    n_layers: usize,
+    heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    /// valid positions per slot (shared by all layers of that slot)
+    lens: Vec<usize>,
+    in_use: Vec<bool>,
+    /// free slot ids, popped on alloc, pushed back on free
+    free: Vec<usize>,
+    allocs: u64,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl KvCache {
+    /// A cache with `slots` lanes, each holding `n_layers` layers of up to
+    /// `capacity` positions of `heads * head_dim` features.
+    pub fn new(
+        slots: usize,
+        n_layers: usize,
+        capacity: usize,
+        heads: usize,
+        head_dim: usize,
+    ) -> KvCache {
+        assert!(slots > 0 && n_layers > 0 && capacity > 0);
+        let total = slots * n_layers * capacity * heads * head_dim;
+        KvCache {
+            n_layers,
+            heads,
+            head_dim,
+            capacity,
+            lens: vec![0; slots],
+            in_use: vec![false; slots],
+            free: (0..slots).rev().collect(),
+            allocs: 0,
+            k: vec![0.0; total],
+            v: vec![0.0; total],
+        }
+    }
+
+    /// Elements of one cached position (heads * head_dim).
+    fn row_elems(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    fn layer_stride(&self) -> usize {
+        self.capacity * self.row_elems()
+    }
+
+    fn base(&self, slot: usize, layer: usize) -> usize {
+        (slot * self.n_layers + layer) * self.layer_stride()
+    }
+
+    /// Number of slots (== the engine's lane capacity).
+    pub fn slots(&self) -> usize {
+        self.in_use.len()
+    }
+
+    /// Maximum cached positions per slot (the model window).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Valid cached positions of `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.lens[slot]
+    }
+
+    /// Slots currently allocated to live lanes.
+    pub fn in_use_count(&self) -> usize {
+        self.in_use.iter().filter(|&&b| b).count()
+    }
+
+    /// Lifetime allocation count — strictly greater than [`Self::slots`]
+    /// once freed slots have been reused.
+    pub fn total_allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    /// Resident size of the K+V buffers in bytes (capacity, not fill).
+    pub fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    /// Claim a free slot (length reset to 0), or `None` when every slot is
+    /// held by a live lane.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let slot = self.free.pop()?;
+        debug_assert!(!self.in_use[slot]);
+        self.in_use[slot] = true;
+        self.lens[slot] = 0;
+        self.allocs += 1;
+        Some(slot)
+    }
+
+    /// Return `slot` to the free list; its contents become dead rows that
+    /// the next owner overwrites from position 0.
+    pub fn free(&mut self, slot: usize) {
+        assert!(self.in_use[slot], "freeing a slot that is not in use");
+        self.in_use[slot] = false;
+        self.lens[slot] = 0;
+        self.free.push(slot);
+    }
+
+    /// Write one layer's K/V rows for a new chunk at the slot's current
+    /// length. `k_rows`/`v_rows` are `t_new * heads * head_dim` elements
+    /// (one compacted-batch row of the kernel's `k_new`/`v_new` outputs).
+    /// The length is *not* bumped — call [`Self::advance`] once after all
+    /// layers appended.
+    pub fn append(&mut self, slot: usize, layer: usize, k_rows: &[f32], v_rows: &[f32]) {
+        assert!(self.in_use[slot], "append to a free slot");
+        assert_eq!(k_rows.len(), v_rows.len());
+        let re = self.row_elems();
+        assert_eq!(k_rows.len() % re, 0, "append: ragged rows");
+        let t_new = k_rows.len() / re;
+        let len = self.lens[slot];
+        assert!(
+            len + t_new <= self.capacity,
+            "KV slot overflow: {len} + {t_new} > {}",
+            self.capacity
+        );
+        let at = self.base(slot, layer) + len * re;
+        self.k[at..at + k_rows.len()].copy_from_slice(k_rows);
+        self.v[at..at + v_rows.len()].copy_from_slice(v_rows);
+    }
+
+    /// Bump `slot`'s valid length by `t_new` after every layer appended
+    /// its rows for the chunk.
+    pub fn advance(&mut self, slot: usize, t_new: usize) {
+        assert!(self.lens[slot] + t_new <= self.capacity, "advance past capacity");
+        self.lens[slot] += t_new;
+    }
+
+    /// Materialize one layer's cached K/V for a compacted batch of slots:
+    /// `(k, v, lens)` with `lens[i]` the valid positions of `slots[i]`.
+    ///
+    /// Only the *live prefix* is copied: `k`/`v` come back as
+    /// `(slots.len(), upto, heads, head_dim)` where `upto = max(lens) +
+    /// headroom`, clamped to the window capacity — a one-token decode step
+    /// passes `headroom = 1` and never pays for the dead tail of the
+    /// window (the `_decode` bases accept the shrunk time axis). Rows at
+    /// or beyond `lens[i]` are dead and must not be read.
+    pub fn gather(
+        &self,
+        layer: usize,
+        slots: &[usize],
+        headroom: usize,
+    ) -> (Tensor, Tensor, Vec<usize>) {
+        let b = slots.len();
+        let lens: Vec<usize> = slots
+            .iter()
+            .map(|&slot| {
+                assert!(self.in_use[slot], "gather from a free slot");
+                self.lens[slot]
+            })
+            .collect();
+        let max_len = lens.iter().max().copied().unwrap_or(0);
+        let upto = (max_len + headroom).clamp(1, self.capacity);
+        let re = self.row_elems();
+        let shape = [b, upto, self.heads, self.head_dim];
+        let mut k = Tensor::zeros(&shape);
+        let mut v = Tensor::zeros(&shape);
+        for (row, &slot) in slots.iter().enumerate() {
+            let at = self.base(slot, layer);
+            k.data[row * upto * re..(row + 1) * upto * re]
+                .copy_from_slice(&self.k[at..at + upto * re]);
+            v.data[row * upto * re..(row + 1) * upto * re]
+                .copy_from_slice(&self.v[at..at + upto * re]);
+        }
+        (k, v, lens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_reuses_slots() {
+        let mut c = KvCache::new(2, 1, 4, 1, 2);
+        let a = c.alloc().unwrap();
+        let b = c.alloc().unwrap();
+        assert_ne!(a, b);
+        assert!(c.alloc().is_none(), "pool exhausted");
+        assert_eq!(c.in_use_count(), 2);
+        c.free(a);
+        let a2 = c.alloc().unwrap();
+        assert_eq!(a2, a, "freed slot is reused");
+        assert_eq!(c.total_allocs(), 3);
+    }
+
+    #[test]
+    fn append_advance_gather_round_trip() {
+        // 1 slot, 2 layers, capacity 3, 1 head of dim 2
+        let mut c = KvCache::new(1, 2, 3, 1, 2);
+        let s = c.alloc().unwrap();
+        // chunk of 2 positions: both layers append, then one advance
+        c.append(s, 0, &[1.0, 2.0, 3.0, 4.0], &[-1.0, -2.0, -3.0, -4.0]);
+        c.append(s, 1, &[5.0, 6.0, 7.0, 8.0], &[-5.0, -6.0, -7.0, -8.0]);
+        c.advance(s, 2);
+        assert_eq!(c.len(s), 2);
+        let (k0, v0, lens) = c.gather(0, &[s], 1);
+        // live prefix only: 2 cached + 1 headroom = 3 positions
+        assert_eq!(k0.shape, vec![1, 3, 1, 2]);
+        assert_eq!(lens, vec![2]);
+        assert_eq!(&k0.data[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&v0.data[..4], &[-1.0, -2.0, -3.0, -4.0]);
+        let (k1, _, _) = c.gather(1, &[s], 1);
+        assert_eq!(&k1.data[..4], &[5.0, 6.0, 7.0, 8.0]);
+        // one more position lands after the first chunk
+        c.append(s, 0, &[9.0, 10.0], &[0.0, 0.0]);
+        c.append(s, 1, &[11.0, 12.0], &[0.0, 0.0]);
+        c.advance(s, 1);
+        let (k0, _, lens) = c.gather(0, &[s], 0);
+        assert_eq!(lens, vec![3]);
+        assert_eq!(&k0.data[4..6], &[9.0, 10.0]);
+        // headroom past the window clamps to capacity
+        let (k0, _, _) = c.gather(0, &[s], 5);
+        assert_eq!(k0.shape, vec![1, 3, 1, 2]);
+    }
+
+    #[test]
+    fn gather_orders_rows_by_request() {
+        let mut c = KvCache::new(3, 1, 2, 1, 1);
+        let s0 = c.alloc().unwrap();
+        let s1 = c.alloc().unwrap();
+        c.append(s0, 0, &[1.0], &[1.0]);
+        c.advance(s0, 1);
+        c.append(s1, 0, &[2.0], &[2.0]);
+        c.advance(s1, 1);
+        // batch order is the caller's order, not slot order; rows are
+        // (1 cached + 1 headroom) wide
+        let (k, _, lens) = c.gather(0, &[s1, s0], 1);
+        assert_eq!(k.shape, vec![2, 2, 1, 1]);
+        assert_eq!(k.data[0], 2.0);
+        assert_eq!(k.data[2], 1.0);
+        assert_eq!(lens, vec![1, 1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn append_past_capacity_panics() {
+        let mut c = KvCache::new(1, 1, 2, 1, 1);
+        let s = c.alloc().unwrap();
+        c.append(s, 0, &[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn freed_slot_restarts_at_zero() {
+        let mut c = KvCache::new(1, 1, 4, 1, 1);
+        let s = c.alloc().unwrap();
+        c.append(s, 0, &[1.0, 2.0], &[1.0, 2.0]);
+        c.advance(s, 2);
+        c.free(s);
+        let s2 = c.alloc().unwrap();
+        assert_eq!(c.len(s2), 0, "reused slot starts empty");
+    }
+}

@@ -7,20 +7,31 @@ use anyhow::{anyhow, Result};
 
 use crate::util::json::Json;
 
+/// One positional input or output of an artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IoSpec {
+    /// slot name (e.g. `h`, `tokens`, `wq.alpha_s`)
     pub name: String,
+    /// manifest shape; see `runtime`'s shape flexibility rules
     pub shape: Vec<usize>,
+    /// `"f32"` or `"i32"`
     pub dtype: String,
 }
 
+/// One executable of the contract: `{base}_{config}` with typed IO.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// full artifact name, `{base}_{config}`
     pub name: String,
+    /// behavior key the native backend dispatches on (e.g. `block_fwd`)
     pub base: String,
+    /// model config this artifact was specialized for
     pub config: String,
+    /// HLO text file the build step would write (unused natively)
     pub file: String,
+    /// positional input specs
     pub inputs: Vec<IoSpec>,
+    /// positional output specs
     pub outputs: Vec<IoSpec>,
 }
 
@@ -32,27 +43,41 @@ impl ArtifactSpec {
     }
 }
 
+/// One model size (mirrors python/compile/model.py CONFIGS).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// config name (`tiny`, `small`, `micro`)
     pub name: String,
+    /// vocabulary size (byte tokenizer: 256)
     pub vocab: usize,
+    /// model width
     pub d: usize,
+    /// attention heads (head_dim = d / n_heads)
     pub n_heads: usize,
+    /// transformer blocks
     pub n_layers: usize,
+    /// MLP hidden width
     pub ffn: usize,
+    /// context window (also the KV-cache capacity per lane)
     pub seq: usize,
+    /// training batch rows
     pub b_train: usize,
+    /// eval/serve batch rows (the engine's lane count)
     pub b_eval: usize,
+    /// restorative-LoRA rank
     pub lora_rank: usize,
 }
 
+/// The typed artifact contract (see module docs).
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// model configs by name
     pub configs: HashMap<String, ModelConfig>,
     /// canonical parameter order per config: (name, shape)
     pub param_spec: HashMap<String, Vec<(String, Vec<usize>)>>,
     /// block linear names in canonical order (wq..w_down)
     pub linears: Vec<String>,
+    /// artifact specs by full name
     pub artifacts: HashMap<String, ArtifactSpec>,
 }
 
@@ -79,6 +104,7 @@ fn io_from_json(j: &Json) -> Result<IoSpec> {
 }
 
 impl Manifest {
+    /// Parse `artifacts/manifest.json` text (the Python build's output).
     pub fn parse(text: &str) -> Result<Manifest> {
         let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
         let mut configs = HashMap::new();
@@ -378,10 +404,103 @@ fn artifact_specs(cfg: &ModelConfig) -> Vec<ArtifactSpec> {
     }
     bo_in.push(io("nlc_w", &[]));
     arts.push(mk("block_opt_grad", bo_in, bo_out));
+    arts.extend(decode_artifact_specs(cfg));
+    arts
+}
+
+/// The 5 KV-cached incremental-decode artifact specs of one config.
+///
+/// Shapes are the worst case (full lane pool, full window); the runtime
+/// additionally lets `_decode` bases shrink the time axis of
+/// `tokens`/`h_new` (prefill chunks, one-token steps) on top of the
+/// usual flexible leading batch dim. `pos` carries each lane's valid
+/// cached length; `k_new`/`v_new` come back for the cache append. Kept
+/// separate from `artifact_specs` so a parsed (Python-built) manifest
+/// that predates the decode contract can be back-filled
+/// ([`Manifest::ensure_decode_artifacts`]).
+fn decode_artifact_specs(cfg: &ModelConfig) -> Vec<ArtifactSpec> {
+    let (d, ffn, vocab) = (cfg.d, cfg.ffn, cfg.vocab);
+    let (t, be) = (cfg.seq, cfg.b_eval);
+    let linears = crate::model::LINEARS;
+    let mk = |base: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>| ArtifactSpec {
+        name: format!("{base}_{}", cfg.name),
+        base: base.into(),
+        config: cfg.name.clone(),
+        file: format!("{base}_{}.hlo.txt", cfg.name),
+        inputs,
+        outputs,
+    };
+    let mut arts = Vec::new();
+    let (nh, hd) = (cfg.n_heads, d / cfg.n_heads);
+    let kv_in = |v: &mut Vec<IoSpec>| {
+        v.push(io("k_cache", &[be, t, nh, hd]));
+        v.push(io("v_cache", &[be, t, nh, hd]));
+        v.push(io_i32("pos", &[be]));
+    };
+    let dec_out = vec![
+        io("h_out", &[be, t, d]),
+        io("k_new", &[be, t, nh, hd]),
+        io("v_new", &[be, t, nh, hd]),
+    ];
+    arts.push(mk(
+        "embed_fwd_decode",
+        vec![io_i32("tokens", &[be, t]), io("embed", &[vocab, d])],
+        vec![io("h", &[be, t, d])],
+    ));
+    let mut bd_in = vec![io("h_new", &[be, t, d])];
+    kv_in(&mut bd_in);
+    bd_in.extend(block_param_ios(cfg));
+    arts.push(mk("block_fwd_decode", bd_in, dec_out.clone()));
+    let mut qd_in = vec![io("h_new", &[be, t, d])];
+    kv_in(&mut qd_in);
+    qd_in.push(io("attn_norm", &[d]));
+    qd_in.push(io("mlp_norm", &[d]));
+    for lin in linears {
+        let (out, inn) = crate::model::linear_shape(cfg, lin);
+        qd_in.push(io(&format!("{lin}.w_sal"), &[out, inn]));
+        qd_in.push(io(&format!("{lin}.sign_ns"), &[out, inn]));
+        qd_in.push(io(&format!("{lin}.alpha_s"), &[out]));
+        qd_in.push(io(&format!("{lin}.alpha_r1"), &[out]));
+        qd_in.push(io(&format!("{lin}.alpha_r2"), &[inn]));
+        qd_in.push(io(&format!("{lin}.mu"), &[out]));
+    }
+    arts.push(mk("qblock_fwd_decode", qd_in, dec_out.clone()));
+    let mut wd_in = vec![io("h_new", &[be, t, d])];
+    kv_in(&mut wd_in);
+    wd_in.extend(block_param_ios(cfg));
+    wd_in.extend([
+        io("s_attn", &[d]),
+        io("s_o", &[d]),
+        io("s_mlp", &[d]),
+        io("s_down", &[ffn]),
+    ]);
+    arts.push(mk("qblock_w4a4_fwd_decode", wd_in, dec_out));
+    arts.push(mk(
+        "head_fwd_decode",
+        vec![
+            io("h_new", &[be, t, d]),
+            io("norm_f", &[d]),
+            io("w_out", &[vocab, d]),
+        ],
+        vec![io("logits", &[be, t, vocab])],
+    ));
     arts
 }
 
 impl Manifest {
+    /// Back-fill the `*_decode` artifact specs for every config that lacks
+    /// them. Manifests written by a python build that predates the
+    /// KV-cached decode contract only carry the nine full-window bases;
+    /// the decode variants execute natively regardless, so serving stays
+    /// available against an older artifacts directory.
+    pub fn ensure_decode_artifacts(&mut self) {
+        for cfg in self.configs.values() {
+            for spec in decode_artifact_specs(cfg) {
+                self.artifacts.entry(spec.name.clone()).or_insert(spec);
+            }
+        }
+    }
+
     /// Built-in manifest for the native backend: what aot.py would write
     /// for the built-in configs, constructed without any artifacts on disk.
     pub fn builtin() -> Manifest {
@@ -439,6 +558,24 @@ mod tests {
     }
 
     #[test]
+    fn ensure_decode_artifacts_backfills_old_manifests() {
+        let mut m = Manifest::parse(SAMPLE).unwrap();
+        assert!(!m.artifacts.contains_key("block_fwd_decode_tiny"));
+        m.ensure_decode_artifacts();
+        for base in [
+            "embed_fwd_decode",
+            "block_fwd_decode",
+            "qblock_fwd_decode",
+            "qblock_w4a4_fwd_decode",
+            "head_fwd_decode",
+        ] {
+            assert!(m.artifacts.contains_key(&format!("{base}_tiny")), "{base}");
+        }
+        // pre-existing artifacts are left untouched
+        assert!(m.artifacts.contains_key("head_fwd_tiny"));
+    }
+
+    #[test]
     fn builtin_covers_all_configs_and_artifacts() {
         let m = Manifest::builtin();
         for c in ["tiny", "small", "micro"] {
@@ -453,6 +590,11 @@ mod tests {
                 "lm_grad",
                 "lora_grad",
                 "block_opt_grad",
+                "embed_fwd_decode",
+                "block_fwd_decode",
+                "qblock_fwd_decode",
+                "qblock_w4a4_fwd_decode",
+                "head_fwd_decode",
             ] {
                 assert!(
                     m.artifacts.contains_key(&format!("{base}_{c}")),
@@ -482,6 +624,29 @@ mod tests {
         let qb = &m.artifacts["qblock_fwd_tiny"];
         assert_eq!(qb.inputs.len(), 3 + 6 * 7);
         assert_eq!(qb.input_index("wq.alpha_s"), Some(5));
+    }
+
+    #[test]
+    fn builtin_decode_variant_io_counts() {
+        let m = Manifest::builtin();
+        let cfg = &m.configs["tiny"];
+        let bd = &m.artifacts["block_fwd_decode_tiny"];
+        assert_eq!(bd.inputs.len(), 4 + 9, "h_new + kv + pos + block params");
+        assert_eq!(bd.outputs.len(), 3, "h_out + k_new + v_new");
+        assert_eq!(bd.input_index("pos"), Some(3));
+        assert_eq!(
+            bd.inputs[1].shape,
+            vec![cfg.b_eval, cfg.seq, cfg.n_heads, cfg.d / cfg.n_heads]
+        );
+        let qd = &m.artifacts["qblock_fwd_decode_tiny"];
+        assert_eq!(qd.inputs.len(), 6 + 6 * 7);
+        assert_eq!(qd.input_index("wq.w_sal"), Some(6));
+        let wd = &m.artifacts["qblock_w4a4_fwd_decode_tiny"];
+        assert_eq!(wd.inputs.len(), 4 + 9 + 4);
+        assert_eq!(wd.input_index("s_attn"), Some(13));
+        let hd = &m.artifacts["head_fwd_decode_tiny"];
+        assert_eq!(hd.inputs.len(), 3);
+        assert_eq!(hd.outputs[0].name, "logits");
     }
 
     #[test]

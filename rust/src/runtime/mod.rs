@@ -14,8 +14,14 @@
 //! dimension of activation/token inputs is *flexible*: the serve engine
 //! compacts finished lanes out of the batch, so decode cost scales with
 //! the number of active lanes instead of the manifest's full `b_eval`.
+//! For the `*_decode` bases (KV-cached incremental decode, PR 2) the
+//! *time* dimension may shrink too: `tokens`/`h_new` carry a prefill
+//! chunk or a single decode position, and `k_cache`/`v_cache` carry only
+//! the live prefix of the window. `runtime::kv` holds the per-lane K/V
+//! store those bases read from and append to.
 
 pub mod autodiff;
+pub mod kv;
 pub mod manifest;
 pub mod native;
 
@@ -32,11 +38,14 @@ use crate::tensor::Tensor;
 /// A host-side input value: f32 tensor or i32 token array.
 #[derive(Debug, Clone)]
 pub enum Value {
+    /// Dense f32 tensor (activations, parameters).
     F32(Tensor),
+    /// Integer array (token ids, cache lengths) as (shape, data).
     I32(Vec<usize>, Vec<i32>),
 }
 
 impl Value {
+    /// The value's shape, whichever dtype it holds.
     pub fn shape(&self) -> &[usize] {
         match self {
             Value::F32(t) => &t.shape,
@@ -44,6 +53,8 @@ impl Value {
         }
     }
 
+    /// An i32 input of the given shape; panics when the element count
+    /// does not match.
     pub fn tokens(shape: &[usize], data: Vec<i32>) -> Value {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Value::I32(shape.to_vec(), data)
@@ -66,21 +77,42 @@ impl From<&Tensor> for Value {
 /// below the manifest shape (continuous batching compacts finished lanes).
 /// Larger-than-manifest batches are rejected: a fixed-shape PJRT
 /// executable behind the same contract could never run them.
-const BATCH_FLEX: [&str; 5] = ["tokens", "h", "x_q", "f1", "f3"];
+const BATCH_FLEX: [&str; 9] =
+    ["tokens", "h", "x_q", "f1", "f3", "h_new", "k_cache", "v_cache", "pos"];
 
-fn shape_ok(io: &IoSpec, got: &[usize]) -> bool {
+/// Inputs of `*_decode` bases whose *time* axis (dim 1) may also shrink:
+/// prefill runs a prompt-length chunk, a decode step runs one position,
+/// and the cache tensors carry only the live prefix of the window
+/// (`KvCache::gather`). A PJRT path would serve these from a small set of
+/// bucketed shapes.
+const TIME_FLEX: [&str; 4] = ["tokens", "h_new", "k_cache", "v_cache"];
+
+fn shape_ok(base: &str, io: &IoSpec, got: &[usize]) -> bool {
     if got == io.shape.as_slice() {
         return true;
     }
-    BATCH_FLEX.contains(&io.name.as_str())
-        && io.shape.len() >= 2
-        && got.len() == io.shape.len()
-        && got[0] >= 1
-        && got[0] <= io.shape[0]
-        && got[1..] == io.shape[1..]
+    if !BATCH_FLEX.contains(&io.name.as_str())
+        || got.len() != io.shape.len()
+        || got.is_empty()
+        || got[0] < 1
+        || got[0] > io.shape[0]
+    {
+        return false;
+    }
+    let time_flex = base.ends_with("_decode")
+        && TIME_FLEX.contains(&io.name.as_str())
+        && io.shape.len() >= 2;
+    if time_flex {
+        got[1] >= 1 && got[1] <= io.shape[1] && got[2..] == io.shape[2..]
+    } else {
+        got[1..] == io.shape[1..]
+    }
 }
 
+/// The execution layer: a manifest plus the native backend behind it.
+/// Every model computation in the crate goes through [`Runtime::run`].
 pub struct Runtime {
+    /// the artifact contract this runtime validates against
     pub manifest: Manifest,
     /// execution counter per artifact, for the perf report
     pub exec_counts: RefCell<HashMap<String, u64>>,
@@ -95,7 +127,11 @@ impl Runtime {
         let manifest = if mpath.exists() {
             let text = std::fs::read_to_string(&mpath)
                 .with_context(|| format!("reading {}", mpath.display()))?;
-            Manifest::parse(&text)?
+            let mut m = Manifest::parse(&text)?;
+            // older python builds predate the KV-cached decode contract;
+            // the decode bases execute natively, so back-fill their specs
+            m.ensure_decode_artifacts();
+            m
         } else {
             Manifest::builtin()
         };
@@ -111,6 +147,7 @@ impl Runtime {
         }
     }
 
+    /// Look up an artifact spec by full name (`{base}_{config}`).
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest
             .artifacts
@@ -137,7 +174,7 @@ impl Runtime {
             );
         }
         for (v, io) in inputs.iter().zip(&spec.inputs) {
-            if !shape_ok(io, v.shape()) {
+            if !shape_ok(&spec.base, io, v.shape()) {
                 bail!(
                     "{name}: input '{}' shape {:?} != manifest {:?}",
                     io.name,
@@ -216,6 +253,22 @@ mod tests {
         // wrong non-batch shape on the embed table
         let bad_embed = Value::from(Tensor::zeros(&[cfg.vocab, cfg.d + 1]));
         assert!(rt.run("embed_fwd_micro", &[toks, bad_embed]).is_err());
+    }
+
+    #[test]
+    fn decode_bases_accept_shrunk_time_axis() {
+        let rt = Runtime::native();
+        let cfg = rt.manifest.configs["micro"].clone();
+        let embed = Value::from(Tensor::zeros(&[cfg.vocab, cfg.d]));
+        // prefill chunk: 1 lane, 5 of the window's positions
+        let toks = Value::tokens(&[1, 5], vec![0; 5]);
+        let out = rt
+            .run("embed_fwd_decode_micro", &[toks, embed.clone()])
+            .unwrap();
+        assert_eq!(out[0].shape, vec![1, 5, cfg.d]);
+        // the full-window base still rejects a shrunk time axis
+        let toks = Value::tokens(&[1, 5], vec![0; 5]);
+        assert!(rt.run("embed_fwd_micro", &[toks, embed]).is_err());
     }
 
     #[test]

@@ -2,17 +2,25 @@
 //!
 //! Implements every artifact base the coordinator drives — the forward
 //! passes (`embed_fwd`, `block_fwd`, `block_capture`, `qblock_fwd`,
-//! `qblock_w4a4_fwd`, `head_fwd`) and the three gradient executables
-//! (`lm_grad`, `lora_grad`, `block_opt_grad`) — with semantics matching
-//! python/compile/model.py one for one. Graphs are built on the autodiff
-//! tape (runtime::autodiff); forward-only artifacts simply never call
-//! `backward`. This is what lets the repo build, test, and *serve* without
-//! an XLA toolchain; a PJRT path can slot back in behind the same
+//! `qblock_w4a4_fwd`, `head_fwd`), the KV-cached incremental-decode
+//! variants (`embed_fwd_decode`, `block_fwd_decode`, `qblock_fwd_decode`,
+//! `qblock_w4a4_fwd_decode`, `head_fwd_decode`), and the three gradient
+//! executables (`lm_grad`, `lora_grad`, `block_opt_grad`) — with
+//! semantics matching python/compile/model.py one for one. Full-window
+//! graphs are built on the autodiff tape (runtime::autodiff); the decode
+//! variants are forward-only and run the tape ops' factored-out forward
+//! kernels directly, which keeps cached decode bit-identical to the
+//! full-window path (dense and PTQ1.61-fused; see `block_decode` below).
+//! This is what lets the repo build, test, and *serve* without an XLA
+//! toolchain; a PJRT path can slot back in behind the same
 //! `Runtime::run` contract.
 
 use anyhow::{bail, Result};
 
-use super::autodiff::{NodeId, Tape, ROPE_THETA};
+use super::autodiff::{
+    attn_decode, linear_fwd, qlinear_fwd, rmsnorm_fwd, rope_at, silu_mul_fwd,
+    NodeId, Tape, ROPE_THETA,
+};
 use super::manifest::{ArtifactSpec, ModelConfig};
 use super::Value;
 use crate::model::LINEARS;
@@ -112,6 +120,98 @@ fn w4a4_linear(x: &Tensor, w: &Tensor, smooth: &Tensor) -> Tensor {
     y
 }
 
+/// Forward-only view of one block linear for the decode kernels — the
+/// tape-free counterpart of [`Lin`].
+enum LinFwd<'a> {
+    /// FP or dense-dequantized weight.
+    Dense(&'a Tensor),
+    /// PTQ1.61 fused reconstruction (Eq. 9).
+    Quant {
+        a_s: &'a Tensor,
+        r1: &'a Tensor,
+        r2: &'a Tensor,
+        mu: &'a Tensor,
+        w_sal: &'a Tensor,
+        sign: &'a Tensor,
+    },
+    /// SmoothQuant W4A4 fake-quant linear.
+    W4A4 { w: &'a Tensor, smooth: &'a Tensor },
+}
+
+fn apply_lin_fwd(x: &Tensor, lin: &LinFwd) -> Tensor {
+    match lin {
+        LinFwd::Dense(w) => linear_fwd(x, w),
+        LinFwd::Quant { a_s, r1, r2, mu, w_sal, sign } => {
+            qlinear_fwd(x, a_s, r1, r2, mu, w_sal, sign)
+        }
+        LinFwd::W4A4 { w, smooth } => w4a4_linear(x, w, smooth),
+    }
+}
+
+/// One transformer block over `t_new` *new* positions against cached K/V
+/// (the `*_decode` bases). `h_new` is `(b, t_new, d)`, `k_cache`/`v_cache`
+/// are `(b, capacity, n_heads, head_dim)` with `lens[bi]` valid cached
+/// positions per lane; lane `bi`'s new row `j` sits at absolute position
+/// `lens[bi] + j`. Returns `[h_out, k_new, v_new]` where `k_new` is the
+/// *roped* keys of the new positions — the cache stores post-rope keys so
+/// a cached position is never re-rotated.
+///
+/// The position-local pieces (rmsnorm, linears, SwiGLU, residuals) and the
+/// attention accumulation run the same kernels in the same order as the
+/// full-window tape graph, so dense and PTQ1.61-fused decode are
+/// bit-identical to re-running the whole window. The W4A4 path is the one
+/// documented exception: its activation scale is per-forward-call, so a
+/// decode step quantizes over the new chunk only (numerically close, not
+/// bit-equal, to the full-window fake-quant).
+fn block_decode(
+    cfg: &ModelConfig,
+    h_new: &Tensor,
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    lens: &[usize],
+    attn_norm: &Tensor,
+    mlp_norm: &Tensor,
+    lins: &[LinFwd],
+) -> Result<Vec<Tensor>> {
+    assert_eq!(lins.len(), LINEARS.len());
+    let (b, tn, d) = (h_new.shape[0], h_new.shape[1], h_new.shape[2]);
+    let nh = cfg.n_heads;
+    let hd = d / nh;
+    if lens.len() != b {
+        bail!("block_decode: {} lens for batch {b}", lens.len());
+    }
+    let cap = k_cache.shape[1];
+    for &l in lens {
+        if l + tn > cap {
+            bail!("block_decode: {l} cached + {tn} new > window {cap}");
+        }
+    }
+    let x_attn = rmsnorm_fwd(h_new, attn_norm);
+    let q = apply_lin_fwd(&x_attn, &lins[0]).reshape(&[b, tn, nh, hd]);
+    let k = apply_lin_fwd(&x_attn, &lins[1]).reshape(&[b, tn, nh, hd]);
+    let v = apply_lin_fwd(&x_attn, &lins[2]).reshape(&[b, tn, nh, hd]);
+    let qr = rope_at(&q, lens, ROPE_THETA);
+    let kr = rope_at(&k, lens, ROPE_THETA);
+    let ctx = attn_decode(&qr, &kr, &v, k_cache, v_cache, lens);
+    let x_o = ctx.reshape(&[b, tn, d]);
+    let attn_out = apply_lin_fwd(&x_o, &lins[3]);
+    let h2 = h_new.add(&attn_out);
+    let x_mlp = rmsnorm_fwd(&h2, mlp_norm);
+    let gate = apply_lin_fwd(&x_mlp, &lins[4]);
+    let up = apply_lin_fwd(&x_mlp, &lins[5]);
+    let x_down = silu_mul_fwd(&gate, &up);
+    let down = apply_lin_fwd(&x_down, &lins[6]);
+    let h_out = h2.add(&down);
+    Ok(vec![h_out, kr, v])
+}
+
+/// Decode the `pos` input (per-lane valid cache lengths) of a `*_decode`
+/// artifact.
+fn lens_of(v: &Value) -> Result<Vec<usize>> {
+    let (_, pos) = tokens_of(v)?;
+    Ok(pos.iter().map(|&p| p.max(0) as usize).collect())
+}
+
 struct BlockIo {
     x_attn: NodeId,
     x_o: NodeId,
@@ -187,7 +287,9 @@ fn n_params(cfg: &ModelConfig) -> usize {
 /// batch sizes are re-derived here from the actual inputs.
 pub fn execute(spec: &ArtifactSpec, cfg: &ModelConfig, inputs: &[Value]) -> Result<Vec<Tensor>> {
     match spec.base.as_str() {
-        "embed_fwd" => {
+        // embed_fwd_decode is the same gather, just over a (b, t_new)
+        // chunk instead of the full (b_eval, seq) window
+        "embed_fwd" | "embed_fwd_decode" => {
             let (tshape, toks) = tokens_of(&inputs[0])?;
             let embed = tensor_of(&inputs[1])?;
             let (b, t) = (tshape[0], tshape[1]);
@@ -261,6 +363,74 @@ pub fn execute(spec: &ArtifactSpec, cfg: &ModelConfig, inputs: &[Value]) -> Resu
             }
             let io = block_graph(&mut tp, cfg, hid, an, mn, &lins);
             Ok(vec![tp.val(io.h_out).clone()])
+        }
+        "block_fwd_decode" => {
+            if inputs.len() != 13 {
+                bail!("block_fwd_decode wants 13 inputs");
+            }
+            let h = tensor_of(&inputs[0])?;
+            let kc = tensor_of(&inputs[1])?;
+            let vc = tensor_of(&inputs[2])?;
+            let lens = lens_of(&inputs[3])?;
+            let blk: Vec<&Tensor> =
+                inputs[4..13].iter().map(tensor_of).collect::<Result<_>>()?;
+            let lins: Vec<LinFwd> =
+                LINEAR_OFFSETS.iter().map(|&o| LinFwd::Dense(blk[o])).collect();
+            block_decode(cfg, h, kc, vc, &lens, blk[0], blk[5], &lins)
+        }
+        "qblock_fwd_decode" => {
+            if inputs.len() != 6 + 6 * LINEARS.len() {
+                bail!("qblock_fwd_decode wants {} inputs", 6 + 6 * LINEARS.len());
+            }
+            let h = tensor_of(&inputs[0])?;
+            let kc = tensor_of(&inputs[1])?;
+            let vc = tensor_of(&inputs[2])?;
+            let lens = lens_of(&inputs[3])?;
+            let an = tensor_of(&inputs[4])?;
+            let mn = tensor_of(&inputs[5])?;
+            let mut lins: Vec<LinFwd> = Vec::with_capacity(LINEARS.len());
+            for j in 0..LINEARS.len() {
+                let base = 6 + 6 * j;
+                lins.push(LinFwd::Quant {
+                    w_sal: tensor_of(&inputs[base])?,
+                    sign: tensor_of(&inputs[base + 1])?,
+                    a_s: tensor_of(&inputs[base + 2])?,
+                    r1: tensor_of(&inputs[base + 3])?,
+                    r2: tensor_of(&inputs[base + 4])?,
+                    mu: tensor_of(&inputs[base + 5])?,
+                });
+            }
+            block_decode(cfg, h, kc, vc, &lens, an, mn, &lins)
+        }
+        "qblock_w4a4_fwd_decode" => {
+            if inputs.len() != 17 {
+                bail!("qblock_w4a4_fwd_decode wants 17 inputs");
+            }
+            let h = tensor_of(&inputs[0])?;
+            let kc = tensor_of(&inputs[1])?;
+            let vc = tensor_of(&inputs[2])?;
+            let lens = lens_of(&inputs[3])?;
+            let an = tensor_of(&inputs[4])?;
+            let mn = tensor_of(&inputs[9])?;
+            // q/k/v share s_attn, gate/up share s_mlp (aot.py w4a4_fn);
+            // block params occupy inputs[4..13], smooth vectors 13..17
+            let smooth_idx = [13, 13, 13, 14, 15, 15, 16];
+            let mut lins: Vec<LinFwd> = Vec::with_capacity(LINEARS.len());
+            for j in 0..LINEARS.len() {
+                lins.push(LinFwd::W4A4 {
+                    w: tensor_of(&inputs[4 + LINEAR_OFFSETS[j]])?,
+                    smooth: tensor_of(&inputs[smooth_idx[j]])?,
+                });
+            }
+            block_decode(cfg, h, kc, vc, &lens, an, mn, &lins)
+        }
+        "head_fwd_decode" => {
+            // final norm + output projection only: decode wants logits for
+            // the new positions, never the window NLL
+            let h = tensor_of(&inputs[0])?;
+            let nf = tensor_of(&inputs[1])?;
+            let wo = tensor_of(&inputs[2])?;
+            Ok(vec![linear_fwd(&rmsnorm_fwd(h, nf), wo)])
         }
         "head_fwd" => {
             let h = tensor_of(&inputs[0])?;

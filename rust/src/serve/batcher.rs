@@ -25,8 +25,10 @@ struct Queued {
     deadline: Option<Duration>,
 }
 
+/// FIFO admission queue with deadline expiry and a max-wait batch cut.
 #[derive(Debug)]
 pub struct Batcher {
+    /// widest batch the engine can take (== its lane count)
     pub capacity: usize,
     /// drain-mode cut: launch a partial batch once the oldest request has
     /// waited this long
@@ -36,6 +38,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// A queue for an engine of `capacity` lanes (default 50 ms max-wait).
     pub fn new(capacity: usize) -> Batcher {
         assert!(capacity > 0);
         Batcher {
@@ -46,11 +49,13 @@ impl Batcher {
         }
     }
 
+    /// Builder-style override of the max-wait cut interval.
     pub fn with_max_wait(mut self, max_wait: Duration) -> Batcher {
         self.max_wait = max_wait;
         self
     }
 
+    /// Enqueue a request (no deadline); returns its id.
     pub fn submit(&mut self, req: GenRequest) -> u64 {
         self.submit_with_deadline(req, None)
     }
@@ -73,6 +78,7 @@ impl Batcher {
         id
     }
 
+    /// Requests currently waiting for a lane.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

@@ -1,17 +1,28 @@
-//! Continuous-batching serve engine.
+//! Continuous-batching serve engine with KV-cached incremental decode.
 //!
-//! A slot-based scheduler over the pipeline's `b_eval` lanes: each decode
-//! step runs one full-window forward over the *compacted* set of active
-//! lanes (the native runtime accepts any leading batch dimension, so cost
-//! scales with active lanes), appends one greedy token per lane, and frees
-//! finished lanes. Freed lanes are refilled from the admission queue on
-//! the next step — a request never waits for the rest of its batch to
-//! drain. `run_drain` is the classic static-batching baseline for
-//! comparison: it admits whole batches and keeps the fixed `b_eval` batch
-//! shape until every lane in the batch finishes, exactly what a
-//! fixed-shape deployment without in-flight refill pays.
+//! A slot-based scheduler over the pipeline's `b_eval` lanes. Each lane
+//! owns one [`KvCache`] slot for the life of a request: admission prefills
+//! the prompt once (appending every layer's K/V), then each decode step
+//! runs the model over exactly *one new token per lane* against the cached
+//! K/V — per-token cost is flat in sequence position instead of growing
+//! with the window. Lanes are compacted out of the batch when they finish,
+//! their cache slot is freed for the next admission, and freed lanes are
+//! refilled from the queue on the next step — a request never waits for
+//! the rest of its batch to drain.
+//!
+//! `EngineCfg::use_kv_cache = false` selects the legacy full-window step
+//! (re-running the entire padded window every token); both paths produce
+//! token-identical output for the dense and PTQ1.61-fused models, which
+//! `benches/bench_serve.rs` and `tests/kv_decode.rs` gate on.
+//!
+//! [`Engine::run_drain`] is the classic static-batching baseline for
+//! comparison: it admits whole batches and only takes the next batch when
+//! every lane has finished — exactly what a deployment without in-flight
+//! refill pays. (With the KV cache enabled, drain mode still decodes
+//! compacted active lanes; the fixed-width padding cost model only exists
+//! on the full-window path.)
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -21,19 +32,27 @@ use super::{GenRequest, GenResponse};
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
 use crate::model::tokenizer::ByteTokenizer;
+use crate::runtime::kv::KvCache;
 
+/// Engine tunables.
 #[derive(Debug, Clone)]
 pub struct EngineCfg {
     /// hard cap on decode steps per run (runaway guard)
     pub max_steps: usize,
+    /// decode incrementally against per-lane cached K/V (the production
+    /// path); `false` re-runs the full padded window every step (the
+    /// baseline `bench_serve` compares against)
+    pub use_kv_cache: bool,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
-        EngineCfg { max_steps: 100_000 }
+        EngineCfg { max_steps: 100_000, use_kv_cache: true }
     }
 }
 
+/// One in-flight request bound to a lane (and, when the KV cache is on,
+/// to a cache slot from admission prefill until finish).
 #[derive(Debug, Clone)]
 struct Lane {
     id: u64,
@@ -42,27 +61,58 @@ struct Lane {
     max_new: usize,
     submitted: Instant,
     admitted: Instant,
+    /// KV-cache slot; `None` until the lane's first (prefill) step
+    slot: Option<usize>,
 }
 
+/// Continuous-batching decode loop over the lane pool (see module docs).
 pub struct Engine<'a> {
     pipe: &'a Pipeline<'a>,
     model: &'a ModelEval<'a>,
+    /// engine tunables (step cap, KV cache on/off)
     pub cfg: EngineCfg,
     lanes: Vec<Option<Lane>>,
+    cache: KvCache,
 }
 
 impl<'a> Engine<'a> {
+    /// An engine over `pipe.cfg.b_eval` lanes with a KV cache slot per
+    /// lane, decoding `model`.
     pub fn new(pipe: &'a Pipeline<'a>, model: &'a ModelEval<'a>) -> Engine<'a> {
-        let lanes = (0..pipe.cfg.b_eval).map(|_| None).collect();
-        Engine { pipe, model, cfg: EngineCfg::default(), lanes }
+        let cfg = &pipe.cfg;
+        let lanes = (0..cfg.b_eval).map(|_| None).collect();
+        let cache = KvCache::new(
+            cfg.b_eval,
+            cfg.n_layers,
+            cfg.seq,
+            cfg.n_heads,
+            cfg.d / cfg.n_heads,
+        );
+        Engine { pipe, model, cfg: EngineCfg::default(), lanes, cache }
     }
 
+    /// Number of lanes (== max concurrent requests == KV cache slots).
     pub fn capacity(&self) -> usize {
         self.lanes.len()
     }
 
+    /// The engine's KV cache (slot occupancy / reuse accounting).
+    pub fn kv_cache(&self) -> &KvCache {
+        &self.cache
+    }
+
     fn active_lanes(&self) -> usize {
         self.lanes.iter().filter(|l| l.is_some()).count()
+    }
+
+    /// Greedy next token from one vocab row — shared by the cached and
+    /// full-window paths so tie-breaking is identical in both.
+    fn argmax(row: &[f32]) -> i32 {
+        row.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j as i32)
+            .unwrap()
     }
 
     fn make_lane(
@@ -81,7 +131,7 @@ impl<'a> Engine<'a> {
         }
         let prompt_len = seq.len();
         let max_new = req.max_new_tokens.min(t - prompt_len);
-        Lane { id, seq, prompt_len, max_new, submitted, admitted }
+        Lane { id, seq, prompt_len, max_new, submitted, admitted, slot: None }
     }
 
     fn finish(lane: Lane, now: Instant, metrics: &mut MetricsRegistry) -> GenResponse {
@@ -105,6 +155,22 @@ impl<'a> Engine<'a> {
             decode_ms,
             latency_ms: queue_ms + decode_ms,
         }
+    }
+
+    /// Take lane `li` out of the pool, release its cache slot, and emit
+    /// the response.
+    fn finish_lane(
+        &mut self,
+        li: usize,
+        now: Instant,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) {
+        let lane = self.lanes[li].take().unwrap();
+        if let Some(slot) = lane.slot {
+            self.cache.free(slot);
+        }
+        out.push(Self::finish(lane, now, metrics));
     }
 
     /// Admit queued requests into free lanes (continuous mode). Requests
@@ -133,11 +199,19 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// One decode step. In compact mode only active lanes enter the
-    /// forward (cost scales with load); in fixed-width mode every lane
-    /// slot is computed, finished-lane rows as padding — the static
-    /// batching cost model.
-    fn decode_step(
+    /// `true` once the lane produced its budget of new tokens or filled
+    /// the window — same rule on both decode paths.
+    fn lane_done(&self, li: usize) -> bool {
+        let lane = self.lanes[li].as_ref().unwrap();
+        lane.seq.len() - lane.prompt_len >= lane.max_new
+            || lane.seq.len() >= self.pipe.cfg.seq
+    }
+
+    /// One full-window decode step (`use_kv_cache = false`). In compact
+    /// mode only active lanes enter the forward (cost scales with load);
+    /// in fixed-width mode every lane slot is computed, finished-lane rows
+    /// as padding — the static batching cost model.
+    fn decode_step_full(
         &mut self,
         fixed_width: bool,
         metrics: &mut MetricsRegistry,
@@ -173,27 +247,114 @@ impl<'a> Engine<'a> {
         let now = Instant::now();
         for (row, slot) in layout.iter().enumerate() {
             let Some(li) = slot else { continue };
-            let done = {
+            {
                 let lane = self.lanes[*li].as_mut().unwrap();
                 let pos = lane.seq.len() - 1;
                 let base = (row * t + pos) * vocab;
-                let next = logits.data[base..base + vocab]
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j as i32)
-                    .unwrap();
+                let next = Self::argmax(&logits.data[base..base + vocab]);
                 lane.seq.push(next);
-                lane.seq.len() - lane.prompt_len >= lane.max_new
-                    || lane.seq.len() >= t
-            };
+            }
             metrics.record_tokens(1);
-            if done {
-                let lane = self.lanes[*li].take().unwrap();
-                out.push(Self::finish(lane, now, metrics));
+            if self.lane_done(*li) {
+                self.finish_lane(*li, now, metrics, out);
             }
         }
         Ok(())
+    }
+
+    /// One KV-cached decode step. Newly admitted lanes are prefilled
+    /// (whole prompt through the model, K/V appended per layer, first new
+    /// token from the last prompt position); lanes already holding a slot
+    /// decode their single newest token as one compacted batch. Either
+    /// way every active lane yields exactly one token per step, matching
+    /// the full-window step's accounting.
+    fn decode_step_cached(
+        &mut self,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) -> Result<()> {
+        let vocab = self.pipe.cfg.vocab;
+        let active: Vec<usize> =
+            (0..self.lanes.len()).filter(|&i| self.lanes[i].is_some()).collect();
+        if active.is_empty() {
+            return Ok(());
+        }
+        let n_active = active.len();
+        let (pipe, model) = (self.pipe, self.model);
+        let step_started = Instant::now();
+        let mut decoding: Vec<usize> = Vec::with_capacity(n_active);
+        for &li in &active {
+            if self.lanes[li].as_ref().unwrap().slot.is_some() {
+                decoding.push(li);
+                continue;
+            }
+            // prefill: prompts have per-request lengths, so each runs as
+            // its own b=1 chunk (batched prefill is a ROADMAP item)
+            let slot = self
+                .cache
+                .alloc()
+                .expect("engine invariant: one cache slot per lane");
+            let prompt = {
+                let lane = self.lanes[li].as_mut().unwrap();
+                lane.slot = Some(slot);
+                lane.seq.clone()
+            };
+            let h = model.forward_h_incremental(pipe, &mut self.cache, &[slot], &prompt)?;
+            let logits = pipe.head_decode(model.params(), &h)?;
+            let base = (prompt.len() - 1) * vocab;
+            let next = Self::argmax(&logits.data[base..base + vocab]);
+            self.lanes[li].as_mut().unwrap().seq.push(next);
+        }
+        if !decoding.is_empty() {
+            let slots: Vec<usize> = decoding
+                .iter()
+                .map(|&li| self.lanes[li].as_ref().unwrap().slot.unwrap())
+                .collect();
+            let toks: Vec<i32> = decoding
+                .iter()
+                .map(|&li| *self.lanes[li].as_ref().unwrap().seq.last().unwrap())
+                .collect();
+            let h = model.forward_h_incremental(pipe, &mut self.cache, &slots, &toks)?;
+            let logits = pipe.head_decode(model.params(), &h)?;
+            for (row, &li) in decoding.iter().enumerate() {
+                let next = Self::argmax(&logits.data[row * vocab..(row + 1) * vocab]);
+                self.lanes[li].as_mut().unwrap().seq.push(next);
+            }
+        }
+        metrics.record_step_from(step_started, n_active, self.lanes.len());
+        let now = Instant::now();
+        for &li in &active {
+            metrics.record_tokens(1);
+            if self.lane_done(li) {
+                self.finish_lane(li, now, metrics, out);
+            }
+        }
+        Ok(())
+    }
+
+    /// One decode step on whichever path `cfg.use_kv_cache` selects.
+    fn decode_step(
+        &mut self,
+        fixed_width: bool,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) -> Result<()> {
+        if self.cfg.use_kv_cache {
+            self.decode_step_cached(metrics, out)
+        } else {
+            self.decode_step_full(fixed_width, metrics, out)
+        }
+    }
+
+    /// How long to sleep when requests are queued but none is admissible
+    /// (a deadline/max-wait-gated batcher): bounded by the batcher's own
+    /// cut interval so a ready batch is picked up promptly, floored so an
+    /// aggressive `max_wait` cannot turn the wait back into a hot spin.
+    fn idle_backoff(batcher: &Batcher) -> Duration {
+        batcher
+            .max_wait
+            .min(Duration::from_millis(1))
+            .max(Duration::from_micros(50))
     }
 
     /// Continuous batching: a finished sequence's lane is refilled from
@@ -210,6 +371,12 @@ impl<'a> Engine<'a> {
                 if batcher.pending() == 0 {
                     break;
                 }
+                // defensive: today's FIFO `pop_ready` always admits, so
+                // pending>0 with idle lanes is unreachable — but if
+                // admission ever becomes time-gated (max-wait/deadline
+                // batch cuts), back off instead of burning the remaining
+                // max_steps budget in a hot spin
+                std::thread::sleep(Self::idle_backoff(batcher));
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
@@ -217,12 +384,13 @@ impl<'a> Engine<'a> {
         Ok(out)
     }
 
-    /// Drain (static) batching baseline: admit a full batch, decode at
-    /// fixed width until every lane finishes, only then take the next
-    /// batch. Admission goes through the same deadline-aware `admit` as
-    /// continuous mode (called only when every lane is free, which is
-    /// exactly batch admission), so oversized queues and lapsed deadlines
-    /// are handled per batch, not just once up front.
+    /// Drain (static) batching baseline: admit a full batch, decode until
+    /// every lane finishes, only then take the next batch. Admission goes
+    /// through the same deadline-aware `admit` as continuous mode (called
+    /// only when every lane is free, which is exactly batch admission), so
+    /// oversized queues and lapsed deadlines are handled per batch, not
+    /// just once up front. Cache slots release at each lane's finish and
+    /// are reused by the next batch.
     pub fn run_drain(
         &mut self,
         batcher: &mut Batcher,

@@ -1,7 +1,11 @@
 //! Serving metrics registry: per-request latency split (queue vs decode),
-//! decode throughput, latency percentiles, and lane occupancy — exported
-//! as JSON into `runs_dir()` so sustained-traffic runs leave an auditable
-//! record next to the experiment CSVs.
+//! decode throughput, latency percentiles, lane occupancy, and per-step
+//! wall times — exported as JSON into `runs_dir()` so sustained-traffic
+//! runs leave an auditable record next to the experiment CSVs.
+//!
+//! The per-step series ([`MetricsRegistry::step_ms`]) is what
+//! `benches/bench_serve.rs` uses to show KV-cached decode staying flat in
+//! sequence position while the full-window baseline grows.
 
 use std::path::Path;
 use std::time::Instant;
@@ -25,6 +29,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// One finished request's accounting.
 #[derive(Debug, Clone)]
 pub struct RequestMetric {
+    /// request id assigned at submit
     pub id: u64,
     /// submit -> lane admission
     pub queue_ms: f64,
@@ -32,25 +37,36 @@ pub struct RequestMetric {
     pub decode_ms: f64,
     /// submit -> last token
     pub total_ms: f64,
+    /// tokens generated for this request
     pub new_tokens: usize,
 }
 
+/// Accumulates one engine run's serving metrics (see module docs).
 #[derive(Debug)]
 pub struct MetricsRegistry {
+    /// run label, also written into the JSON snapshot
     pub label: String,
     created: Instant,
     first_step: Option<Instant>,
     last_step: Option<Instant>,
+    /// decode steps recorded so far
     pub steps: usize,
     /// sum over steps of the number of active lanes (== decoded tokens)
     pub active_lane_steps: usize,
+    /// lane capacity observed (max over recorded steps)
     pub capacity: usize,
+    /// total new tokens decoded
     pub total_tokens: usize,
+    /// per-request accounting, in finish order
     pub requests: Vec<RequestMetric>,
+    /// requests dropped because their queue deadline lapsed
     pub expired: usize,
+    /// wall time of each decode step, in recording order
+    pub step_ms: Vec<f64>,
 }
 
 impl MetricsRegistry {
+    /// An empty registry labeled `label`.
     pub fn new(label: &str) -> MetricsRegistry {
         MetricsRegistry {
             label: label.to_string(),
@@ -63,9 +79,11 @@ impl MetricsRegistry {
             total_tokens: 0,
             requests: Vec::new(),
             expired: 0,
+            step_ms: Vec::new(),
         }
     }
 
+    /// Record a decode step observed "now" (zero-duration step window).
     pub fn record_step(&mut self, active: usize, capacity: usize) {
         self.record_step_from(Instant::now(), active, capacity);
     }
@@ -74,21 +92,34 @@ impl MetricsRegistry {
     /// then includes the first step's duration, so single-step runs don't
     /// report a near-zero window (and absurd throughput).
     pub fn record_step_from(&mut self, started: Instant, active: usize, capacity: usize) {
+        let now = Instant::now();
         self.first_step.get_or_insert(started);
-        self.last_step = Some(Instant::now());
+        self.last_step = Some(now);
         self.steps += 1;
         self.active_lane_steps += active;
         self.capacity = capacity.max(self.capacity);
+        self.step_ms.push(now.duration_since(started).as_secs_f64() * 1000.0);
     }
 
+    /// Mean decode-step wall time in ms (0 before the first step).
+    pub fn mean_step_ms(&self) -> f64 {
+        if self.step_ms.is_empty() {
+            return 0.0;
+        }
+        self.step_ms.iter().sum::<f64>() / self.step_ms.len() as f64
+    }
+
+    /// Count `n` newly decoded tokens.
     pub fn record_tokens(&mut self, n: usize) {
         self.total_tokens += n;
     }
 
+    /// Record a finished request's latency split.
     pub fn record_request(&mut self, m: RequestMetric) {
         self.requests.push(m);
     }
 
+    /// Count `n` requests dropped at admission (deadline lapsed).
     pub fn record_expired(&mut self, n: usize) {
         self.expired += n;
     }
@@ -101,6 +132,7 @@ impl MetricsRegistry {
         }
     }
 
+    /// Decoded tokens per second over the decode window.
     pub fn throughput_tok_s(&self) -> f64 {
         1000.0 * self.total_tokens as f64 / self.decode_window_ms().max(1e-6)
     }
@@ -119,28 +151,34 @@ impl MetricsRegistry {
         self.requests.iter().map(|r| r.total_ms).collect()
     }
 
+    /// Median end-to-end request latency (ms).
     pub fn p50_ms(&self) -> f64 {
         percentile(&self.totals_ms(), 0.50)
     }
 
+    /// 95th-percentile end-to-end request latency (ms).
     pub fn p95_ms(&self) -> f64 {
         percentile(&self.totals_ms(), 0.95)
     }
 
+    /// 99th-percentile end-to-end request latency (ms).
     pub fn p99_ms(&self) -> f64 {
         percentile(&self.totals_ms(), 0.99)
     }
 
+    /// Mean submit→admission wait across finished requests (ms).
     pub fn mean_queue_ms(&self) -> f64 {
         let n = self.requests.len().max(1) as f64;
         self.requests.iter().map(|r| r.queue_ms).sum::<f64>() / n
     }
 
+    /// Mean admission→last-token time across finished requests (ms).
     pub fn mean_decode_ms(&self) -> f64 {
         let n = self.requests.len().max(1) as f64;
         self.requests.iter().map(|r| r.decode_ms).sum::<f64>() / n
     }
 
+    /// The full registry as a JSON object (what `write_json` persists).
     pub fn snapshot(&self) -> Json {
         obj(vec![
             ("label", s(&self.label)),
@@ -151,6 +189,7 @@ impl MetricsRegistry {
             ("lane_capacity", num(self.capacity as f64)),
             ("lane_occupancy", num(self.lane_occupancy())),
             ("decode_window_ms", num(self.decode_window_ms())),
+            ("mean_step_ms", num(self.mean_step_ms())),
             ("throughput_tok_s", num(self.throughput_tok_s())),
             ("p50_ms", num(self.p50_ms())),
             ("p95_ms", num(self.p95_ms())),
@@ -172,11 +211,13 @@ impl MetricsRegistry {
         ])
     }
 
+    /// Write the JSON snapshot to `path`.
     pub fn write_json(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.snapshot().dump())
             .with_context(|| format!("writing {}", path.display()))
     }
 
+    /// One-line human summary (tok/s, occupancy, percentiles) to stdout.
     pub fn print_summary(&self) {
         println!(
             "[{}] {} reqs ({} expired) | {} tok in {} steps | {:.1} tok/s | \

@@ -1,15 +1,21 @@
 //! Serving layer: continuous-batching generation over the eval pipeline.
 //!
 //! * [`batcher`] — admission queue (FIFO, max-wait cut, deadlines)
-//! * [`engine`] — slot-based continuous-batching decode loop (plus the
-//!   drain/static baseline it is benchmarked against)
+//! * [`engine`] — slot-based continuous-batching decode loop with
+//!   KV-cached incremental decode (plus the full-window and drain/static
+//!   baselines it is benchmarked against)
 //! * [`metrics`] — per-request latency split, percentiles, lane occupancy,
-//!   JSON export into `runs_dir()`
+//!   per-step wall times, JSON export into `runs_dir()`
 //!
-//! At this scale the absolute numbers characterize the native CPU path
-//! (the paper's F.3 discussion); the packed memory wins come from
-//! packing::memory. The scheduling wins — lane refill beating batch drain
-//! on skewed request lengths — are measured by `benches/bench_serve.rs`.
+//! Each lane owns a slot in the engine's [`crate::runtime::kv::KvCache`]:
+//! prompts are prefilled once on admission and every subsequent step
+//! decodes one new token per lane against cached K/V, so per-token cost
+//! is flat in sequence position (see `ARCHITECTURE.md` for the request
+//! data flow). At this scale the absolute numbers characterize the native
+//! CPU path (the paper's F.3 discussion); the packed memory wins come
+//! from packing::memory. The scheduling and caching wins — lane refill
+//! beating batch drain, cached decode beating full-window re-reads — are
+//! measured by `benches/bench_serve.rs`.
 
 pub mod batcher;
 pub mod engine;
@@ -23,19 +29,26 @@ pub use metrics::{percentile, MetricsRegistry, RequestMetric};
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
 
+/// One generation request as submitted to the batcher.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
     /// Byte-tokenized verbatim; an empty prompt is seeded with a single
     /// space token (the decoder needs at least one context position), so
     /// its response text starts with that space.
     pub prompt: String,
+    /// Budget of new tokens (clamped so prompt + new fits the window;
+    /// zero-token requests complete at admission without a lane).
     pub max_new_tokens: usize,
 }
 
+/// One finished request: decoded text plus its latency split.
 #[derive(Debug, Clone)]
 pub struct GenResponse {
+    /// request id assigned at submit
     pub id: u64,
+    /// prompt + generated tokens, byte-decoded
     pub text: String,
+    /// tokens actually generated
     pub new_tokens: usize,
     /// submit -> lane admission
     pub queue_ms: f64,

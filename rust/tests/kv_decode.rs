@@ -1,0 +1,228 @@
+//! KV-cached incremental-decode correctness tests (tier-1, no artifacts
+//! needed): cached decode must be *token-identical* to the full-window
+//! path across lane refill/compaction, cache slots must be freed and
+//! reused when lanes finish mid-flight, and prefill of a truncated prompt
+//! must reproduce `forward_h` on the same tokens exactly.
+
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::model::{Params, LINEARS};
+use ptq161::quant::ptq161::initial_parts;
+use ptq161::quant::Ptq161Parts;
+use ptq161::runtime::kv::KvCache;
+use ptq161::runtime::Runtime;
+use ptq161::serve::batcher::Batcher;
+use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
+use ptq161::tensor::Tensor;
+use ptq161::util::rng::Rng;
+
+fn micro_cache(pipe: &Pipeline) -> KvCache {
+    KvCache::new(
+        pipe.cfg.b_eval,
+        pipe.cfg.n_layers,
+        pipe.cfg.seq,
+        pipe.cfg.n_heads,
+        pipe.cfg.d / pipe.cfg.n_heads,
+    )
+}
+
+/// PTQ1.61 parts for every linear of every layer with a fixed structured
+/// mask (every 4th input channel salient).
+fn fused_parts(params: &Params, pipe: &Pipeline) -> Vec<Vec<Ptq161Parts>> {
+    (0..pipe.cfg.n_layers)
+        .map(|l| {
+            LINEARS
+                .iter()
+                .map(|lin| {
+                    let w = params.get(&format!("l{l}.{lin}"));
+                    let mask: Vec<bool> = (0..w.cols()).map(|j| j % 4 == 0).collect();
+                    initial_parts(w, &mask)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run the engine over a fixed skewed workload (forces mid-flight lane
+/// refill and batch compaction on micro's 2 lanes), sorted by request id.
+fn run_workload(
+    pipe: &Pipeline,
+    me: &ModelEval,
+    kv: bool,
+    drain: bool,
+) -> (Vec<GenResponse>, usize, u64) {
+    let lens = [1usize, 6, 1, 1, 2];
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for (i, &n) in lens.iter().enumerate() {
+        batcher.submit(GenRequest { prompt: format!("ab{i}"), max_new_tokens: n });
+    }
+    let mut metrics = MetricsRegistry::new("kv_test");
+    let mut engine = Engine::new(pipe, me);
+    engine.cfg.use_kv_cache = kv;
+    let mut resps = if drain {
+        engine.run_drain(&mut batcher, &mut metrics).unwrap()
+    } else {
+        engine.run(&mut batcher, &mut metrics).unwrap()
+    };
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), lens.len());
+    (resps, engine.kv_cache().in_use_count(), engine.kv_cache().total_allocs())
+}
+
+#[test]
+fn cached_decode_token_identical_to_full_window_dense() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(41);
+    let me = ModelEval::Dense(&params);
+    let (full, _, _) = run_workload(&pipe, &me, false, false);
+    let (cached, _, _) = run_workload(&pipe, &me, true, false);
+    for (f, c) in full.iter().zip(&cached) {
+        assert_eq!(f.id, c.id);
+        assert_eq!(f.new_tokens, c.new_tokens);
+        assert_eq!(f.text, c.text, "request {} tokens diverge", f.id);
+    }
+}
+
+#[test]
+fn cached_decode_token_identical_to_full_window_fused() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(42);
+    let parts = fused_parts(&params, &pipe);
+    let me = ModelEval::Fused { params: &params, parts: &parts };
+    let (full, _, _) = run_workload(&pipe, &me, false, false);
+    let (cached, _, _) = run_workload(&pipe, &me, true, false);
+    for (f, c) in full.iter().zip(&cached) {
+        assert_eq!(f.text, c.text, "fused request {} tokens diverge", f.id);
+    }
+}
+
+#[test]
+fn cache_slots_freed_and_reused_mid_flight() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(43);
+    let me = ModelEval::Dense(&params);
+    // continuous mode: 5 requests through 2 lanes/slots
+    let (_, in_use, allocs) = run_workload(&pipe, &me, true, false);
+    assert_eq!(in_use, 0, "every slot must be released at finish");
+    assert_eq!(allocs, 5, "each admitted request allocates one slot");
+    assert!(allocs > pipe.cfg.b_eval as u64, "slots were reused");
+    // drain mode frees and reuses slots across batches too
+    let (_, in_use, allocs) = run_workload(&pipe, &me, true, true);
+    assert_eq!(in_use, 0);
+    assert_eq!(allocs, 5);
+}
+
+#[test]
+fn prefill_of_truncated_prompt_matches_forward_h_dense() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(44);
+    let me = ModelEval::Dense(&params);
+    let t = pipe.cfg.seq;
+    let d = pipe.cfg.d;
+    let plen = 9;
+    let mut rng = Rng::new(45);
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+    let mut window = prompt.clone();
+    window.resize(t, 0);
+    let h_full = me.forward_h(&pipe, &window).unwrap();
+    let mut cache = micro_cache(&pipe);
+    let slot = cache.alloc().unwrap();
+    let h_inc = me.forward_h_incremental(&pipe, &mut cache, &[slot], &prompt).unwrap();
+    assert_eq!(h_inc.shape, vec![1, plen, d]);
+    assert_eq!(cache.len(slot), plen, "prefill advances the cache");
+    for i in 0..plen * d {
+        assert_eq!(h_inc.data[i], h_full.data[i], "dense prefill deviates at {i}");
+    }
+}
+
+#[test]
+fn prefill_of_truncated_prompt_matches_forward_h_fused() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(46);
+    let parts = fused_parts(&params, &pipe);
+    let me = ModelEval::Fused { params: &params, parts: &parts };
+    let t = pipe.cfg.seq;
+    let d = pipe.cfg.d;
+    let plen = 7;
+    let mut rng = Rng::new(47);
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+    let mut window = prompt.clone();
+    window.resize(t, 0);
+    let h_full = me.forward_h(&pipe, &window).unwrap();
+    let mut cache = micro_cache(&pipe);
+    let slot = cache.alloc().unwrap();
+    let h_inc = me.forward_h_incremental(&pipe, &mut cache, &[slot], &prompt).unwrap();
+    for i in 0..plen * d {
+        assert_eq!(h_inc.data[i], h_full.data[i], "fused prefill deviates at {i}");
+    }
+}
+
+#[test]
+fn single_token_steps_match_full_window_rows() {
+    // prefill + per-token incremental steps must reproduce the exact
+    // hidden-state rows of the growing full-window forward
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(48);
+    let me = ModelEval::Dense(&params);
+    let t = pipe.cfg.seq;
+    let d = pipe.cfg.d;
+    let plen = 5;
+    let mut rng = Rng::new(49);
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+    let extra = [7i32, 9, 11];
+    let mut cache = micro_cache(&pipe);
+    let slot = cache.alloc().unwrap();
+    me.forward_h_incremental(&pipe, &mut cache, &[slot], &prompt).unwrap();
+    for (i, &tok) in extra.iter().enumerate() {
+        let h_step =
+            me.forward_h_incremental(&pipe, &mut cache, &[slot], &[tok]).unwrap();
+        assert_eq!(h_step.shape, vec![1, 1, d]);
+        let mut window = prompt.clone();
+        window.extend(&extra[..=i]);
+        window.resize(t, 0);
+        let h_full = me.forward_h(&pipe, &window).unwrap();
+        let row = (plen + i) * d;
+        for c in 0..d {
+            assert_eq!(
+                h_step.data[c],
+                h_full.data[row + c],
+                "step {i} deviates at col {c}"
+            );
+        }
+    }
+    assert_eq!(cache.len(slot), plen + extra.len());
+}
+
+#[test]
+fn w4a4_cached_engine_serves_all_requests() {
+    // the W4A4 activation scale is per-forward-call, so cached decode is
+    // not bit-equal to full-window fake-quant — but the engine must still
+    // serve the workload to completion with the right token counts
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(50);
+    let d = pipe.cfg.d;
+    let ffn = pipe.cfg.ffn;
+    let smooth: Vec<[Tensor; 4]> = (0..pipe.cfg.n_layers)
+        .map(|_| {
+            [
+                Tensor::ones(&[d]),
+                Tensor::ones(&[d]),
+                Tensor::ones(&[d]),
+                Tensor::ones(&[ffn]),
+            ]
+        })
+        .collect();
+    let me = ModelEval::W4A4 { params: &params, smooth: &smooth };
+    let (resps, in_use, _) = run_workload(&pipe, &me, true, false);
+    assert_eq!(in_use, 0);
+    for (r, want) in resps.iter().zip([1usize, 6, 1, 1, 2]) {
+        assert_eq!(r.new_tokens, want, "request {} token count", r.id);
+    }
+}
