@@ -1,9 +1,14 @@
 //! Packing benches: the bit-exact containers on a real LLaMA layer slice —
 //! pack/unpack throughput bounds the (de)serialization cost of a deployed
-//! 1.61-bit checkpoint.
+//! 1.61-bit checkpoint, and the prepared-container matvec is the packed
+//! serve path's per-token inner loop (vs the fused path's rebuild-Wq'
+//! matmul).
 
 use ptq161::packing::bitpack::BitVec;
 use ptq161::packing::nibble::{quantize_column, NibbleVec};
+use ptq161::quant::ptq161::{initial_parts, PackedLinear};
+use ptq161::runtime::autodiff::{packed_qlinear_fwd, qlinear_fwd};
+use ptq161::tensor::Tensor;
 use ptq161::util::bench::Bencher;
 use ptq161::util::rng::Rng;
 
@@ -19,4 +24,29 @@ fn main() {
     b.run("packing/quant4_column_4096", || quantize_column(&col));
     let (codes, _, _) = quantize_column(&col);
     b.run("packing/nibble_pack_4096", || NibbleVec::from_codes(&codes));
+
+    // prepared packed-weight containers: pack once, then the serve-path
+    // matvec against a reconstruction-free 1.61-bit layer
+    let (out, inn) = (512, 512);
+    let w = Tensor::randn(&[out, inn], 0.1, &mut rng);
+    let mask: Vec<bool> = (0..inn).map(|j| j % 5 == 0).collect();
+    let parts = initial_parts(&w, &mask);
+    b.run("packing/packed_linear_pack_512x512", || {
+        PackedLinear::pack(&parts)
+    });
+    let pl = PackedLinear::pack(&parts);
+    let x = Tensor::randn(&[1, inn], 1.0, &mut rng);
+    let a_s = Tensor::from_vec(&[out], parts.alpha_s.clone());
+    let r1 = Tensor::from_vec(&[out], parts.alpha_r1.clone());
+    let r2 = Tensor::from_vec(&[inn], parts.alpha_r2.clone());
+    let mu = Tensor::from_vec(&[out], parts.mu.clone());
+    b.run("packing/fused_matvec_rebuild_512", || {
+        qlinear_fwd(&x, &a_s, &r1, &r2, &mu, &parts.w_sal, &parts.sign_ns)
+    });
+    b.run("packing/packed_matvec_512", || packed_qlinear_fwd(&x, &pl));
+    println!(
+        "packed 512x512: {} bytes resident, {:.3} bits/weight",
+        pl.resident_bytes(),
+        pl.effective_bits()
+    );
 }

@@ -13,6 +13,13 @@
 //! step re-runs the whole window), the KV-cached path stays roughly flat
 //! (each step runs one token against cached K/V).
 //!
+//! Part 3 compares the PTQ1.61 decode backends: the fused path (rebuilds
+//! the dense Wq' from six part tensors every forward) against the
+//! prepared packed path (contracts the 1.61-bit containers directly).
+//! Both must emit identical tokens, the packed run must perform zero
+//! `qlinear_weight` reconstructions inside the decode loop, and its
+//! per-step time is reported against the fused-cached path.
+//!
 //! Runs on FP-initialized weights (scheduling/caching cost is independent
 //! of training) and needs no artifacts directory.
 
@@ -20,6 +27,10 @@ use std::time::Instant;
 
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
+use ptq161::model::LINEARS;
+use ptq161::quant::ptq161::{initial_parts, PackedModel};
+use ptq161::quant::Ptq161Parts;
+use ptq161::runtime::autodiff::qlinear_weight_reconstructions;
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::Batcher;
 use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
@@ -149,5 +160,69 @@ fn main() {
          (cached decode is ~flat in sequence position)",
         growth(&step_series[0]),
         growth(&step_series[1])
+    );
+
+    // ---- part 3: PTQ1.61 decode backends — fused rebuild vs packed ------
+    // same quantized weights behind both backends; the packed containers
+    // are built once here ("pack once, decode forever")
+    let parts: Vec<Vec<Ptq161Parts>> = (0..pipe.cfg.n_layers)
+        .map(|l| {
+            LINEARS
+                .iter()
+                .map(|lin| {
+                    let w = params.get(&format!("l{l}.{lin}"));
+                    let mask: Vec<bool> =
+                        (0..w.cols()).map(|j| j % 5 == 0).collect();
+                    initial_parts(w, &mask)
+                })
+                .collect()
+        })
+        .collect();
+    let packed = PackedModel::pack(&parts);
+    let fused = ModelEval::Fused { params: &params, parts: &parts };
+    let packed_me = ModelEval::Packed { params: &params, packed: &packed };
+    println!(
+        "\n# PTQ1.61 backends: packed model {} KiB resident, \
+         {:.3} bits/weight",
+        packed.resident_bytes() / 1024,
+        packed.effective_bits()
+    );
+    let mut q_results: Vec<(String, f64, Vec<String>, u64)> = Vec::new();
+    for (label, model, kv) in [
+        ("fused-full", &fused, false),
+        ("fused+kv", &fused, true),
+        ("packed+kv", &packed_me, true),
+    ] {
+        let recon0 = qlinear_weight_reconstructions();
+        let (metrics, resps, _) = run_mode(&pipe, model, &reqs, label, false, kv);
+        let recon = qlinear_weight_reconstructions() - recon0;
+        println!(
+            "{label:<12} mean step {:>7.2} ms  {:>7.1} tok/s  \
+             Wq' reconstructions {recon}",
+            metrics.mean_step_ms(),
+            metrics.throughput_tok_s()
+        );
+        q_results.push((
+            label.to_string(),
+            metrics.mean_step_ms(),
+            resps.into_iter().map(|r| r.text).collect(),
+            recon,
+        ));
+    }
+    for (label, _, texts, _) in q_results.iter().skip(1) {
+        assert_eq!(
+            texts, &q_results[0].2,
+            "{label}: tokens differ from {}",
+            q_results[0].0
+        );
+    }
+    println!("token-identical across PTQ1.61 backends: ok");
+    assert_eq!(
+        q_results[2].3, 0,
+        "packed decode must not reconstruct dense weights"
+    );
+    println!(
+        "packed/fused cached mean step: {:.2}x (at or below 1.0 expected)",
+        q_results[2].1 / q_results[1].1.max(1e-9)
     );
 }

@@ -12,6 +12,7 @@ pub mod quantize;
 use anyhow::{anyhow, Result};
 
 use crate::model::{Params, LINEARS};
+use crate::quant::ptq161::PackedLinear;
 use crate::runtime::manifest::ModelConfig;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Tensor;
@@ -214,6 +215,44 @@ impl<'a> Pipeline<'a> {
             }
         }
         let out = self.rt.run_cfg("qblock_fwd_decode", &self.cfg.name, &inputs)?;
+        Ok(Self::unpack_decode(out))
+    }
+
+    /// PTQ1.61 block over new positions served straight from the prepared
+    /// packed containers (decode variant of the packed backend): `layer`
+    /// holds one [`PackedLinear`] per block linear in LINEARS order.
+    ///
+    /// Packed containers are host structures, not artifact `Value`s, so
+    /// this calls the native backend directly instead of going through
+    /// `Runtime::run` — the execution is still counted in the runtime's
+    /// per-artifact tally under `qblock_packed_decode_{config}`.
+    pub fn qblock_packed_decode(
+        &self,
+        h_new: &Tensor,
+        k_cache: &Tensor,
+        v_cache: &Tensor,
+        lens: &[usize],
+        attn_norm: &Tensor,
+        mlp_norm: &Tensor,
+        layer: &[PackedLinear],
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        assert_eq!(layer.len(), LINEARS.len());
+        *self
+            .rt
+            .exec_counts
+            .borrow_mut()
+            .entry(format!("qblock_packed_decode_{}", self.cfg.name))
+            .or_insert(0) += 1;
+        let out = crate::runtime::native::packed_block_decode(
+            &self.cfg,
+            h_new,
+            k_cache,
+            v_cache,
+            lens,
+            attn_norm,
+            mlp_norm,
+            layer,
+        )?;
         Ok(Self::unpack_decode(out))
     }
 

@@ -6,6 +6,7 @@ pub mod zeroshot;
 
 use crate::coordinator::Pipeline;
 use crate::model::{Params, LINEARS};
+use crate::quant::ptq161::PackedModel;
 use crate::quant::Ptq161Parts;
 use crate::runtime::kv::KvCache;
 use crate::tensor::Tensor;
@@ -33,11 +34,14 @@ fn fused_layer_inputs(parts: &[Ptq161Parts]) -> Vec<[Tensor; 6]> {
 }
 
 /// How to run the model forward — dense fake-quant (paper's eval contract),
-/// the fused Pallas-kernel path (proves the packed representation), or the
+/// the fused Pallas-kernel path (reconstructs Wq' from the six part
+/// tensors each call), the prepared packed-container path (decodes the
+/// 1.61-bit containers directly, zero per-step reconstruction), or the
 /// SmoothQuant W4A4 block (Table 13).
 pub enum ModelEval<'a> {
     Dense(&'a Params),
     Fused { params: &'a Params, parts: &'a [Vec<Ptq161Parts>] },
+    Packed { params: &'a Params, packed: &'a PackedModel },
     W4A4 { params: &'a Params, smooth: &'a [[Tensor; 4]] },
 }
 
@@ -46,14 +50,53 @@ impl<'a> ModelEval<'a> {
         match self {
             ModelEval::Dense(p) => p,
             ModelEval::Fused { params, .. } => params,
+            ModelEval::Packed { params, .. } => params,
             ModelEval::W4A4 { params, .. } => params,
         }
     }
 
+    /// Short name of the weight representation (serve metrics label).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ModelEval::Dense(..) => "dense",
+            ModelEval::Fused { .. } => "fused",
+            ModelEval::Packed { .. } => "packed",
+            ModelEval::W4A4 { .. } => "w4a4",
+        }
+    }
+
+    /// The prepared packed model, when this eval serves one (memory
+    /// accounting in the serve metrics).
+    pub fn packed(&self) -> Option<&PackedModel> {
+        match self {
+            ModelEval::Packed { packed, .. } => Some(*packed),
+            _ => None,
+        }
+    }
+
     /// Hidden states after all blocks for one (b_eval, t) token batch.
+    ///
+    /// The packed path runs the full window through the decode kernels
+    /// against an empty K/V past (`lens = 0`), which is bit-identical to
+    /// a prefill of the same tokens — so the packed full-window and
+    /// KV-cached paths decode identical tokens by construction.
     pub fn forward_h(&self, pipe: &Pipeline, tokens: &[i32]) -> Result<Tensor> {
         let params = self.params();
         let mut h = pipe.embed(params, tokens)?;
+        // packed path scratch: the empty (lens = 0, so never read) K/V
+        // past is layer-invariant — allocate it once, not per layer
+        let empty_past = if let ModelEval::Packed { .. } = self {
+            let (b, t) = (h.shape[0], h.shape[1]);
+            let nh = pipe.cfg.n_heads;
+            let hd = pipe.cfg.d / nh;
+            Some((
+                Tensor::zeros(&[b, t, nh, hd]),
+                Tensor::zeros(&[b, t, nh, hd]),
+                vec![0usize; b],
+            ))
+        } else {
+            None
+        };
         for l in 0..pipe.cfg.n_layers {
             h = match self {
                 ModelEval::Dense(p) => pipe.block_fwd(&h, &p.block(l))?,
@@ -62,6 +105,16 @@ impl<'a> ModelEval<'a> {
                     let attn_norm = params.get(&format!("l{l}.attn_norm"));
                     let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
                     pipe.qblock_fwd(&h, attn_norm, mlp_norm, &qp)?
+                }
+                ModelEval::Packed { params, packed } => {
+                    let (kc, vc, lens) = empty_past.as_ref().unwrap();
+                    let layer = &packed.layers[l];
+                    let attn_norm = params.get(&format!("l{l}.attn_norm"));
+                    let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
+                    let (h_out, _, _) = pipe.qblock_packed_decode(
+                        &h, kc, vc, lens, attn_norm, mlp_norm, layer,
+                    )?;
+                    h_out
                 }
                 ModelEval::W4A4 { params, smooth } => {
                     pipe.qblock_w4a4(&h, &params.block(l), &smooth[l])?
@@ -108,6 +161,14 @@ impl<'a> ModelEval<'a> {
                     let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
                     pipe.qblock_fwd_decode(
                         &h, &kc, &vc, &lens, attn_norm, mlp_norm, &qp,
+                    )?
+                }
+                ModelEval::Packed { params, packed } => {
+                    let layer = &packed.layers[l];
+                    let attn_norm = params.get(&format!("l{l}.attn_norm"));
+                    let mlp_norm = params.get(&format!("l{l}.mlp_norm"));
+                    pipe.qblock_packed_decode(
+                        &h, &kc, &vc, &lens, attn_norm, mlp_norm, layer,
                     )?
                 }
                 ModelEval::W4A4 { params, smooth } => pipe.qblock_w4a4_decode(

@@ -6,25 +6,38 @@
 use anyhow::Result;
 
 use super::ExperimentCtx;
+use crate::coordinator::quantize::QuantModel;
 use crate::data::tasks::{TaskKind, ALL_KINDS};
 use crate::eval::zeroshot::run_suite;
 use crate::eval::ModelEval;
 use crate::packing::bitwidth::BitScheme;
 use crate::packing::memory::table12_row;
+use crate::quant::ptq161::parts_storage_bits;
 use crate::quant::smoothquant::SmoothQuant;
-use crate::report::{fmt_ppl, Table};
+use crate::report::{fmt_bits, fmt_ppl, Table};
 use crate::tensor::Tensor;
 
 pub const T1_METHODS: [&str; 7] =
     ["awq2", "gptq2", "quip2", "omniquant2", "pbllm", "billm", "ptq161"];
 
-fn bits_of(method: &str) -> &'static str {
-    match method {
-        "awq2" | "gptq2" | "quip2" | "omniquant2" | "owq2" => "2",
-        "pbllm" => "1.7(+1)",
-        "billm" => "1(+1.1)",
-        "ptq161" => "1.61",
-        _ => "?",
+/// "Bits" cell for a quantized model, measured rather than hardcoded:
+/// methods that emit structured parts (PTQ1.61) are charged what their
+/// packed containers store (`parts_storage_bits`, the shape-only form of
+/// `PackedLinear::storage_bits` — mask and scaling overheads included);
+/// baselines print their Appendix-A closed-form average at the quantized
+/// layer shapes.
+fn bits_cell(qm: &QuantModel) -> String {
+    match &qm.parts {
+        Some(parts) => {
+            let mut bits = 0u64;
+            let mut weights = 0u64;
+            for p in parts.iter().flatten() {
+                bits += parts_storage_bits(p);
+                weights += (p.sign_ns.rows() * p.sign_ns.cols()) as u64;
+            }
+            fmt_bits(bits as f64 / weights.max(1) as f64)
+        }
+        None => fmt_bits(qm.avg_bits),
     }
 }
 
@@ -49,11 +62,13 @@ pub fn t1_perplexity(ctx: &mut ExperimentCtx) -> Result<()> {
         }
         tbl.row(row);
         for method in T1_METHODS {
-            let mut row =
-                vec![method.to_string(), bits_of(method).to_string()];
+            let mut row = vec![method.to_string(), String::new()];
             for m in ctx.models.clone() {
                 let pre = method == "ptq161"; // full method uses preprocessing
                 let qm = ctx.quantized(&m, method, pre)?;
+                if row[1].is_empty() {
+                    row[1] = bits_cell(&qm);
+                }
                 row.push(fmt_ppl(ctx.ppl(&m, &qm.params, &corpus)?));
             }
             tbl.row(row);
@@ -83,11 +98,8 @@ pub fn t2_reasoning(ctx: &mut ExperimentCtx) -> Result<()> {
             vec![("FP".into(), "32".into(), ctx.pretrained(&m)?)];
         for method in ["gptq2", "omniquant2", "pbllm", "billm", "ptq161"] {
             let qm = ctx.quantized(&m, method, method == "ptq161")?;
-            variants.push((
-                method.to_string(),
-                bits_of(method).to_string(),
-                qm.params,
-            ));
+            let bits = bits_cell(&qm);
+            variants.push((method.to_string(), bits, qm.params));
         }
         let n_tasks = ctx.tasks_per_suite;
         let pipe = ctx.pipeline(&m)?;
@@ -177,7 +189,7 @@ pub fn t4_owq(ctx: &mut ExperimentCtx) -> Result<()> {
             tbl.row(vec![
                 m.clone(),
                 qm.method.clone(),
-                bits_of(method).to_string(),
+                bits_cell(&qm),
                 fmt_ppl(ctx.ppl(&m, &qm.params, &ctx.wiki.clone())?),
                 fmt_ppl(ctx.ppl(&m, &qm.params, &ctx.c4.clone())?),
             ]);
@@ -243,10 +255,12 @@ pub fn t6_preprocess_gain(ctx: &mut ExperimentCtx) -> Result<()> {
             ("PTQ1.61*", "ptq161", false),
             ("PTQ1.61", "ptq161", true),
         ] {
-            let mut row =
-                vec![label.to_string(), bits_of(method).to_string()];
+            let mut row = vec![label.to_string(), String::new()];
             for m in ctx.models.clone() {
                 let qm = ctx.quantized(&m, method, pre)?;
+                if row[1].is_empty() {
+                    row[1] = bits_cell(&qm);
+                }
                 row.push(fmt_ppl(ctx.ppl(&m, &qm.params, &corpus)?));
             }
             tbl.row(row);

@@ -6,8 +6,10 @@
 //!   quantize    --model tiny --method ptq161 [--preprocessed]
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
-//!               [--no-kv]  (quick-scale by default; --full for the full
-//!               pipeline; KV-cached incremental decode unless --no-kv;
+//!               [--no-kv] [--backend dense|fused|packed]
+//!               (quick-scale by default; --full for the full pipeline;
+//!               KV-cached incremental decode unless --no-kv; ptq161
+//!               defaults to the prepared packed-container backend;
 //!               writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
@@ -15,6 +17,7 @@
 use anyhow::Result;
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
+use ptq161::quant::ptq161::PackedModel;
 use ptq161::experiments::{self, ExperimentCtx};
 use ptq161::serve::batcher::Batcher;
 use ptq161::serve::{Engine, GenRequest, MetricsRegistry};
@@ -78,7 +81,44 @@ fn main() -> Result<()> {
             let n = args.usize_opt("requests", 8);
             let qm = ctx.quantized(&model, &method, method == "ptq161")?;
             let pipe = Pipeline::new(&ctx.rt, &model)?;
-            let me = ModelEval::Dense(&qm.params);
+            // backend choice: ptq161 serves from the prepared packed
+            // containers by default (pack once here, decode forever);
+            // --backend dense|fused selects the reconstruction baselines
+            let backend = args.str_opt(
+                "backend",
+                if method == "ptq161" { "packed" } else { "dense" },
+            );
+            let packed = if backend == "packed" {
+                let parts = qm.parts.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!("--backend packed needs a ptq161 model")
+                })?;
+                let pm = PackedModel::pack(parts);
+                println!(
+                    "packed {} layers: {} KiB resident, {:.3} bits/weight",
+                    pm.n_layers(),
+                    pm.resident_bytes() / 1024,
+                    pm.effective_bits()
+                );
+                Some(pm)
+            } else {
+                None
+            };
+            let me = match backend.as_str() {
+                "dense" => ModelEval::Dense(&qm.params),
+                "fused" => ModelEval::Fused {
+                    params: &qm.params,
+                    parts: qm.parts.as_ref().ok_or_else(|| {
+                        anyhow::anyhow!("--backend fused needs a ptq161 model")
+                    })?,
+                },
+                "packed" => ModelEval::Packed {
+                    params: &qm.params,
+                    packed: packed.as_ref().unwrap(),
+                },
+                other => {
+                    anyhow::bail!("unknown backend '{other}' (dense|fused|packed)")
+                }
+            };
             let mut batcher = Batcher::new(pipe.cfg.b_eval);
             // skewed request lengths: the workload continuous batching is
             // built for (one long request no longer stalls three lanes)

@@ -67,6 +67,13 @@ impl BitVec {
         (0..self.len).map(|i| self.get(i)).collect()
     }
 
+    /// The raw 64-bit words, low bit first. Bits at or beyond `len` are
+    /// always zero, so word-wise consumers (the packed matvec kernel's
+    /// ±1 accumulation) never see phantom set bits in the tail.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
     /// Storage in bits (what the accounting layer charges).
     pub fn storage_bits(&self) -> usize {
         self.len

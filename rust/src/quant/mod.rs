@@ -71,6 +71,23 @@ impl LinearCalib {
     }
 }
 
+/// The exact INT4 container behind a `Ptq161Parts::w_sal`: per salient
+/// column (in ascending channel order) the `out`-length 4-bit codes plus
+/// the `(scale, min)` pair that decodes them. Carrying the codes from
+/// quantization time is what lets [`crate::quant::ptq161::packed`] build
+/// its bit-exact packed containers without re-deriving the affine
+/// parameters from dequantized floats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SalientQuant {
+    /// codes column-major: `codes[c * out + i]` for salient column `c`,
+    /// output row `i`
+    pub codes: Vec<u8>,
+    /// per-salient-column quantization step
+    pub scale: Vec<f32>,
+    /// per-salient-column zero offset (the code-0 value)
+    pub min: Vec<f32>,
+}
+
 /// PTQ1.61 structured representation (Eq. 9 operands, fed to the fused
 /// Pallas kernel artifact and the block-wise optimizer).
 #[derive(Debug, Clone)]
@@ -86,6 +103,9 @@ pub struct Ptq161Parts {
     pub alpha_r2: Vec<f32>,
     /// learnable row mean (Table 9 ablation; zeros normally)
     pub mu: Vec<f32>,
+    /// INT4 codes + affine params behind `w_sal` (populated by the
+    /// quantizer; `None` only for hand-assembled parts)
+    pub sal_q: Option<SalientQuant>,
 }
 
 impl Ptq161Parts {
@@ -259,6 +279,7 @@ mod tests {
             alpha_r1: vec![1.0, 0.5],
             alpha_r2: vec![1.0, 2.0],
             mu: vec![0.1, 0.0],
+            sal_q: None,
         };
         let d = parts.dequantize();
         // row0: [0.5, 1*2*2*1 + 0.1] ; row1: [-0.5, 0.5*3*2*-1 + 0]

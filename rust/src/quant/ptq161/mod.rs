@@ -8,6 +8,7 @@
 //! in place via the `block_opt_grad` AOT artifact.
 
 pub mod mask;
+pub mod packed;
 pub mod scaling;
 
 use super::{LinearCalib, QuantizedLinear, Quantizer};
@@ -15,6 +16,7 @@ use crate::packing::bitwidth::BitScheme;
 use crate::tensor::Tensor;
 
 pub use mask::{structured_mask, MaskCriterion};
+pub use packed::{parts_storage_bits, PackedLinear, PackedModel};
 pub use scaling::initial_parts;
 
 #[derive(Debug, Clone, Copy)]

@@ -6,14 +6,15 @@
 
 use super::super::Ptq161Parts;
 use crate::quant::binarize::binarize_rowwise;
-use crate::quant::rtn::quant4_columns;
+use crate::quant::rtn::quant4_columns_coded;
 use crate::tensor::Tensor;
 
 pub fn initial_parts(w: &Tensor, mask: &[bool]) -> Ptq161Parts {
     let (n, m) = (w.rows(), w.cols());
     assert_eq!(m, mask.len());
-    // salient columns: per-column 4-bit, zeros elsewhere
-    let dq4 = quant4_columns(w, mask);
+    // salient columns: per-column 4-bit, zeros elsewhere; the codes +
+    // affine params ride along so the packed container is bit-exact
+    let (dq4, sal_q) = quant4_columns_coded(w, mask);
     let mut w_sal = Tensor::zeros(&[n, m]);
     for i in 0..n {
         for j in 0..m {
@@ -31,6 +32,7 @@ pub fn initial_parts(w: &Tensor, mask: &[bool]) -> Ptq161Parts {
         alpha_r1: vec![1.0; n],
         alpha_r2: vec![1.0; m],
         mu: vec![0.0; n],
+        sal_q: Some(sal_q),
     }
 }
 

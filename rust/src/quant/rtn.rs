@@ -2,7 +2,7 @@
 //! builds on: per-row asymmetric b-bit quantize/dequantize with optional
 //! clipping, plus per-column 4-bit (the salient-channel format).
 
-use super::{LinearCalib, QuantizedLinear, Quantizer};
+use super::{LinearCalib, QuantizedLinear, Quantizer, SalientQuant};
 use crate::packing::bitwidth::BitScheme;
 use crate::tensor::Tensor;
 
@@ -35,9 +35,18 @@ pub fn rtn_dense(w: &Tensor, bits: u32, clip: f32) -> Tensor {
 
 /// Per-column (input-channel) 4-bit — matches kernels/ref.py quant4_ref.
 pub fn quant4_columns(w: &Tensor, cols: &[bool]) -> Tensor {
+    quant4_columns_coded(w, cols).0
+}
+
+/// [`quant4_columns`] that also returns the INT4 container (codes +
+/// per-column affine params, salient columns in ascending order) the
+/// dequantized result was decoded from — the bit-exact source for
+/// [`crate::quant::ptq161::packed::PackedLinear`].
+pub fn quant4_columns_coded(w: &Tensor, cols: &[bool]) -> (Tensor, SalientQuant) {
     let (n, m) = (w.rows(), w.cols());
     assert_eq!(m, cols.len());
     let mut out = w.clone();
+    let mut sq = SalientQuant { codes: Vec::new(), scale: Vec::new(), min: Vec::new() };
     for j in 0..m {
         if !cols[j] {
             continue;
@@ -50,8 +59,11 @@ pub fn quant4_columns(w: &Tensor, cols: &[bool]) -> Tensor {
         for i in 0..n {
             *out.at2_mut(i, j) = col[i];
         }
+        sq.codes.extend_from_slice(&codes);
+        sq.scale.push(scale);
+        sq.min.push(mn);
     }
-    out
+    (out, sq)
 }
 
 /// The RTN baseline method (per-row asymmetric, no calibration use).

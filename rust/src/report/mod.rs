@@ -65,6 +65,14 @@ impl Table {
     }
 }
 
+/// Format an effective bits/weight value for a table's "Bits" column.
+/// Callers compute the value from real storage accounting — the packed
+/// containers' `storage_bits()` for PTQ1.61, the Appendix-A closed form
+/// for baselines — rather than printing a hardcoded label.
+pub fn fmt_bits(b: f64) -> String {
+    format!("{b:.2}")
+}
+
 pub fn fmt_ppl(p: f64) -> String {
     if !p.is_finite() {
         "NAN".into()
@@ -105,6 +113,12 @@ mod tests {
         assert_eq!(fmt_ppl(12.5), "12.50");
         assert_eq!(fmt_ppl(2.5e5), "2.5e5");
         assert_eq!(fmt_ppl(f64::NAN), "NAN");
+    }
+
+    #[test]
+    fn bits_formatting() {
+        assert_eq!(fmt_bits(1.6135), "1.61");
+        assert_eq!(fmt_bits(2.0), "2.00");
     }
 
     #[test]

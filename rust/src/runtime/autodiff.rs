@@ -15,12 +15,27 @@
 //! with (or bit-identical to) the corresponding tape ops, which is what
 //! makes cached decode token-identical to the full-window path.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::quant::ptq161::PackedLinear;
 use crate::tensor::Tensor;
 
 /// RMSNorm variance epsilon (matches python/compile/model.py).
 pub const EPS: f32 = 1e-5;
 /// Rotary-embedding base frequency (matches python/compile/model.py).
 pub const ROPE_THETA: f32 = 10000.0;
+
+/// Lifetime count of dense `Wq'` reconstructions (every [`qlinear_fwd`] /
+/// [`Tape::qlinear`] call pays one). The packed decode path must leave
+/// this flat across a whole serve run — `tests/packed_serve.rs` and
+/// `bench_serve` gate on the delta being zero.
+static QLINEAR_RECONSTRUCTIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Read the reconstruction counter (monotone; diff two reads to count an
+/// interval).
+pub fn qlinear_weight_reconstructions() -> u64 {
+    QLINEAR_RECONSTRUCTIONS.load(Ordering::Relaxed)
+}
 
 pub type NodeId = usize;
 
@@ -324,12 +339,13 @@ impl Tape {
         let xv = self.vals[x].clone();
         let (b, t, nh, hd) = (xv.shape[0], xv.shape[1], xv.shape[2], xv.shape[3]);
         let half = hd / 2;
+        // powf once per lane index (rope_freqs), trig once per (pos, i)
+        let freqs = rope_freqs(half, theta);
         let mut cos = vec![0.0f32; t * half];
         let mut sin = vec![0.0f32; t * half];
         for ti in 0..t {
             for i in 0..half {
-                let freq = 1.0 / theta.powf(i as f32 / half as f32);
-                let ang = ti as f32 * freq;
+                let ang = ti as f32 * freqs[i];
                 cos[ti * half + i] = ang.cos();
                 sin[ti * half + i] = ang.sin();
             }
@@ -802,6 +818,7 @@ pub(crate) fn qlinear_weight(
     w_sal: &Tensor,
     sign: &Tensor,
 ) -> Tensor {
+    QLINEAR_RECONSTRUCTIONS.fetch_add(1, Ordering::Relaxed);
     let (out, inn) = (w_sal.shape[0], w_sal.shape[1]);
     let mut wq = Tensor::zeros(&[out, inn]);
     for o in 0..out {
@@ -866,6 +883,85 @@ pub fn qlinear_fwd(
     qlinear_matmul(x, &wq, &xs, mu)
 }
 
+/// PTQ1.61 quantized linear straight from the packed 1.61-bit containers
+/// — the serve-path counterpart of [`qlinear_fwd`] with **zero** dense
+/// `Wq'` reconstruction.
+///
+/// Per input row the binarized branch is rearranged as
+/// `sum_j sign(o,j) * z[j] = 2 * sum_{set bits} z[j] - sum_j z[j]` with
+/// `z = x ⊙ alpha_r2` over the non-salient channels, so one output costs
+/// a ±1 accumulation over the row's sign *words* (iterating set bits)
+/// instead of `inn` multiplies against a freshly rebuilt weight row. The
+/// salient branch folds the nibble decode into the contraction:
+/// `sum_c code(o,c) * (scale_c * x[j_c]) + sum_c min_c * x[j_c]`, whose
+/// second term is row-constant and hoisted out of the output loop.
+/// Numerically this matches [`qlinear_fwd`] up to float re-association
+/// (the engine's greedy decode stays token-identical; gated in
+/// `tests/packed_serve.rs`).
+pub fn packed_qlinear_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
+    let (out, inn) = (pl.out(), pl.inn());
+    assert_eq!(*x.shape.last().unwrap(), inn, "packed qlinear contraction");
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    let xd = &x.data;
+    let n_sal = pl.sal_cols().len();
+    let n_ns = pl.ns_cols().len();
+    par_rows(&mut y.data, out, &|r, yr| {
+        let xr = &xd[r * inn..(r + 1) * inn];
+        // binarized-branch operand z = x ⊙ r2 over non-salient channels,
+        // plus its total and the plain x sum feeding the mu term
+        let mut z = vec![0.0f32; n_ns];
+        let mut ztot = 0.0f32;
+        let mut xs = 0.0f32;
+        for (c, &j) in pl.ns_cols().iter().enumerate() {
+            let v = xr[j as usize];
+            let zv = v * pl.r2_ns()[c];
+            z[c] = zv;
+            ztot += zv;
+            xs += v;
+        }
+        // salient-branch operands: x pre-scaled by the nibble step, and
+        // the row-constant min term
+        let mut xq = vec![0.0f32; n_sal];
+        let mut xmin = 0.0f32;
+        for (c, &j) in pl.sal_cols().iter().enumerate() {
+            let v = xr[j as usize];
+            xq[c] = v * pl.col_scale()[c];
+            xmin += v * pl.col_min()[c];
+        }
+        for (o, yo) in yr.iter_mut().enumerate() {
+            let mut pos = 0.0f32;
+            for (wi, &w0) in pl.sign_words(o).iter().enumerate() {
+                let mut w = w0;
+                let base = wi * 64;
+                while w != 0 {
+                    pos += z[base + w.trailing_zeros() as usize];
+                    w &= w - 1;
+                }
+            }
+            let bin = pl.row_scale()[o] * (2.0 * pos - ztot);
+            let mut sal = xmin;
+            let cbase = o * n_sal;
+            for (c, &xv) in xq.iter().enumerate() {
+                sal += pl.code(cbase + c) as f32 * xv;
+            }
+            *yo = sal + bin + xs * pl.mu()[o];
+        }
+    });
+    y
+}
+
+/// The per-lane rotary frequencies `1 / theta^(i/half)` — hoisted out of
+/// the position loops so `powf` runs once per lane index, not once per
+/// (lane, position, index) triple. Same expression as the in-loop form,
+/// so the rotation stays bit-identical.
+fn rope_freqs(half: usize, theta: f32) -> Vec<f32> {
+    (0..half)
+        .map(|i| 1.0 / theta.powf(i as f32 / half as f32))
+        .collect()
+}
+
 /// Rotary embedding over `(b, t_new, h, hd)` where lane `bi`'s row `j`
 /// sits at absolute position `starts[bi] + j`. With `starts = [0; b]`
 /// and `t_new = t` this is exactly [`Tape::rope`]'s forward.
@@ -873,17 +969,24 @@ pub fn rope_at(x: &Tensor, starts: &[usize], theta: f32) -> Tensor {
     let (b, tn, nh, hd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     assert_eq!(starts.len(), b, "rope_at: one start per lane");
     let half = hd / 2;
+    let freqs = rope_freqs(half, theta);
+    // per-(position, i) cos/sin table for the current row, filled once
+    // and reused across every head — no trig inside the lane×head loops
+    let mut cos = vec![0.0f32; half];
+    let mut sin = vec![0.0f32; half];
     let mut y = Tensor::zeros(&x.shape);
     for bi in 0..b {
         for j in 0..tn {
-            let pos = starts[bi] + j;
-            // trig is per (position, i): hoist it out of the head loop
+            let pos = (starts[bi] + j) as f32;
             for i in 0..half {
-                let freq = 1.0 / theta.powf(i as f32 / half as f32);
-                let ang = pos as f32 * freq;
-                let (c, s) = (ang.cos(), ang.sin());
-                for hi in 0..nh {
-                    let base = ((bi * tn + j) * nh + hi) * hd;
+                let ang = pos * freqs[i];
+                cos[i] = ang.cos();
+                sin[i] = ang.sin();
+            }
+            for hi in 0..nh {
+                let base = ((bi * tn + j) * nh + hi) * hd;
+                for i in 0..half {
+                    let (c, s) = (cos[i], sin[i]);
                     let x1 = x.data[base + i];
                     let x2 = x.data[base + half + i];
                     y.data[base + i] = x1 * c - x2 * s;

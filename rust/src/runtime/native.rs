@@ -18,12 +18,13 @@
 use anyhow::{bail, Result};
 
 use super::autodiff::{
-    attn_decode, linear_fwd, qlinear_fwd, rmsnorm_fwd, rope_at, silu_mul_fwd,
-    NodeId, Tape, ROPE_THETA,
+    attn_decode, linear_fwd, packed_qlinear_fwd, qlinear_fwd, rmsnorm_fwd,
+    rope_at, silu_mul_fwd, NodeId, Tape, ROPE_THETA,
 };
 use super::manifest::{ArtifactSpec, ModelConfig};
 use super::Value;
 use crate::model::LINEARS;
+use crate::quant::ptq161::PackedLinear;
 use crate::tensor::Tensor;
 
 /// Offsets of the 7 block linears inside the 9-tensor block parameter list
@@ -136,6 +137,8 @@ enum LinFwd<'a> {
     },
     /// SmoothQuant W4A4 fake-quant linear.
     W4A4 { w: &'a Tensor, smooth: &'a Tensor },
+    /// PTQ1.61 prepared packed container (no per-step reconstruction).
+    Packed(&'a PackedLinear),
 }
 
 fn apply_lin_fwd(x: &Tensor, lin: &LinFwd) -> Tensor {
@@ -145,6 +148,7 @@ fn apply_lin_fwd(x: &Tensor, lin: &LinFwd) -> Tensor {
             qlinear_fwd(x, a_s, r1, r2, mu, w_sal, sign)
         }
         LinFwd::W4A4 { w, smooth } => w4a4_linear(x, w, smooth),
+        LinFwd::Packed(pl) => packed_qlinear_fwd(x, pl),
     }
 }
 
@@ -203,6 +207,34 @@ fn block_decode(
     let down = apply_lin_fwd(&x_down, &lins[6]);
     let h_out = h2.add(&down);
     Ok(vec![h_out, kr, v])
+}
+
+/// One transformer block over new positions with every linear served from
+/// its prepared [`PackedLinear`] container — the packed-backend entry the
+/// pipeline calls directly (packed containers are host structures, not
+/// manifest `Value`s, so this path bypasses the artifact marshalling; the
+/// attention/norm/residual kernels and their ordering are exactly
+/// `block_decode`'s). `layer` holds one container per block linear in
+/// `LINEARS` order.
+pub fn packed_block_decode(
+    cfg: &ModelConfig,
+    h_new: &Tensor,
+    k_cache: &Tensor,
+    v_cache: &Tensor,
+    lens: &[usize],
+    attn_norm: &Tensor,
+    mlp_norm: &Tensor,
+    layer: &[PackedLinear],
+) -> Result<Vec<Tensor>> {
+    if layer.len() != LINEARS.len() {
+        bail!(
+            "packed_block_decode: {} linears, want {}",
+            layer.len(),
+            LINEARS.len()
+        );
+    }
+    let lins: Vec<LinFwd> = layer.iter().map(LinFwd::Packed).collect();
+    block_decode(cfg, h_new, k_cache, v_cache, lens, attn_norm, mlp_norm, &lins)
 }
 
 /// Decode the `pos` input (per-lane valid cache lengths) of a `*_decode`
@@ -600,6 +632,69 @@ mod tests {
         let names = crate::model::block_param_names(0);
         for (j, &off) in LINEAR_OFFSETS.iter().enumerate() {
             assert_eq!(names[off], format!("l0.{}", LINEARS[j]));
+        }
+    }
+
+    #[test]
+    fn packed_block_decode_matches_fused_block_decode() {
+        // one block, empty cache: the packed containers must reproduce the
+        // fused (reconstruct-Wq') block to float-roundoff accuracy
+        use crate::quant::ptq161::{initial_parts, PackedLinear};
+        use crate::util::rng::Rng;
+        let cfg = crate::runtime::Manifest::builtin().configs["micro"].clone();
+        let (b, t, d, ffn) = (1, 4, cfg.d, cfg.ffn);
+        let mut rng = Rng::new(91);
+        let h = Tensor::randn(&[b, t, d], 1.0, &mut rng);
+        let kc = Tensor::zeros(&[b, cfg.seq, cfg.n_heads, d / cfg.n_heads]);
+        let vc = kc.clone();
+        let an = Tensor::ones(&[d]);
+        let mn = Tensor::ones(&[d]);
+        let shapes = [(d, d), (d, d), (d, d), (d, d), (ffn, d), (ffn, d), (d, ffn)];
+        let parts: Vec<_> = shapes
+            .iter()
+            .map(|&(o, i)| {
+                let w = Tensor::randn(&[o, i], 0.2, &mut rng);
+                let mask: Vec<bool> = (0..i).map(|j| j % 4 == 0).collect();
+                initial_parts(&w, &mask)
+            })
+            .collect();
+        let packed: Vec<PackedLinear> =
+            parts.iter().map(PackedLinear::pack).collect();
+        let lens = vec![0usize; b];
+        let vecs: Vec<(Tensor, Tensor, Tensor, Tensor)> = parts
+            .iter()
+            .map(|p| {
+                let out = p.alpha_s.len();
+                let inn = p.alpha_r2.len();
+                (
+                    Tensor::from_vec(&[out], p.alpha_s.clone()),
+                    Tensor::from_vec(&[out], p.alpha_r1.clone()),
+                    Tensor::from_vec(&[inn], p.alpha_r2.clone()),
+                    Tensor::from_vec(&[out], p.mu.clone()),
+                )
+            })
+            .collect();
+        let lins: Vec<LinFwd> = parts
+            .iter()
+            .zip(&vecs)
+            .map(|(p, v)| LinFwd::Quant {
+                a_s: &v.0,
+                r1: &v.1,
+                r2: &v.2,
+                mu: &v.3,
+                w_sal: &p.w_sal,
+                sign: &p.sign_ns,
+            })
+            .collect();
+        let fused =
+            block_decode(&cfg, &h, &kc, &vc, &lens, &an, &mn, &lins).unwrap();
+        let via_packed =
+            packed_block_decode(&cfg, &h, &kc, &vc, &lens, &an, &mn, &packed)
+                .unwrap();
+        for (a, e) in via_packed.iter().zip(&fused) {
+            assert_eq!(a.shape, e.shape);
+            let m = a.mse(e);
+            assert!(m < 1e-9, "packed deviates from fused: mse {m}");
         }
     }
 }

@@ -15,6 +15,16 @@
 //! token-identical output for the dense and PTQ1.61-fused models, which
 //! `benches/bench_serve.rs` and `tests/kv_decode.rs` gate on.
 //!
+//! The weight representation is the [`ModelEval`] handed to
+//! [`Engine::new`] — for PTQ1.61 the production choice is
+//! `ModelEval::Packed` over a `PackedModel` built **once** from the
+//! quantizer's parts, so every decode step contracts the 1.61-bit
+//! containers directly instead of reconstructing dense weights
+//! (`tests/packed_serve.rs` gates the token identity and the
+//! zero-reconstruction invariant). `EngineCfg::backend` records the
+//! choice and the run's metrics carry the resident-memory split (KV cache
+//! bytes, packed-model bytes, effective bits/weight).
+//!
 //! [`Engine::run_drain`] is the classic static-batching baseline for
 //! comparison: it admits whole batches and only takes the next batch when
 //! every lane has finished — exactly what a deployment without in-flight
@@ -43,11 +53,16 @@ pub struct EngineCfg {
     /// path); `false` re-runs the full padded window every step (the
     /// baseline `bench_serve` compares against)
     pub use_kv_cache: bool,
+    /// which weight representation this engine decodes from — derived
+    /// from the [`ModelEval`] at construction (`dense` / `fused` /
+    /// `packed` / `w4a4`; the CLI's `--backend` flag selects which
+    /// `ModelEval` gets built) and exported into the metrics JSON
+    pub backend: &'static str,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
-        EngineCfg { max_steps: 100_000, use_kv_cache: true }
+        EngineCfg { max_steps: 100_000, use_kv_cache: true, backend: "dense" }
     }
 }
 
@@ -88,7 +103,21 @@ impl<'a> Engine<'a> {
             cfg.n_heads,
             cfg.d / cfg.n_heads,
         );
-        Engine { pipe, model, cfg: EngineCfg::default(), lanes, cache }
+        let cfg = EngineCfg { backend: model.label(), ..EngineCfg::default() };
+        Engine { pipe, model, cfg, lanes, cache }
+    }
+
+    /// Record the run's resident-memory accounting (KV cache bytes,
+    /// packed-model bytes + effective bits/weight, backend label) into
+    /// the metrics registry. Called at the top of every run loop.
+    fn export_memory(&self, metrics: &mut MetricsRegistry) {
+        metrics.set_backend(self.cfg.backend);
+        if self.cfg.use_kv_cache {
+            metrics.set_kv_cache_bytes(self.cache.bytes());
+        }
+        if let Some(pm) = self.model.packed() {
+            metrics.set_packed_model(pm.resident_bytes(), pm.effective_bits());
+        }
     }
 
     /// Number of lanes (== max concurrent requests == KV cache slots).
@@ -134,7 +163,12 @@ impl<'a> Engine<'a> {
         Lane { id, seq, prompt_len, max_new, submitted, admitted, slot: None }
     }
 
-    fn finish(lane: Lane, now: Instant, metrics: &mut MetricsRegistry) -> GenResponse {
+    fn finish(
+        lane: Lane,
+        cached_positions: usize,
+        now: Instant,
+        metrics: &mut MetricsRegistry,
+    ) -> GenResponse {
         let tk = ByteTokenizer;
         let queue_ms =
             lane.admitted.duration_since(lane.submitted).as_secs_f64() * 1000.0;
@@ -146,6 +180,7 @@ impl<'a> Engine<'a> {
             decode_ms,
             total_ms: queue_ms + decode_ms,
             new_tokens,
+            cached_positions,
         });
         GenResponse {
             id: lane.id,
@@ -158,7 +193,8 @@ impl<'a> Engine<'a> {
     }
 
     /// Take lane `li` out of the pool, release its cache slot, and emit
-    /// the response.
+    /// the response (recording the slot's cached-position high-water mark
+    /// before the free resets it).
     fn finish_lane(
         &mut self,
         li: usize,
@@ -167,10 +203,12 @@ impl<'a> Engine<'a> {
         out: &mut Vec<GenResponse>,
     ) {
         let lane = self.lanes[li].take().unwrap();
+        let cached_positions =
+            lane.slot.map(|slot| self.cache.len(slot)).unwrap_or(0);
         if let Some(slot) = lane.slot {
             self.cache.free(slot);
         }
-        out.push(Self::finish(lane, now, metrics));
+        out.push(Self::finish(lane, cached_positions, now, metrics));
     }
 
     /// Admit queued requests into free lanes (continuous mode). Requests
@@ -191,7 +229,7 @@ impl<'a> Engine<'a> {
                 };
                 let lane = self.make_lane(id, &req, submitted, now);
                 if lane.max_new == 0 {
-                    out.push(Self::finish(lane, now, metrics));
+                    out.push(Self::finish(lane, 0, now, metrics));
                 } else {
                     self.lanes[i] = Some(lane);
                 }
@@ -365,6 +403,7 @@ impl<'a> Engine<'a> {
         metrics: &mut MetricsRegistry,
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
+        self.export_memory(metrics);
         for _ in 0..self.cfg.max_steps {
             self.admit(batcher, metrics, &mut out);
             if self.active_lanes() == 0 {
@@ -397,6 +436,7 @@ impl<'a> Engine<'a> {
         metrics: &mut MetricsRegistry,
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
+        self.export_memory(metrics);
         let mut total_steps = 0;
         while total_steps < self.cfg.max_steps {
             self.admit(batcher, metrics, &mut out);

@@ -39,6 +39,9 @@ pub struct RequestMetric {
     pub total_ms: f64,
     /// tokens generated for this request
     pub new_tokens: usize,
+    /// high-water mark of KV-cached positions held by this request's slot
+    /// (0 on the full-window path, which caches nothing)
+    pub cached_positions: usize,
 }
 
 /// Accumulates one engine run's serving metrics (see module docs).
@@ -63,6 +66,14 @@ pub struct MetricsRegistry {
     pub expired: usize,
     /// wall time of each decode step, in recording order
     pub step_ms: Vec<f64>,
+    /// weight representation the engine decoded from (dense/fused/packed)
+    pub backend: Option<String>,
+    /// resident bytes of the engine's KV cache (capacity, not fill)
+    pub kv_cache_bytes: Option<usize>,
+    /// resident bytes of the prepared packed model (packed backend only)
+    pub packed_model_bytes: Option<usize>,
+    /// measured effective bits/weight of the packed containers
+    pub packed_bits_per_weight: Option<f64>,
 }
 
 impl MetricsRegistry {
@@ -80,7 +91,38 @@ impl MetricsRegistry {
             requests: Vec::new(),
             expired: 0,
             step_ms: Vec::new(),
+            backend: None,
+            kv_cache_bytes: None,
+            packed_model_bytes: None,
+            packed_bits_per_weight: None,
         }
+    }
+
+    /// Record which weight representation served this run.
+    pub fn set_backend(&mut self, backend: &str) {
+        self.backend = Some(backend.to_string());
+    }
+
+    /// Record the KV cache's resident capacity bytes.
+    pub fn set_kv_cache_bytes(&mut self, bytes: usize) {
+        self.kv_cache_bytes = Some(bytes);
+    }
+
+    /// Record the packed model's resident bytes and measured effective
+    /// bits/weight (packed backend only).
+    pub fn set_packed_model(&mut self, bytes: usize, bits_per_weight: f64) {
+        self.packed_model_bytes = Some(bytes);
+        self.packed_bits_per_weight = Some(bits_per_weight);
+    }
+
+    /// Largest per-request cached-position high-water mark seen (0 when
+    /// nothing was cached).
+    pub fn peak_cached_positions(&self) -> usize {
+        self.requests
+            .iter()
+            .map(|r| r.cached_positions)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Record a decode step observed "now" (zero-duration step window).
@@ -179,8 +221,10 @@ impl MetricsRegistry {
     }
 
     /// The full registry as a JSON object (what `write_json` persists).
+    /// Memory-accounting entries (backend, KV-cache bytes, packed-model
+    /// bytes + effective bits) appear when the engine recorded them.
     pub fn snapshot(&self) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("label", s(&self.label)),
             ("requests", num(self.requests.len() as f64)),
             ("expired", num(self.expired as f64)),
@@ -196,19 +240,34 @@ impl MetricsRegistry {
             ("p99_ms", num(self.p99_ms())),
             ("mean_queue_ms", num(self.mean_queue_ms())),
             ("mean_decode_ms", num(self.mean_decode_ms())),
-            (
-                "per_request",
-                arr(self.requests.iter().map(|r| {
-                    obj(vec![
-                        ("id", num(r.id as f64)),
-                        ("queue_ms", num(r.queue_ms)),
-                        ("decode_ms", num(r.decode_ms)),
-                        ("total_ms", num(r.total_ms)),
-                        ("new_tokens", num(r.new_tokens as f64)),
-                    ])
-                })),
-            ),
-        ])
+            ("peak_cached_positions", num(self.peak_cached_positions() as f64)),
+        ];
+        if let Some(b) = &self.backend {
+            fields.push(("backend", s(b)));
+        }
+        if let Some(n) = self.kv_cache_bytes {
+            fields.push(("kv_cache_bytes", num(n as f64)));
+        }
+        if let Some(n) = self.packed_model_bytes {
+            fields.push(("packed_model_bytes", num(n as f64)));
+        }
+        if let Some(b) = self.packed_bits_per_weight {
+            fields.push(("packed_bits_per_weight", num(b)));
+        }
+        fields.push((
+            "per_request",
+            arr(self.requests.iter().map(|r| {
+                obj(vec![
+                    ("id", num(r.id as f64)),
+                    ("queue_ms", num(r.queue_ms)),
+                    ("decode_ms", num(r.decode_ms)),
+                    ("total_ms", num(r.total_ms)),
+                    ("new_tokens", num(r.new_tokens as f64)),
+                    ("cached_positions", num(r.cached_positions as f64)),
+                ])
+            })),
+        ));
+        obj(fields)
     }
 
     /// Write the JSON snapshot to `path`.
@@ -282,12 +341,41 @@ mod tests {
             decode_ms: 30.0,
             total_ms: 40.0,
             new_tokens: 6,
+            cached_positions: 9,
         });
         assert_eq!(m.steps, 2);
         assert!((m.lane_occupancy() - 0.75).abs() < 1e-9);
         assert_eq!(m.p50_ms(), 40.0);
         assert_eq!(m.p99_ms(), 40.0);
         assert!((m.mean_queue_ms() - 10.0).abs() < 1e-9);
+        assert_eq!(m.peak_cached_positions(), 9);
+    }
+
+    #[test]
+    fn memory_accounting_round_trips_through_json() {
+        let mut m = MetricsRegistry::new("mem");
+        m.set_backend("packed");
+        m.set_kv_cache_bytes(1024);
+        m.set_packed_model(4096, 1.61);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("backend").and_then(Json::as_str), Some("packed"));
+        assert_eq!(
+            back.get("kv_cache_bytes").and_then(Json::as_usize),
+            Some(1024)
+        );
+        assert_eq!(
+            back.get("packed_model_bytes").and_then(Json::as_usize),
+            Some(4096)
+        );
+        let bits = back
+            .get("packed_bits_per_weight")
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!((bits - 1.61).abs() < 1e-9);
+        // absent until the engine records them
+        let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
+        assert!(empty.get("backend").is_none());
+        assert!(empty.get("packed_model_bytes").is_none());
     }
 
     #[test]

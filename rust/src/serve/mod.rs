@@ -11,11 +11,15 @@
 //! prompts are prefilled once on admission and every subsequent step
 //! decodes one new token per lane against cached K/V, so per-token cost
 //! is flat in sequence position (see `ARCHITECTURE.md` for the request
-//! data flow). At this scale the absolute numbers characterize the native
-//! CPU path (the paper's F.3 discussion); the packed memory wins come
-//! from packing::memory. The scheduling and caching wins — lane refill
-//! beating batch drain, cached decode beating full-window re-reads — are
-//! measured by `benches/bench_serve.rs`.
+//! data flow). For PTQ1.61 the production backend is
+//! `ModelEval::Packed`: weights stay resident in the prepared 1.61-bit
+//! containers (`crate::quant::ptq161::packed`) and every decode step
+//! contracts them directly — no dense-weight reconstruction. At this
+//! scale the absolute numbers characterize the native CPU path (the
+//! paper's F.3 discussion); the scheduling/caching/backend wins — lane
+//! refill beating batch drain, cached decode beating full-window
+//! re-reads, packed beating the rebuild-Wq' fused path — are measured by
+//! `benches/bench_serve.rs`.
 
 pub mod batcher;
 pub mod engine;

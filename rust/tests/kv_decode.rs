@@ -7,7 +7,7 @@
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::model::{Params, LINEARS};
-use ptq161::quant::ptq161::initial_parts;
+use ptq161::quant::ptq161::{initial_parts, PackedModel};
 use ptq161::quant::Ptq161Parts;
 use ptq161::runtime::kv::KvCache;
 use ptq161::runtime::Runtime;
@@ -95,6 +95,58 @@ fn cached_decode_token_identical_to_full_window_fused() {
     let (cached, _, _) = run_workload(&pipe, &me, true, false);
     for (f, c) in full.iter().zip(&cached) {
         assert_eq!(f.text, c.text, "fused request {} tokens diverge", f.id);
+    }
+}
+
+#[test]
+fn packed_decode_token_identical_to_fused_and_full_window() {
+    // the prepared packed containers must decode the same tokens as the
+    // fused (reconstruct-Wq') path across prefill, mid-flight refill and
+    // batch compaction — and the packed cached path must match its own
+    // full-window baseline
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(42);
+    let parts = fused_parts(&params, &pipe);
+    let packed = PackedModel::pack(&parts);
+    let fused = ModelEval::Fused { params: &params, parts: &parts };
+    let pk = ModelEval::Packed { params: &params, packed: &packed };
+    let (fused_cached, _, _) = run_workload(&pipe, &fused, true, false);
+    let (packed_cached, in_use, _) = run_workload(&pipe, &pk, true, false);
+    let (packed_full, _, _) = run_workload(&pipe, &pk, false, false);
+    assert_eq!(in_use, 0, "packed engine must release every slot");
+    for ((f, c), w) in
+        fused_cached.iter().zip(&packed_cached).zip(&packed_full)
+    {
+        assert_eq!(f.text, c.text, "packed vs fused diverge at {}", f.id);
+        assert_eq!(c.text, w.text, "packed cached vs full diverge at {}", c.id);
+    }
+}
+
+#[test]
+fn prefill_of_truncated_prompt_matches_forward_h_packed() {
+    // the packed full-window forward runs the decode kernels against an
+    // empty past, so prefill must reproduce it bit-for-bit
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(52);
+    let parts = fused_parts(&params, &pipe);
+    let packed = PackedModel::pack(&parts);
+    let me = ModelEval::Packed { params: &params, packed: &packed };
+    let t = pipe.cfg.seq;
+    let d = pipe.cfg.d;
+    let plen = 7;
+    let mut rng = Rng::new(53);
+    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(256) as i32).collect();
+    let mut window = prompt.clone();
+    window.resize(t, 0);
+    let h_full = me.forward_h(&pipe, &window).unwrap();
+    let mut cache = micro_cache(&pipe);
+    let slot = cache.alloc().unwrap();
+    let h_inc =
+        me.forward_h_incremental(&pipe, &mut cache, &[slot], &prompt).unwrap();
+    for i in 0..plen * d {
+        assert_eq!(h_inc.data[i], h_full.data[i], "packed prefill deviates at {i}");
     }
 }
 
