@@ -38,12 +38,20 @@ fn main() -> Result<()> {
     let mut metrics = MetricsRegistry::new("serve_demo");
     let mut engine = Engine::new(&pipe, &model);
     println!(
-        "kv cache: {} slots x {} positions ({:.1} KiB resident)",
+        "kv cache: {} lanes x {} positions, {} pages of {} ({:.1} KiB pool)",
         engine.kv_cache().slots(),
         engine.kv_cache().capacity(),
+        engine.kv_cache().total_pages(),
+        engine.kv_cache().page_size(),
         engine.kv_cache().bytes() as f64 / 1024.0
     );
     let resps = engine.run(&mut batcher, &mut metrics)?;
+    println!(
+        "kv live peak {:.1} KiB of {:.1} KiB pool | prefix hit rate {:.2}",
+        engine.kv_cache().peak_live_bytes() as f64 / 1024.0,
+        engine.kv_cache().bytes() as f64 / 1024.0,
+        metrics.prefix_hit_rate()
+    );
     for r in resps {
         let text: String = r.text.replace('\n', " ").chars().take(64).collect();
         println!("-> [{:>2}] +{:<2} tok  {text}", r.id, r.new_tokens);

@@ -7,7 +7,9 @@
 use ptq161::packing::bitpack::BitVec;
 use ptq161::packing::nibble::{quantize_column, NibbleVec};
 use ptq161::quant::ptq161::{initial_parts, PackedLinear};
-use ptq161::runtime::autodiff::{packed_qlinear_fwd, qlinear_fwd};
+use ptq161::runtime::autodiff::{
+    packed_qlinear_fwd, packed_qlinear_fwd_scalar, qlinear_fwd,
+};
 use ptq161::tensor::Tensor;
 use ptq161::util::bench::Bencher;
 use ptq161::util::rng::Rng;
@@ -43,7 +45,24 @@ fn main() {
     b.run("packing/fused_matvec_rebuild_512", || {
         qlinear_fwd(&x, &a_s, &r1, &r2, &mu, &parts.w_sal, &parts.sign_ns)
     });
-    b.run("packing/packed_matvec_512", || packed_qlinear_fwd(&x, &pl));
+    // scalar set-bit walk vs the 4-row-tiled whole-word kernel the serve
+    // path runs: same containers, bit-identical outputs, the delta is the
+    // blocked accumulation's win
+    let scalar =
+        b.run("packing/packed_matvec_512_scalar", || {
+            packed_qlinear_fwd_scalar(&x, &pl)
+        });
+    let blocked =
+        b.run("packing/packed_matvec_512_blocked", || packed_qlinear_fwd(&x, &pl));
+    assert_eq!(
+        packed_qlinear_fwd(&x, &pl).data,
+        packed_qlinear_fwd_scalar(&x, &pl).data,
+        "blocked kernel must stay bit-identical to the scalar walk"
+    );
+    println!(
+        "blocked/scalar packed matvec mean: {:.2}x (below 1.0 = blocked wins)",
+        blocked.mean_ns / scalar.mean_ns.max(1e-9)
+    );
     println!(
         "packed 512x512: {} bytes resident, {:.3} bits/weight",
         pl.resident_bytes(),

@@ -20,6 +20,15 @@
 //! `qlinear_weight` reconstructions inside the decode loop, and its
 //! per-step time is reported against the fused-cached path.
 //!
+//! Part 4 replays a shared-system-prompt workload through the paged
+//! cache: peak live KV bytes must stay strictly below N x per-lane
+//! full-window bytes with a nonzero prefix-hit rate, token-identical to
+//! the non-paged full-window baseline.
+//!
+//! The whole run's summary is also written as machine-readable JSON to
+//! `runs/BENCH_serve.json` (mean step ms per backend, packed/fused step
+//! ratio, KV live/reserved bytes, prefix-hit rate) for CI and tooling.
+//!
 //! Runs on FP-initialized weights (scheduling/caching cost is independent
 //! of training) and needs no artifacts directory.
 
@@ -34,6 +43,7 @@ use ptq161::runtime::autodiff::qlinear_weight_reconstructions;
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::Batcher;
 use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
+use ptq161::util::json::{arr, num, obj, s};
 
 fn run_mode(
     pipe: &Pipeline,
@@ -221,8 +231,111 @@ fn main() {
         q_results[2].3, 0,
         "packed decode must not reconstruct dense weights"
     );
+    let packed_fused_ratio = q_results[2].1 / q_results[1].1.max(1e-9);
     println!(
-        "packed/fused cached mean step: {:.2}x (at or below 1.0 expected)",
-        q_results[2].1 / q_results[1].1.max(1e-9)
+        "packed/fused cached mean step: {packed_fused_ratio:.2}x \
+         (at or below 1.0 expected)"
     );
+
+    // ---- part 4: paged cache under a shared system prompt ---------------
+    // every request opens with the same >1-page head: later admissions
+    // adopt the registered prefix pages instead of recomputing them
+    let n_shared = 8;
+    let shared: Vec<GenRequest> = (0..n_shared)
+        .map(|i| GenRequest {
+            prompt: format!(
+                "SYSTEM: you are a terse assistant for the alda river desk. \
+                 user {i}: "
+            ),
+            max_new_tokens: if i % 3 == 0 { 24 } else { 6 },
+        })
+        .collect();
+    println!("\n# paged cache: {n_shared} requests, one shared system prompt");
+    let (base_m, base_resps, _) =
+        run_mode(&pipe, &packed_me, &shared, "shared/full-window", false, false);
+    let (paged_m, paged_resps, _) =
+        run_mode(&pipe, &packed_me, &shared, "shared/paged", false, true);
+    let base_texts: Vec<String> =
+        base_resps.into_iter().map(|r| r.text).collect();
+    let paged_texts: Vec<String> =
+        paged_resps.into_iter().map(|r| r.text).collect();
+    assert_eq!(
+        paged_texts, base_texts,
+        "paged shared-prefix decode must be token-identical"
+    );
+    let kv_reserved = paged_m.kv_reserved_bytes.unwrap_or(0);
+    let kv_live = paged_m.kv_live_bytes.unwrap_or(0);
+    let hit_rate = paged_m.prefix_hit_rate();
+    let window_bytes = pipe.cfg.n_layers
+        * pipe.cfg.seq
+        * pipe.cfg.d
+        * 2
+        * std::mem::size_of::<f32>();
+    println!(
+        "kv reserved {kv_reserved} B | live peak {kv_live} B \
+         ({:.1}% of {n_shared} full windows) | prefix hit rate {hit_rate:.2} \
+         | CoW splits {}",
+        100.0 * kv_live as f64 / (n_shared * window_bytes) as f64,
+        paged_m.kv_cow_splits.unwrap_or(0),
+    );
+    assert!(
+        kv_live > 0 && kv_live < n_shared * window_bytes,
+        "paged live bytes must undershoot {n_shared} full windows"
+    );
+    assert!(hit_rate > 0.0, "shared system prompt must hit the prefix index");
+    assert!(base_m.prefix_hit_rate() == 0.0, "full-window path caches nothing");
+    // non-vacuous sharing gate: break the shared head (request index
+    // first) and the same workload must physically allocate strictly
+    // more pages — adopted pages are referenced, never allocated
+    let unique: Vec<GenRequest> = shared
+        .iter()
+        .enumerate()
+        .map(|(i, r)| GenRequest {
+            prompt: format!(
+                "user {i}: SYSTEM: you are a terse assistant for the alda \
+                 river desk."
+            ),
+            max_new_tokens: r.max_new_tokens,
+        })
+        .collect();
+    let (unshared_m, _, _) =
+        run_mode(&pipe, &packed_me, &unique, "shared/no-prefix", false, true);
+    let shared_allocs = paged_m.kv_page_allocs.unwrap_or(0);
+    let unique_allocs = unshared_m.kv_page_allocs.unwrap_or(0);
+    println!(
+        "page allocations: {shared_allocs} shared-prefix vs {unique_allocs} \
+         unique prompts"
+    );
+    assert!(
+        shared_allocs < unique_allocs,
+        "prefix sharing must allocate strictly fewer pages"
+    );
+
+    // ---- machine-readable summary ---------------------------------------
+    let backends = arr(q_results.iter().map(|(label, step_ms, _, recon)| {
+        obj(vec![
+            ("name", s(label)),
+            ("mean_step_ms", num(*step_ms)),
+            ("reconstructions", num(*recon as f64)),
+        ])
+    }));
+    let summary = obj(vec![
+        ("bench", s("bench_serve")),
+        ("backends", backends),
+        ("packed_fused_step_ratio", num(packed_fused_ratio)),
+        ("kv_reserved_bytes", num(kv_reserved as f64)),
+        ("kv_live_bytes", num(kv_live as f64)),
+        ("prefix_hit_rate", num(hit_rate)),
+        ("page_allocs_shared", num(shared_allocs as f64)),
+        ("page_allocs_unique", num(unique_allocs as f64)),
+        (
+            "shared_prefix_requests",
+            num(n_shared as f64),
+        ),
+        ("full_window_bytes_per_lane", num(window_bytes as f64)),
+        ("token_identity", s("ok")),
+    ]);
+    let path = ptq161::runs_dir().join("BENCH_serve.json");
+    std::fs::write(&path, summary.dump()).unwrap();
+    println!("summary written to {}", path.display());
 }

@@ -127,15 +127,20 @@ impl<'a> ModelEval<'a> {
     /// Hidden states for *new* token positions only, against per-lane
     /// cached K/V — the incremental counterpart of [`Self::forward_h`].
     ///
-    /// `slots` names one cache slot per compacted-batch row and `tokens`
-    /// holds `slots.len() * t_new` ids: prefill passes the whole prompt
-    /// (`t_new` = prompt length, empty cache), a decode step passes the
-    /// single newest token per lane. Each lane's new positions start at
-    /// its cached length; the new K/V rows are appended to the cache and
-    /// the lengths advanced before returning, so consecutive calls chain.
-    /// For the dense and PTQ1.61-fused paths the result is bit-identical
-    /// to [`Self::forward_h`] over the same prefix (see `runtime::native`
-    /// on the W4A4 exception).
+    /// `slots` names one paged-cache lane per compacted-batch row and
+    /// `tokens` holds `slots.len() * t_new` ids: prefill passes the
+    /// positions of the prompt still to compute (`t_new` = prompt length
+    /// minus any shared-prefix pages the engine adopted — lanes may enter
+    /// one batch with *different* cached lengths, only the new-chunk
+    /// width must match), a decode step passes the single newest token
+    /// per lane. Each lane's new positions start at its cached length;
+    /// the gather walks the lane's page table into the compacted batch
+    /// the decode kernels consume, and the new K/V rows are appended
+    /// (page allocation and copy-on-write splits happen inside the cache)
+    /// and the lengths advanced before returning, so consecutive calls
+    /// chain. For the dense and PTQ1.61-fused/packed paths the result is
+    /// bit-identical to [`Self::forward_h`] over the same prefix (see
+    /// `runtime::native` on the W4A4 exception).
     pub fn forward_h_incremental(
         &self,
         pipe: &Pipeline,

@@ -7,10 +7,14 @@
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
 //!               [--no-kv] [--backend dense|fused|packed]
+//!               [--page-size 16] [--kv-pages N] [--verify-identity]
 //!               (quick-scale by default; --full for the full pipeline;
-//!               KV-cached incremental decode unless --no-kv; ptq161
-//!               defaults to the prepared packed-container backend;
-//!               writes runs/serve_metrics.json)
+//!               paged KV-cached incremental decode unless --no-kv;
+//!               ptq161 defaults to the prepared packed-container
+//!               backend; --kv-pages undersizes the page pool to see
+//!               admission backpressure; --verify-identity re-runs the
+//!               workload on the full-window baseline and asserts
+//!               token-identical output; writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
@@ -119,19 +123,34 @@ fn main() -> Result<()> {
                     anyhow::bail!("unknown backend '{other}' (dense|fused|packed)")
                 }
             };
-            let mut batcher = Batcher::new(pipe.cfg.b_eval);
-            // skewed request lengths: the workload continuous batching is
-            // built for (one long request no longer stalls three lanes)
-            for i in 0..n {
-                let max_new = if i % 4 == 3 { 48 } else { 6 };
-                batcher.submit(GenRequest {
+            // skewed request lengths sharing a prompt prefix: the workload
+            // continuous batching + the paged prefix index are built for
+            // (one long request no longer stalls three lanes; the common
+            // "system prompt" head of every request is cached once)
+            let requests: Vec<GenRequest> = (0..n)
+                .map(|i| GenRequest {
                     prompt: format!("the quiet river of alda {}", i % 3),
-                    max_new_tokens: max_new,
-                });
+                    max_new_tokens: if i % 4 == 3 { 48 } else { 6 },
+                })
+                .collect();
+            let mut batcher = Batcher::new(pipe.cfg.b_eval);
+            for r in &requests {
+                batcher.submit(r.clone());
             }
             let label = if args.flag("drain") { "drain" } else { "continuous" };
             let mut metrics = MetricsRegistry::new(label);
-            let mut engine = Engine::new(&pipe, &me);
+            // paged-cache geometry: --page-size positions per page and an
+            // optional --kv-pages pool size (undersizing the pool trades
+            // concurrency for memory and shows up as backpressure)
+            let page_size = args.usize_opt(
+                "page-size",
+                ptq161::serve::engine::DEFAULT_PAGE_SIZE,
+            );
+            let kv_pages = match args.usize_opt("kv-pages", 0) {
+                0 => None,
+                p => Some(p),
+            };
+            let mut engine = Engine::with_cache_geometry(&pipe, &me, page_size, kv_pages);
             // KV-cached incremental decode is the default; --no-kv selects
             // the full-window baseline (token-identical, but per-step cost
             // grows with sequence position)
@@ -149,9 +168,63 @@ fn main() -> Result<()> {
                 );
             }
             metrics.print_summary();
+            println!(
+                "kv: {} B reserved, {} B live peak, prefix hit rate {:.2}, \
+                 {} CoW splits, {} backpressure",
+                metrics.kv_reserved_bytes.unwrap_or(0),
+                metrics.kv_live_bytes.unwrap_or(0),
+                metrics.prefix_hit_rate(),
+                metrics.kv_cow_splits.unwrap_or(0),
+                metrics.kv_backpressure_events,
+            );
             let path = ptq161::runs_dir().join("serve_metrics.json");
             metrics.write_json(&path)?;
             println!("metrics written to {}", path.display());
+            if args.flag("verify-identity") {
+                // token-identity gate: the same workload on the legacy
+                // full-window path must decode byte-identical responses.
+                // Meaningless when the primary run already was
+                // full-window — comparing the baseline to itself would
+                // always "pass" — so reject that combination outright.
+                anyhow::ensure!(
+                    !args.flag("no-kv"),
+                    "--verify-identity checks the paged KV path against \
+                     the full-window baseline; it cannot be combined with \
+                     --no-kv (that would compare the baseline to itself)"
+                );
+                let mut b2 = Batcher::new(pipe.cfg.b_eval);
+                for r in &requests {
+                    b2.submit(r.clone());
+                }
+                let mut m2 = MetricsRegistry::new("identity-baseline");
+                let mut e2 = Engine::new(&pipe, &me);
+                e2.cfg.use_kv_cache = false;
+                let mut base = if args.flag("drain") {
+                    e2.run_drain(&mut b2, &mut m2)?
+                } else {
+                    e2.run(&mut b2, &mut m2)?
+                };
+                base.sort_by_key(|r| r.id);
+                let mut got = resps.clone();
+                got.sort_by_key(|r| r.id);
+                anyhow::ensure!(
+                    got.len() == base.len(),
+                    "identity check lost requests: {} vs {}",
+                    got.len(),
+                    base.len()
+                );
+                for (a, b) in got.iter().zip(&base) {
+                    anyhow::ensure!(
+                        a.text == b.text,
+                        "token identity violated for request {}",
+                        a.id
+                    );
+                }
+                println!(
+                    "token-identity vs full-window baseline: ok ({} requests)",
+                    base.len()
+                );
+            }
         }
         "experiment" | "all" => {
             let mut ctx = ctx_from(&args)?;

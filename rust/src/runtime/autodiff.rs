@@ -883,9 +883,70 @@ pub fn qlinear_fwd(
     qlinear_matmul(x, &wq, &xs, mu)
 }
 
-/// PTQ1.61 quantized linear straight from the packed 1.61-bit containers
-/// — the serve-path counterpart of [`qlinear_fwd`] with **zero** dense
-/// `Wq'` reconstruction.
+/// Per-input-row operands shared by both packed kernels: the
+/// binarized-branch vector `z = x ⊙ alpha_r2` over the non-salient
+/// channels with its total, the plain x sum feeding the mu term, the
+/// salient x pre-scaled by the nibble step, and the row-constant min
+/// term.
+fn packed_row_operands(
+    xr: &[f32],
+    pl: &PackedLinear,
+) -> (Vec<f32>, f32, f32, Vec<f32>, f32) {
+    let mut z = vec![0.0f32; pl.ns_cols().len()];
+    let mut ztot = 0.0f32;
+    let mut xs = 0.0f32;
+    for (c, &j) in pl.ns_cols().iter().enumerate() {
+        let v = xr[j as usize];
+        let zv = v * pl.r2_ns()[c];
+        z[c] = zv;
+        ztot += zv;
+        xs += v;
+    }
+    let mut xq = vec![0.0f32; pl.sal_cols().len()];
+    let mut xmin = 0.0f32;
+    for (c, &j) in pl.sal_cols().iter().enumerate() {
+        let v = xr[j as usize];
+        xq[c] = v * pl.col_scale()[c];
+        xmin += v * pl.col_min()[c];
+    }
+    (z, ztot, xs, xq, xmin)
+}
+
+/// One output of the scalar packed contraction: serial set-bit walk over
+/// the row's sign words plus the fused nibble-decode dot product. This is
+/// the reference accumulation order the blocked kernel must reproduce
+/// bit-for-bit.
+#[inline]
+fn packed_row_scalar(
+    pl: &PackedLinear,
+    o: usize,
+    z: &[f32],
+    ztot: f32,
+    xs: f32,
+    xq: &[f32],
+    xmin: f32,
+) -> f32 {
+    let mut pos = 0.0f32;
+    for (wi, &w0) in pl.sign_words(o).iter().enumerate() {
+        let mut w = w0;
+        let base = wi * 64;
+        while w != 0 {
+            pos += z[base + w.trailing_zeros() as usize];
+            w &= w - 1;
+        }
+    }
+    let bin = pl.row_scale()[o] * (2.0 * pos - ztot);
+    let n_sal = xq.len();
+    let mut sal = xmin;
+    let cbase = o * n_sal;
+    for (c, &xv) in xq.iter().enumerate() {
+        sal += pl.code(cbase + c) as f32 * xv;
+    }
+    sal + bin + xs * pl.mu()[o]
+}
+
+/// Reference scalar kernel: PTQ1.61 quantized linear straight from the
+/// packed 1.61-bit containers with **zero** dense `Wq'` reconstruction.
 ///
 /// Per input row the binarized branch is rearranged as
 /// `sum_j sign(o,j) * z[j] = 2 * sum_{set bits} z[j] - sum_j z[j]` with
@@ -898,6 +959,43 @@ pub fn qlinear_fwd(
 /// Numerically this matches [`qlinear_fwd`] up to float re-association
 /// (the engine's greedy decode stays token-identical; gated in
 /// `tests/packed_serve.rs`).
+///
+/// The serve path runs the blocked [`packed_qlinear_fwd`]; this kernel is
+/// kept as the bit-identity oracle it is gated against (and the
+/// `bench_packing` baseline the blocked delta is measured from).
+pub fn packed_qlinear_fwd_scalar(x: &Tensor, pl: &PackedLinear) -> Tensor {
+    let (out, inn) = (pl.out(), pl.inn());
+    assert_eq!(*x.shape.last().unwrap(), inn, "packed qlinear contraction");
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    let xd = &x.data;
+    par_rows(&mut y.data, out, &|r, yr| {
+        let xr = &xd[r * inn..(r + 1) * inn];
+        let (z, ztot, xs, xq, xmin) = packed_row_operands(xr, pl);
+        for (o, yo) in yr.iter_mut().enumerate() {
+            *yo = packed_row_scalar(pl, o, &z, ztot, xs, &xq, xmin);
+        }
+    });
+    y
+}
+
+/// Blocked packed contraction: the serve-path kernel. Outputs are
+/// processed in 4-row tiles — one whole-`u64` pass over the tile's sign
+/// words, guided by the OR of the four rows' words, accumulates all four
+/// binarized branches at once. Each `z` load and bit scan is amortized
+/// across the tile, and the four accumulator chains are independent, so
+/// the serial add-chain bottleneck of the per-row walk turns into
+/// instruction-level parallelism; the salient nibble contraction is tiled
+/// the same way (one `xq` stream feeds four code rows).
+///
+/// Bit-identity with [`packed_qlinear_fwd_scalar`] is preserved by
+/// construction and gated in `tests/packed_serve.rs`: per row, set bits
+/// contribute in the same ascending order, and the masked add
+/// `z * ((w >> j) & 1)` contributes exactly `±0.0` for unset bits, which
+/// is an exact no-op on the accumulator (the partial sums can never be
+/// `-0.0`: they start at `+0.0` and IEEE-754 round-to-nearest addition
+/// only yields `-0.0` from two negative-zero operands).
 pub fn packed_qlinear_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
     let (out, inn) = (pl.out(), pl.inn());
     assert_eq!(*x.shape.last().unwrap(), inn, "packed qlinear contraction");
@@ -906,47 +1004,51 @@ pub fn packed_qlinear_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
     let mut y = Tensor::zeros(&yshape);
     let xd = &x.data;
     let n_sal = pl.sal_cols().len();
-    let n_ns = pl.ns_cols().len();
     par_rows(&mut y.data, out, &|r, yr| {
         let xr = &xd[r * inn..(r + 1) * inn];
-        // binarized-branch operand z = x ⊙ r2 over non-salient channels,
-        // plus its total and the plain x sum feeding the mu term
-        let mut z = vec![0.0f32; n_ns];
-        let mut ztot = 0.0f32;
-        let mut xs = 0.0f32;
-        for (c, &j) in pl.ns_cols().iter().enumerate() {
-            let v = xr[j as usize];
-            let zv = v * pl.r2_ns()[c];
-            z[c] = zv;
-            ztot += zv;
-            xs += v;
-        }
-        // salient-branch operands: x pre-scaled by the nibble step, and
-        // the row-constant min term
-        let mut xq = vec![0.0f32; n_sal];
-        let mut xmin = 0.0f32;
-        for (c, &j) in pl.sal_cols().iter().enumerate() {
-            let v = xr[j as usize];
-            xq[c] = v * pl.col_scale()[c];
-            xmin += v * pl.col_min()[c];
-        }
-        for (o, yo) in yr.iter_mut().enumerate() {
-            let mut pos = 0.0f32;
-            for (wi, &w0) in pl.sign_words(o).iter().enumerate() {
-                let mut w = w0;
+        let (z, ztot, xs, xq, xmin) = packed_row_operands(xr, pl);
+        let mut o = 0;
+        while o + 4 <= out {
+            let w0 = pl.sign_words(o);
+            let w1 = pl.sign_words(o + 1);
+            let w2 = pl.sign_words(o + 2);
+            let w3 = pl.sign_words(o + 3);
+            let (mut p0, mut p1, mut p2, mut p3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for wi in 0..w0.len() {
+                let (a, b, c, d) = (w0[wi], w1[wi], w2[wi], w3[wi]);
+                let mut any = a | b | c | d;
                 let base = wi * 64;
-                while w != 0 {
-                    pos += z[base + w.trailing_zeros() as usize];
-                    w &= w - 1;
+                while any != 0 {
+                    let j = any.trailing_zeros() as usize;
+                    let zv = z[base + j];
+                    p0 += zv * ((a >> j) & 1) as f32;
+                    p1 += zv * ((b >> j) & 1) as f32;
+                    p2 += zv * ((c >> j) & 1) as f32;
+                    p3 += zv * ((d >> j) & 1) as f32;
+                    any &= any - 1;
                 }
             }
-            let bin = pl.row_scale()[o] * (2.0 * pos - ztot);
-            let mut sal = xmin;
-            let cbase = o * n_sal;
+            let (mut s0, mut s1, mut s2, mut s3) = (xmin, xmin, xmin, xmin);
+            let cb = o * n_sal;
             for (c, &xv) in xq.iter().enumerate() {
-                sal += pl.code(cbase + c) as f32 * xv;
+                s0 += pl.code(cb + c) as f32 * xv;
+                s1 += pl.code(cb + n_sal + c) as f32 * xv;
+                s2 += pl.code(cb + 2 * n_sal + c) as f32 * xv;
+                s3 += pl.code(cb + 3 * n_sal + c) as f32 * xv;
             }
-            *yo = sal + bin + xs * pl.mu()[o];
+            yr[o] = s0 + pl.row_scale()[o] * (2.0 * p0 - ztot) + xs * pl.mu()[o];
+            yr[o + 1] =
+                s1 + pl.row_scale()[o + 1] * (2.0 * p1 - ztot) + xs * pl.mu()[o + 1];
+            yr[o + 2] =
+                s2 + pl.row_scale()[o + 2] * (2.0 * p2 - ztot) + xs * pl.mu()[o + 2];
+            yr[o + 3] =
+                s3 + pl.row_scale()[o + 3] * (2.0 * p3 - ztot) + xs * pl.mu()[o + 3];
+            o += 4;
+        }
+        // remainder rows (out % 4): the scalar walk, same order
+        while o < out {
+            yr[o] = packed_row_scalar(pl, o, &z, ztot, xs, &xq, xmin);
+            o += 1;
         }
     });
     y

@@ -1,74 +1,198 @@
-//! Per-lane KV cache for incremental decode.
+//! Paged KV cache with shared-prefix page reuse.
 //!
-//! The serve engine owns one [`KvCache`] sized to its lane pool: each lane
-//! holds one *slot*, and a slot stores the roped attention keys and the
-//! values of every layer for the positions that lane has already decoded.
-//! A decode step then only runs the model over the *new* token positions —
-//! the quadratic re-read of the window is replaced by one cached-K/V
-//! attention pass, so per-token cost is flat in sequence position (the
-//! deployment efficiency extreme low-bit PTQ exists to buy; see
-//! `ARCHITECTURE.md`).
+//! The serve engine owns one [`KvCache`] sized to its lane pool. Storage
+//! is no longer one monolithic full-window buffer per lane: K/V live in a
+//! page-pool arena of fixed-size *pages* (`page_size` positions × all
+//! layers × all heads), and each lane holds a *page table* mapping its
+//! cached positions onto physical pages. Three properties fall out of the
+//! paged layout:
 //!
-//! Layout: one contiguous `f32` buffer per side (K and V), indexed as
-//! `[slot][layer][position][head][head_dim]`. Rows for a new chunk are
-//! written by [`KvCache::append`] layer by layer at the slot's current
-//! length, and the length is bumped once per chunk by [`KvCache::advance`]
-//! after *all* layers have appended (every layer of one forward must see
-//! the same past length). [`KvCache::gather`] materializes the compacted
-//! per-step batch the native decode kernels consume: K/V tensors covering
-//! only the *live prefix* of the window plus the per-lane valid lengths
-//! (the kernel never reads rows at or beyond a lane's length, so stale
-//! rows need no zeroing and the dead tail is never copied).
+//! * **Occupancy-proportional memory** — a lane consumes pages for the
+//!   positions it has actually cached, not a whole reserved window, so
+//!   [`KvCache::live_bytes`] tracks real occupancy while
+//!   [`KvCache::bytes`] is the pool's resident capacity.
+//! * **Shared-prefix page reuse** — a content-keyed prefix index maps the
+//!   token chain covering each *full, immutable* page to its physical
+//!   page. Lanes whose prompts share a whole-page token prefix adopt the
+//!   same pages (ref-counted) instead of recomputing and re-storing them;
+//!   [`KvCache::adopt_prefix`] returns how many positions the prefill can
+//!   skip. Pages are freed when the last referencing lane finishes, which
+//!   also retires their index entries.
+//! * **Copy-on-write divergence** — appending into a page that other
+//!   lanes still read first splits it (the whole page is copied, the ref
+//!   count drops), so divergence mid-page never corrupts a sibling's
+//!   prefix. Writing into an *exclusively held* page that the prefix
+//!   index still advertises retires the stale index entries instead.
 //!
-//! Slots are recycled through a free list: [`KvCache::alloc`] on lane
-//! admission, [`KvCache::free`] when the lane finishes, and
-//! [`KvCache::total_allocs`] counts lifetime allocations so tests can
-//! assert that a finished lane's slot really is reused by the next
-//! request.
+//! The chunk protocol is unchanged from the slot store this replaces:
+//! rows for a new chunk are written by [`KvCache::append`] layer by layer
+//! at the lane's current length (page allocation and CoW splits happen on
+//! the first layer's append and are idempotent for the rest), the length
+//! is bumped once per chunk by [`KvCache::advance`] after *all* layers
+//! appended, and [`KvCache::gather`] materializes the compacted per-step
+//! batch the native decode kernels consume — only live rows are copied
+//! out of the page tables; the dead tail of the window is never touched.
+//!
+//! Admission control is page-granular: [`KvCache::alloc_with_budget`]
+//! reserves the worst-case page count for a request (prompt + generation
+//! budget) and fails when the pool cannot cover it, so the engine
+//! backpressures on *pool exhaustion* rather than lane count and a decode
+//! step can never run out of pages mid-flight (shared pages only make
+//! live usage cheaper than the reservation, never dearer).
 
 use crate::tensor::Tensor;
 
-/// Per-lane, per-layer K/V store for incremental decode (see the module
-/// docs for the layout and the append/advance protocol).
+/// Default positions per page (the engine's `--page-size` default).
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// One lane's view of the paged store: its page table, valid length, and
+/// the admission-time page reservation backing it.
+#[derive(Debug)]
+struct LaneState {
+    /// physical page ids covering positions `[0, ceil(len/page_size))`
+    pages: Vec<usize>,
+    /// valid cached positions
+    len: usize,
+    /// worst-case pages reserved at alloc time (released on free)
+    reserved: usize,
+}
+
+/// One registered whole-page prefix chain: the first `pages.len() *
+/// page_size` tokens of some prompt, mapped to the physical pages holding
+/// their K/V. Entries are weak — they hold no ref count and retire when
+/// any of their pages is freed or rewritten.
+#[derive(Debug)]
+struct PrefixEntry {
+    /// FNV-1a over `tokens` (fast pre-filter; matches verify exactly)
+    hash: u64,
+    /// the token chain, `pages.len() * page_size` ids
+    tokens: Vec<i32>,
+    /// physical pages holding the chain's K/V, in position order
+    pages: Vec<usize>,
+}
+
+/// Paged, ref-counted, prefix-sharing K/V store (see the module docs).
 #[derive(Debug)]
 pub struct KvCache {
     n_layers: usize,
     heads: usize,
     head_dim: usize,
+    /// max positions per lane (the model window)
     capacity: usize,
-    /// valid positions per slot (shared by all layers of that slot)
-    lens: Vec<usize>,
-    in_use: Vec<bool>,
-    /// free slot ids, popped on alloc, pushed back on free
-    free: Vec<usize>,
-    allocs: u64,
+    /// positions per page
+    page_size: usize,
+    /// page arena, `n_pages * page_elems` per side
     k: Vec<f32>,
     v: Vec<f32>,
+    /// lane references per page; 0 = free
+    ref_count: Vec<u32>,
+    /// page appears in at least one prefix-index entry
+    registered: Vec<bool>,
+    /// free page ids, popped on allocation, pushed back when the last
+    /// reference drops (LIFO, so a just-freed page is reused first)
+    free_pages: Vec<usize>,
+    /// sum of live lanes' worst-case reservations
+    reserved_pages: usize,
+    lanes: Vec<Option<LaneState>>,
+    free_lanes: Vec<usize>,
+    allocs: u64,
+    index: Vec<PrefixEntry>,
+    cow_splits: u64,
+    prefix_hit_pages: u64,
+    prefix_reused_positions: u64,
+    peak_live_pages: usize,
+    page_allocs: u64,
+}
+
+/// FNV-1a over a token chain is a running fold, so one pass over
+/// `tokens` yields the hash of every page-aligned prefix: `out[m-1]`
+/// covers `tokens[..m * page_size]`. Both `register_prefix` (stamping
+/// entries) and `adopt_prefix` (the pre-filter) hash through this, so a
+/// prompt is hashed once per call, never once per entry, and the two
+/// sides agree by construction.
+fn page_prefix_hashes(tokens: &[i32], page_size: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / page_size);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for (i, &t) in tokens.iter().enumerate() {
+        for byte in t.to_le_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        if (i + 1) % page_size == 0 {
+            out.push(h);
+        }
+    }
+    out
 }
 
 impl KvCache {
-    /// A cache with `slots` lanes, each holding `n_layers` layers of up to
-    /// `capacity` positions of `heads * head_dim` features.
+    /// A fully provisioned cache: `lanes` lanes over a pool that can hold
+    /// one full window per lane (`ceil(capacity / page_size)` pages each,
+    /// [`DEFAULT_PAGE_SIZE`] positions per page) — the drop-in equivalent
+    /// of the old monolithic per-slot store, with sharing on top.
     pub fn new(
-        slots: usize,
+        lanes: usize,
         n_layers: usize,
         capacity: usize,
         heads: usize,
         head_dim: usize,
     ) -> KvCache {
-        assert!(slots > 0 && n_layers > 0 && capacity > 0);
-        let total = slots * n_layers * capacity * heads * head_dim;
+        let page_size = DEFAULT_PAGE_SIZE.min(capacity.max(1));
+        let per_lane = capacity.div_ceil(page_size);
+        Self::with_geometry(
+            lanes,
+            n_layers,
+            capacity,
+            heads,
+            head_dim,
+            page_size,
+            lanes * per_lane,
+        )
+    }
+
+    /// A cache with explicit paging geometry: `page_size` positions per
+    /// page and `n_pages` pages in the pool. The pool must hold at least
+    /// one full window so a maximal request is always admissible.
+    pub fn with_geometry(
+        lanes: usize,
+        n_layers: usize,
+        capacity: usize,
+        heads: usize,
+        head_dim: usize,
+        page_size: usize,
+        n_pages: usize,
+    ) -> KvCache {
+        assert!(lanes > 0 && n_layers > 0 && capacity > 0);
+        assert!(
+            page_size > 0 && page_size <= capacity,
+            "page_size {page_size} must be in 1..={capacity}"
+        );
+        assert!(
+            n_pages >= capacity.div_ceil(page_size),
+            "pool of {n_pages} pages cannot hold one {capacity}-position window"
+        );
+        let page_elems = n_layers * page_size * heads * head_dim;
         KvCache {
             n_layers,
             heads,
             head_dim,
             capacity,
-            lens: vec![0; slots],
-            in_use: vec![false; slots],
-            free: (0..slots).rev().collect(),
+            page_size,
+            k: vec![0.0; n_pages * page_elems],
+            v: vec![0.0; n_pages * page_elems],
+            ref_count: vec![0; n_pages],
+            registered: vec![false; n_pages],
+            free_pages: (0..n_pages).rev().collect(),
+            reserved_pages: 0,
+            lanes: (0..lanes).map(|_| None).collect(),
+            free_lanes: (0..lanes).rev().collect(),
             allocs: 0,
-            k: vec![0.0; total],
-            v: vec![0.0; total],
+            index: Vec::new(),
+            cow_splits: 0,
+            prefix_hit_pages: 0,
+            prefix_reused_positions: 0,
+            peak_live_pages: 0,
+            page_allocs: 0,
         }
     }
 
@@ -77,129 +201,413 @@ impl KvCache {
         self.heads * self.head_dim
     }
 
-    fn layer_stride(&self) -> usize {
-        self.capacity * self.row_elems()
+    /// Elements of one page per side (all layers).
+    fn page_elems(&self) -> usize {
+        self.n_layers * self.page_size * self.row_elems()
     }
 
-    fn base(&self, slot: usize, layer: usize) -> usize {
-        (slot * self.n_layers + layer) * self.layer_stride()
+    /// Flat offset of `(page, layer, pos_in_page)` in the K/V arenas.
+    fn at(&self, page: usize, layer: usize, pos: usize) -> usize {
+        page * self.page_elems() + (layer * self.page_size + pos) * self.row_elems()
     }
 
-    /// Number of slots (== the engine's lane capacity).
+    fn lane(&self, lane: usize) -> &LaneState {
+        self.lanes[lane].as_ref().expect("lane is not in use")
+    }
+
+    /// Number of lanes (== the engine's lane capacity).
     pub fn slots(&self) -> usize {
-        self.in_use.len()
+        self.lanes.len()
     }
 
-    /// Maximum cached positions per slot (the model window).
+    /// Maximum cached positions per lane (the model window).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Valid cached positions of `slot`.
-    pub fn len(&self, slot: usize) -> usize {
-        self.lens[slot]
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
     }
 
-    /// Slots currently allocated to live lanes.
+    /// Pages in the pool.
+    pub fn total_pages(&self) -> usize {
+        self.ref_count.len()
+    }
+
+    /// Pages needed to hold `positions` cached positions.
+    pub fn pages_needed(&self, positions: usize) -> usize {
+        positions.max(1).div_ceil(self.page_size)
+    }
+
+    /// Valid cached positions of `lane`.
+    pub fn len(&self, lane: usize) -> usize {
+        self.lane(lane).len
+    }
+
+    /// Lanes currently allocated to live requests.
     pub fn in_use_count(&self) -> usize {
-        self.in_use.iter().filter(|&&b| b).count()
+        self.lanes.iter().filter(|l| l.is_some()).count()
     }
 
-    /// Lifetime allocation count — strictly greater than [`Self::slots`]
-    /// once freed slots have been reused.
+    /// Lifetime lane-allocation count — strictly greater than
+    /// [`Self::slots`] once freed lanes have been reused.
     pub fn total_allocs(&self) -> u64 {
         self.allocs
     }
 
-    /// Resident size of the K+V buffers in bytes (capacity, not fill).
+    /// Resident size of the page pool in bytes (capacity, not fill) —
+    /// what the serve metrics export as `kv_reserved_bytes`.
     pub fn bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
     }
 
-    /// Claim a free slot (length reset to 0), or `None` when every slot is
-    /// held by a live lane.
+    /// Bytes of one page, both sides.
+    pub fn page_bytes(&self) -> usize {
+        2 * self.page_elems() * std::mem::size_of::<f32>()
+    }
+
+    /// Physical pages currently referenced by at least one lane (shared
+    /// pages count once).
+    pub fn live_pages(&self) -> usize {
+        self.total_pages() - self.free_pages.len()
+    }
+
+    /// Bytes of the currently referenced pages (shared pages once) — the
+    /// occupancy counterpart of [`Self::bytes`].
+    pub fn live_bytes(&self) -> usize {
+        self.live_pages() * self.page_bytes()
+    }
+
+    /// High-water mark of [`Self::live_bytes`] over the cache's lifetime.
+    pub fn peak_live_bytes(&self) -> usize {
+        self.peak_live_pages * self.page_bytes()
+    }
+
+    /// Pages reserved by live lanes' admission budgets.
+    pub fn reserved_page_count(&self) -> usize {
+        self.reserved_pages
+    }
+
+    /// Copy-on-write page splits performed so far.
+    pub fn cow_splits(&self) -> u64 {
+        self.cow_splits
+    }
+
+    /// Pages adopted from the prefix index so far.
+    pub fn prefix_hit_pages(&self) -> u64 {
+        self.prefix_hit_pages
+    }
+
+    /// Cached positions that prefix adoption let prefills skip so far.
+    pub fn prefix_reused_positions(&self) -> u64 {
+        self.prefix_reused_positions
+    }
+
+    /// Lifetime count of physical page allocations (fresh pages + CoW
+    /// copies). For a fixed workload this is the sharing-sensitive
+    /// memory metric: adopted pages are referenced, not allocated, so a
+    /// shared-prefix run allocates strictly fewer pages than the same
+    /// workload with unique prompts — scheduling-independent, unlike the
+    /// live-bytes peak.
+    pub fn page_alloc_count(&self) -> u64 {
+        self.page_allocs
+    }
+
+    /// Registered prefix chains currently alive (test/introspection).
+    pub fn index_entries(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Claim a lane with a full-window page budget — the conservative
+    /// equivalent of the old slot `alloc`.
     pub fn alloc(&mut self) -> Option<usize> {
-        let slot = self.free.pop()?;
-        debug_assert!(!self.in_use[slot]);
-        self.in_use[slot] = true;
-        self.lens[slot] = 0;
+        self.alloc_with_budget(self.capacity)
+    }
+
+    /// Claim a lane that will cache at most `positions` positions,
+    /// reserving its worst-case page count. Returns `None` when every
+    /// lane is held by a live request **or** the pool cannot cover the
+    /// reservation — the engine's admission backpressure signal. The
+    /// reservation guarantees appends never find the pool empty: shared
+    /// pages satisfy several reservations with one physical page, so live
+    /// usage only ever undershoots the reserved total.
+    pub fn alloc_with_budget(&mut self, positions: usize) -> Option<usize> {
+        assert!(
+            positions <= self.capacity,
+            "budget {positions} exceeds window {}",
+            self.capacity
+        );
+        let need = self.pages_needed(positions);
+        if self.reserved_pages + need > self.total_pages() {
+            return None;
+        }
+        let lane = self.free_lanes.pop()?;
+        debug_assert!(self.lanes[lane].is_none());
+        self.lanes[lane] = Some(LaneState { pages: Vec::new(), len: 0, reserved: need });
+        self.reserved_pages += need;
         self.allocs += 1;
-        Some(slot)
+        Some(lane)
     }
 
-    /// Return `slot` to the free list; its contents become dead rows that
-    /// the next owner overwrites from position 0.
-    pub fn free(&mut self, slot: usize) {
-        assert!(self.in_use[slot], "freeing a slot that is not in use");
-        self.in_use[slot] = false;
-        self.lens[slot] = 0;
-        self.free.push(slot);
+    /// Release `lane`: every page reference is dropped (pages whose last
+    /// reference this was go back to the free list and retire their
+    /// prefix-index entries — one retain pass for the whole lane, not one
+    /// per page) and the admission reservation is returned.
+    pub fn free(&mut self, lane: usize) {
+        let ls = self.lanes[lane].take().expect("freeing a lane that is not in use");
+        let mut stale = false;
+        for &p in &ls.pages {
+            debug_assert!(self.ref_count[p] > 0);
+            self.ref_count[p] -= 1;
+            if self.ref_count[p] == 0 {
+                self.free_pages.push(p);
+                stale |= self.registered[p];
+            }
+        }
+        if stale {
+            // index entries only ever reference live pages (every free
+            // and overwrite retires dead chains eagerly), so one pass
+            // dropping entries with any now-unreferenced page suffices
+            let rc = &self.ref_count;
+            self.index.retain(|e| e.pages.iter().all(|&p| rc[p] > 0));
+            self.rebuild_registered();
+        }
+        self.reserved_pages -= ls.reserved;
+        self.free_lanes.push(lane);
     }
 
-    /// Write one layer's K/V rows for a new chunk at the slot's current
+    /// Drop every prefix-index entry referencing `page` and recompute the
+    /// registered flags from the surviving entries (in-place overwrite of
+    /// an exclusively held registered page).
+    fn retire_entries_containing(&mut self, page: usize) {
+        self.index.retain(|e| !e.pages.contains(&page));
+        self.rebuild_registered();
+    }
+
+    /// Recompute the per-page registered flags from the surviving index
+    /// entries.
+    fn rebuild_registered(&mut self) {
+        for r in self.registered.iter_mut() {
+            *r = false;
+        }
+        for e in &self.index {
+            for &p in &e.pages {
+                self.registered[p] = true;
+            }
+        }
+    }
+
+    fn alloc_page(&mut self) -> usize {
+        let p = self
+            .free_pages
+            .pop()
+            .expect("page pool exhausted despite admission reservations");
+        debug_assert_eq!(self.ref_count[p], 0);
+        self.ref_count[p] = 1;
+        self.page_allocs += 1;
+        self.peak_live_pages = self.peak_live_pages.max(self.live_pages());
+        p
+    }
+
+    /// Make positions `[len, len + t_new)` of `lane` writable: allocate
+    /// missing pages, copy-on-write-split pages other lanes still read,
+    /// and retire stale prefix-index entries for exclusively held pages
+    /// about to be overwritten. Idempotent, so every layer's `append` of
+    /// one chunk can call it; only the first does real work.
+    fn ensure_writable(&mut self, lane: usize, t_new: usize) {
+        if t_new == 0 {
+            assert!(self.lanes[lane].is_some(), "append to a free lane");
+            return;
+        }
+        let mut ls = self.lanes[lane].take().expect("append to a free lane");
+        assert!(
+            ls.len + t_new <= self.capacity,
+            "KV lane overflow: {} + {t_new} > {}",
+            ls.len,
+            self.capacity
+        );
+        let first = ls.len / self.page_size;
+        let last = (ls.len + t_new - 1) / self.page_size;
+        for pi in first..=last {
+            if pi == ls.pages.len() {
+                ls.pages.push(self.alloc_page());
+                continue;
+            }
+            let p = ls.pages[pi];
+            if self.ref_count[p] > 1 {
+                // divergence mid-page: split before writing
+                let np = self.alloc_page();
+                let pe = self.page_elems();
+                self.k.copy_within(p * pe..(p + 1) * pe, np * pe);
+                self.v.copy_within(p * pe..(p + 1) * pe, np * pe);
+                self.ref_count[p] -= 1;
+                ls.pages[pi] = np;
+                self.cow_splits += 1;
+            } else if self.registered[p] {
+                // exclusive, but the index still advertises it: the write
+                // invalidates the chain for future adopters
+                self.retire_entries_containing(p);
+            }
+        }
+        self.lanes[lane] = Some(ls);
+    }
+
+    /// Write one layer's K/V rows for a new chunk at the lane's current
     /// length. `k_rows`/`v_rows` are `t_new * heads * head_dim` elements
     /// (one compacted-batch row of the kernel's `k_new`/`v_new` outputs).
     /// The length is *not* bumped — call [`Self::advance`] once after all
     /// layers appended.
-    pub fn append(&mut self, slot: usize, layer: usize, k_rows: &[f32], v_rows: &[f32]) {
-        assert!(self.in_use[slot], "append to a free slot");
+    pub fn append(&mut self, lane: usize, layer: usize, k_rows: &[f32], v_rows: &[f32]) {
         assert_eq!(k_rows.len(), v_rows.len());
         let re = self.row_elems();
         assert_eq!(k_rows.len() % re, 0, "append: ragged rows");
         let t_new = k_rows.len() / re;
-        let len = self.lens[slot];
-        assert!(
-            len + t_new <= self.capacity,
-            "KV slot overflow: {len} + {t_new} > {}",
-            self.capacity
-        );
-        let at = self.base(slot, layer) + len * re;
-        self.k[at..at + k_rows.len()].copy_from_slice(k_rows);
-        self.v[at..at + v_rows.len()].copy_from_slice(v_rows);
+        self.ensure_writable(lane, t_new);
+        let len = self.lane(lane).len;
+        for j in 0..t_new {
+            let pos = len + j;
+            let page = self.lane(lane).pages[pos / self.page_size];
+            let dst = self.at(page, layer, pos % self.page_size);
+            self.k[dst..dst + re].copy_from_slice(&k_rows[j * re..(j + 1) * re]);
+            self.v[dst..dst + re].copy_from_slice(&v_rows[j * re..(j + 1) * re]);
+        }
     }
 
-    /// Bump `slot`'s valid length by `t_new` after every layer appended
+    /// Bump `lane`'s valid length by `t_new` after every layer appended
     /// its rows for the chunk.
-    pub fn advance(&mut self, slot: usize, t_new: usize) {
-        assert!(self.lens[slot] + t_new <= self.capacity, "advance past capacity");
-        self.lens[slot] += t_new;
+    pub fn advance(&mut self, lane: usize, t_new: usize) {
+        let cap = self.capacity;
+        let ls = self.lanes[lane].as_mut().expect("advance on a free lane");
+        assert!(ls.len + t_new <= cap, "advance past capacity");
+        ls.len += t_new;
+        debug_assert!(ls.pages.len() * self.page_size >= ls.len);
     }
 
-    /// Materialize one layer's cached K/V for a compacted batch of slots:
-    /// `(k, v, lens)` with `lens[i]` the valid positions of `slots[i]`.
+    /// Register the whole-page prefixes of `lane`'s cached `tokens` in
+    /// the content-keyed index so later prompts sharing the prefix can
+    /// adopt the pages. Only *full* pages are registered (they are never
+    /// appended into again by their owner, so they are immutable until
+    /// retired); duplicate chains are kept once. One entry is stored per
+    /// prefix *length* — quadratic in a prompt's full pages, but that is
+    /// what lets a prompt shorter than a registered chain still adopt
+    /// its page-aligned prefix, and prompts are far smaller than the
+    /// window here (a single longest-chain entry with prefix matching
+    /// would be the scale-up representation).
+    pub fn register_prefix(&mut self, lane: usize, tokens: &[i32]) {
+        let ls = self.lane(lane);
+        let full = ls.len.min(tokens.len()) / self.page_size;
+        let pages: Vec<usize> = ls.pages.clone();
+        let hashes = page_prefix_hashes(&tokens[..full * self.page_size], self.page_size);
+        for m in 1..=full {
+            let chain = &tokens[..m * self.page_size];
+            let hash = hashes[m - 1];
+            if self
+                .index
+                .iter()
+                .any(|e| e.hash == hash && e.tokens == chain)
+            {
+                continue;
+            }
+            for &p in &pages[..m] {
+                self.registered[p] = true;
+            }
+            self.index.push(PrefixEntry {
+                hash,
+                tokens: chain.to_vec(),
+                pages: pages[..m].to_vec(),
+            });
+        }
+    }
+
+    /// Adopt the longest registered whole-page prefix of `tokens` into
+    /// the (empty) `lane`: the matching pages are referenced instead of
+    /// recomputed and the lane starts with that many positions already
+    /// cached. Returns the reused position count, capped at
+    /// `tokens.len() - 1` so the caller always runs at least the last
+    /// prompt position through the model (its logits produce the first
+    /// new token). A cap that lands mid-page leaves the last adopted page
+    /// shared-and-partial; the next append copy-on-write-splits it.
+    pub fn adopt_prefix(&mut self, lane: usize, tokens: &[i32]) -> usize {
+        {
+            let ls = self.lane(lane);
+            assert!(ls.len == 0 && ls.pages.is_empty(), "adopt into a used lane");
+        }
+        let max_reuse = tokens.len().saturating_sub(1);
+        if max_reuse == 0 {
+            return 0;
+        }
+        // hash the prompt's page-aligned prefixes once; entries' chains
+        // are always whole pages, so the table covers every candidate
+        let hashes = page_prefix_hashes(tokens, self.page_size);
+        let mut best: Option<usize> = None;
+        let mut best_len = 0;
+        for (i, e) in self.index.iter().enumerate() {
+            let m = e.tokens.len() / self.page_size;
+            if e.tokens.len() > best_len
+                && m >= 1
+                && m <= hashes.len()
+                && e.hash == hashes[m - 1]
+                && e.tokens == tokens[..e.tokens.len()]
+            {
+                best = Some(i);
+                best_len = e.tokens.len();
+            }
+        }
+        let Some(bi) = best else { return 0 };
+        let reuse = (self.index[bi].pages.len() * self.page_size).min(max_reuse);
+        let n_pages = reuse.div_ceil(self.page_size);
+        let pages: Vec<usize> = self.index[bi].pages[..n_pages].to_vec();
+        for &p in &pages {
+            self.ref_count[p] += 1;
+        }
+        let ls = self.lanes[lane].as_mut().unwrap();
+        ls.pages = pages;
+        ls.len = reuse;
+        self.prefix_hit_pages += n_pages as u64;
+        self.prefix_reused_positions += reuse as u64;
+        reuse
+    }
+
+    /// Materialize one layer's cached K/V for a compacted batch of lanes:
+    /// `(k, v, lens)` with `lens[i]` the valid positions of `lanes[i]`.
     ///
-    /// Only the *live prefix* is copied: `k`/`v` come back as
-    /// `(slots.len(), upto, heads, head_dim)` where `upto = max(lens) +
-    /// headroom`, clamped to the window capacity — a one-token decode step
-    /// passes `headroom = 1` and never pays for the dead tail of the
-    /// window (the `_decode` bases accept the shrunk time axis). Rows at
-    /// or beyond `lens[i]` are dead and must not be read.
+    /// Only live rows are walked out of the page tables: `k`/`v` come
+    /// back as `(lanes.len(), upto, heads, head_dim)` where `upto =
+    /// max(lens) + headroom`, clamped to the window capacity — a
+    /// one-token decode step passes `headroom = 1` and never pays for the
+    /// dead tail of the window (the `_decode` bases accept the shrunk
+    /// time axis). Rows at or beyond `lens[i]` are zero and must not be
+    /// read.
     pub fn gather(
         &self,
         layer: usize,
-        slots: &[usize],
+        lanes: &[usize],
         headroom: usize,
     ) -> (Tensor, Tensor, Vec<usize>) {
-        let b = slots.len();
-        let lens: Vec<usize> = slots
-            .iter()
-            .map(|&slot| {
-                assert!(self.in_use[slot], "gather from a free slot");
-                self.lens[slot]
-            })
-            .collect();
+        let b = lanes.len();
+        let lens: Vec<usize> = lanes.iter().map(|&lane| self.lane(lane).len).collect();
         let max_len = lens.iter().max().copied().unwrap_or(0);
         let upto = (max_len + headroom).clamp(1, self.capacity);
         let re = self.row_elems();
         let shape = [b, upto, self.heads, self.head_dim];
         let mut k = Tensor::zeros(&shape);
         let mut v = Tensor::zeros(&shape);
-        for (row, &slot) in slots.iter().enumerate() {
-            let at = self.base(slot, layer);
-            k.data[row * upto * re..(row + 1) * upto * re]
-                .copy_from_slice(&self.k[at..at + upto * re]);
-            v.data[row * upto * re..(row + 1) * upto * re]
-                .copy_from_slice(&self.v[at..at + upto * re]);
+        for (row, &lane) in lanes.iter().enumerate() {
+            let ls = self.lane(lane);
+            let live = ls.len.min(upto);
+            let mut pos = 0;
+            for &page in &ls.pages {
+                if pos >= live {
+                    break;
+                }
+                let n = self.page_size.min(live - pos);
+                let src = self.at(page, layer, 0);
+                let dst = (row * upto + pos) * re;
+                k.data[dst..dst + n * re].copy_from_slice(&self.k[src..src + n * re]);
+                v.data[dst..dst + n * re].copy_from_slice(&self.v[src..src + n * re]);
+                pos += n;
+            }
         }
         (k, v, lens)
     }
@@ -210,22 +618,22 @@ mod tests {
     use super::*;
 
     #[test]
-    fn alloc_free_reuses_slots() {
+    fn alloc_free_reuses_lanes() {
         let mut c = KvCache::new(2, 1, 4, 1, 2);
         let a = c.alloc().unwrap();
         let b = c.alloc().unwrap();
         assert_ne!(a, b);
-        assert!(c.alloc().is_none(), "pool exhausted");
+        assert!(c.alloc().is_none(), "lane pool exhausted");
         assert_eq!(c.in_use_count(), 2);
         c.free(a);
         let a2 = c.alloc().unwrap();
-        assert_eq!(a2, a, "freed slot is reused");
+        assert_eq!(a2, a, "freed lane is reused");
         assert_eq!(c.total_allocs(), 3);
     }
 
     #[test]
     fn append_advance_gather_round_trip() {
-        // 1 slot, 2 layers, capacity 3, 1 head of dim 2
+        // 1 lane, 2 layers, capacity 3, 1 head of dim 2
         let mut c = KvCache::new(1, 2, 3, 1, 2);
         let s = c.alloc().unwrap();
         // chunk of 2 positions: both layers append, then one advance
@@ -262,7 +670,7 @@ mod tests {
         c.advance(s0, 1);
         c.append(s1, 0, &[2.0], &[2.0]);
         c.advance(s1, 1);
-        // batch order is the caller's order, not slot order; rows are
+        // batch order is the caller's order, not lane order; rows are
         // (1 cached + 1 headroom) wide
         let (k, _, lens) = c.gather(0, &[s1, s0], 1);
         assert_eq!(k.shape, vec![2, 2, 1, 1]);
@@ -280,13 +688,183 @@ mod tests {
     }
 
     #[test]
-    fn freed_slot_restarts_at_zero() {
+    fn freed_lane_restarts_at_zero() {
         let mut c = KvCache::new(1, 1, 4, 1, 1);
         let s = c.alloc().unwrap();
         c.append(s, 0, &[1.0, 2.0], &[1.0, 2.0]);
         c.advance(s, 2);
+        assert!(c.live_pages() > 0);
         c.free(s);
+        assert_eq!(c.live_pages(), 0, "pages return to the pool");
         let s2 = c.alloc().unwrap();
-        assert_eq!(c.len(s2), 0, "reused slot starts empty");
+        assert_eq!(c.len(s2), 0, "reused lane starts empty");
+    }
+
+    #[test]
+    fn pages_span_page_boundaries() {
+        // page_size 2, so 5 positions need 3 pages
+        let mut c = KvCache::with_geometry(1, 1, 8, 1, 1, 2, 4);
+        let s = c.alloc_with_budget(5).unwrap();
+        c.append(s, 0, &[1.0, 2.0, 3.0], &[-1.0, -2.0, -3.0]);
+        c.advance(s, 3);
+        c.append(s, 0, &[4.0, 5.0], &[-4.0, -5.0]);
+        c.advance(s, 2);
+        assert_eq!(c.len(s), 5);
+        assert_eq!(c.live_pages(), 3);
+        let (k, v, lens) = c.gather(0, &[s], 0);
+        assert_eq!(lens, vec![5]);
+        assert_eq!(&k.data[..5], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(&v.data[..5], &[-1.0, -2.0, -3.0, -4.0, -5.0]);
+    }
+
+    #[test]
+    fn budget_backpressure_and_reservation_release() {
+        // pool of 4 pages, page_size 2: a 7-position budget takes all 4
+        let mut c = KvCache::with_geometry(3, 1, 8, 1, 1, 2, 4);
+        let a = c.alloc_with_budget(7).unwrap();
+        assert_eq!(c.reserved_page_count(), 4);
+        assert!(c.alloc_with_budget(1).is_none(), "pool fully reserved");
+        c.free(a);
+        assert_eq!(c.reserved_page_count(), 0);
+        let b = c.alloc_with_budget(2).unwrap();
+        let b2 = c.alloc_with_budget(2).unwrap();
+        assert_ne!(b, b2);
+        assert_eq!(c.reserved_page_count(), 2);
+    }
+
+    #[test]
+    fn prefix_adoption_shares_pages() {
+        // page_size 2: a 5-token prompt registers 2 full pages
+        let mut c = KvCache::with_geometry(2, 1, 8, 1, 1, 2, 8);
+        let toks = [10, 11, 12, 13, 14];
+        let a = c.alloc_with_budget(6).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        c.advance(a, 5);
+        c.register_prefix(a, &toks);
+        assert_eq!(c.index_entries(), 2, "chains of 1 and 2 full pages");
+        let live_before = c.live_pages();
+        // same prompt: adopt 4 positions (both full pages), recompute 1
+        let b = c.alloc_with_budget(6).unwrap();
+        let reused = c.adopt_prefix(b, &toks);
+        assert_eq!(reused, 4);
+        assert_eq!(c.len(b), 4);
+        assert_eq!(c.live_pages(), live_before, "no new pages for the prefix");
+        let (k, _, lens) = c.gather(0, &[b], 1);
+        assert_eq!(lens, vec![4]);
+        assert_eq!(&k.data[..4], &[1.0, 2.0, 3.0, 4.0]);
+        // a shorter prompt sharing one page adopts only that page
+        let longer = [10, 11, 99];
+        c.free(b);
+        let d = c.alloc_with_budget(6).unwrap();
+        assert_eq!(c.adopt_prefix(d, &longer), 2);
+        // a diverging prompt adopts nothing
+        c.free(d);
+        let e = c.alloc_with_budget(6).unwrap();
+        assert_eq!(c.adopt_prefix(e, &[7, 7, 7, 7, 7]), 0);
+    }
+
+    #[test]
+    fn divergence_mid_page_splits_copy_on_write() {
+        // page_size 4: an 8-token prompt registers 2 full pages; a second
+        // identical prompt adopts 7 positions (cap = len - 1), leaving
+        // page 1 shared-and-partial — its first append must CoW-split
+        let mut c = KvCache::with_geometry(2, 1, 16, 1, 1, 4, 8);
+        let toks = [1, 2, 3, 4, 5, 6, 7, 8];
+        let rows: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let a = c.alloc_with_budget(10).unwrap();
+        c.append(a, 0, &rows, &rows);
+        c.advance(a, 8);
+        c.register_prefix(a, &toks);
+        let b = c.alloc_with_budget(10).unwrap();
+        assert_eq!(c.adopt_prefix(b, &toks), 7);
+        assert_eq!(c.cow_splits(), 0);
+        // b recomputes position 7 and appends: page 1 is shared → split
+        c.append(b, 0, &[70.0], &[70.0]);
+        c.advance(b, 1);
+        assert_eq!(c.cow_splits(), 1, "shared partial page must split");
+        // a's view is untouched, b sees its own divergent row
+        let (ka, _, _) = c.gather(0, &[a], 0);
+        assert_eq!(ka.data[7], 7.0);
+        let (kb, _, _) = c.gather(0, &[b], 0);
+        assert_eq!(kb.data[7], 70.0);
+        assert_eq!(&kb.data[..7], &rows[..7], "CoW preserves the prefix");
+    }
+
+    #[test]
+    fn freeing_last_reader_retires_index_entries() {
+        let mut c = KvCache::with_geometry(2, 1, 8, 1, 1, 2, 8);
+        let toks = [5, 6, 7, 8];
+        let a = c.alloc_with_budget(4).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0]);
+        c.advance(a, 4);
+        c.register_prefix(a, &toks);
+        assert_eq!(c.index_entries(), 2);
+        let b = c.alloc_with_budget(4).unwrap();
+        assert_eq!(c.adopt_prefix(b, &toks), 3);
+        // owner finishes: pages survive via b's references
+        c.free(a);
+        assert!(c.index_entries() > 0, "entries live while a reader holds pages");
+        // last reader finishes: pages free, index retires
+        c.free(b);
+        assert_eq!(c.live_pages(), 0);
+        assert_eq!(c.index_entries(), 0, "freed pages retire their chains");
+        // a later identical prompt starts cold
+        let d = c.alloc_with_budget(4).unwrap();
+        assert_eq!(c.adopt_prefix(d, &toks), 0);
+    }
+
+    #[test]
+    fn write_into_exclusive_registered_page_retires_stale_chains() {
+        // adopter writes mid-page into a registered page it now holds
+        // exclusively (owner freed): the stale chain must retire so a
+        // future adopter cannot see the overwritten rows
+        let mut c = KvCache::with_geometry(3, 1, 8, 1, 1, 4, 8);
+        let toks = [1, 2, 3, 4];
+        let a = c.alloc_with_budget(5).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0]);
+        c.advance(a, 4);
+        c.register_prefix(a, &toks);
+        let b = c.alloc_with_budget(5).unwrap();
+        assert_eq!(c.adopt_prefix(b, &toks), 3);
+        c.free(a); // b is now the only holder of the registered page
+        c.append(b, 0, &[30.0], &[30.0]);
+        c.advance(b, 1);
+        assert_eq!(c.cow_splits(), 0, "exclusive page writes in place");
+        assert_eq!(c.index_entries(), 0, "stale chain retired before write");
+        let d = c.alloc_with_budget(5).unwrap();
+        assert_eq!(c.adopt_prefix(d, &toks), 0, "no adoption from retired chain");
+    }
+
+    #[test]
+    fn freed_pages_are_reused_lifo() {
+        let mut c = KvCache::with_geometry(2, 1, 4, 1, 1, 2, 4);
+        let a = c.alloc_with_budget(4).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0], &[0.0; 3]);
+        c.advance(a, 3);
+        assert_eq!(c.live_pages(), 2);
+        let peak = c.peak_live_bytes();
+        assert_eq!(peak, 2 * c.page_bytes());
+        c.free(a);
+        // the next lane gets the just-freed pages back (LIFO free list)
+        let b = c.alloc_with_budget(4).unwrap();
+        c.append(b, 0, &[9.0], &[9.0]);
+        c.advance(b, 1);
+        assert_eq!(c.live_pages(), 1);
+        assert_eq!(c.peak_live_bytes(), peak, "reuse does not grow the peak");
+        let (k, _, _) = c.gather(0, &[b], 0);
+        assert_eq!(k.data[0], 9.0);
+    }
+
+    #[test]
+    fn live_bytes_track_occupancy_not_capacity() {
+        let mut c = KvCache::new(2, 2, 64, 2, 4);
+        assert_eq!(c.live_bytes(), 0);
+        let s = c.alloc().unwrap();
+        let re = 2 * 4;
+        c.append(s, 0, &vec![1.0; re], &vec![1.0; re]);
+        c.append(s, 1, &vec![1.0; re], &vec![1.0; re]);
+        c.advance(s, 1);
+        assert_eq!(c.live_bytes(), c.page_bytes(), "one page for one position");
+        assert!(c.live_bytes() < c.bytes(), "occupancy below pool capacity");
     }
 }

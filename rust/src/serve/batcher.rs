@@ -122,6 +122,15 @@ impl Batcher {
         self.queue.pop_front().map(|q| (q.id, q.req, q.submitted))
     }
 
+    /// Look at the request `pop_ready` would return without dequeuing it
+    /// — the engine peeks first so admission that fails page-budget
+    /// reservation (pool backpressure) leaves the request queued, FIFO
+    /// position and deadline intact. Borrowed, not cloned: a
+    /// backpressured engine peeks the same head every step.
+    pub fn peek_ready(&self, _now: Instant) -> Option<(u64, &GenRequest, Instant)> {
+        self.queue.front().map(|q| (q.id, &q.req, q.submitted))
+    }
+
     /// Remove and return every queued request whose deadline elapsed
     /// before it was admitted.
     pub fn expire_overdue(&mut self, now: Instant) -> Vec<(u64, GenRequest)> {
@@ -255,5 +264,19 @@ mod tests {
         assert_eq!(b.pop_ready(now).unwrap().0, a);
         assert_eq!(b.pop_ready(now).unwrap().0, c);
         assert!(b.pop_ready(now).is_none());
+    }
+
+    #[test]
+    fn peek_ready_does_not_dequeue() {
+        let mut b = Batcher::new(2);
+        let a = b.submit(req(1));
+        let now = Instant::now();
+        // peeking twice sees the same head; the queue is untouched
+        assert_eq!(b.peek_ready(now).unwrap().0, a);
+        assert_eq!(b.peek_ready(now).unwrap().0, a);
+        assert_eq!(b.pending(), 1);
+        // pop returns exactly what peek advertised
+        assert_eq!(b.pop_ready(now).unwrap().0, a);
+        assert!(b.peek_ready(now).is_none());
     }
 }

@@ -1,19 +1,40 @@
-//! Continuous-batching serve engine with KV-cached incremental decode.
+//! Continuous-batching serve engine with paged, KV-cached incremental
+//! decode and batched prefill.
 //!
 //! A slot-based scheduler over the pipeline's `b_eval` lanes. Each lane
-//! owns one [`KvCache`] slot for the life of a request: admission prefills
-//! the prompt once (appending every layer's K/V), then each decode step
-//! runs the model over exactly *one new token per lane* against the cached
-//! K/V — per-token cost is flat in sequence position instead of growing
-//! with the window. Lanes are compacted out of the batch when they finish,
-//! their cache slot is freed for the next admission, and freed lanes are
-//! refilled from the queue on the next step — a request never waits for
-//! the rest of its batch to drain.
+//! binds to a lane of the paged [`KvCache`] for the life of a request:
+//! admission reserves the request's worst-case *page* budget (prompt +
+//! generation budget, in `--page-size` position pages) and backpressures
+//! on **pool exhaustion** rather than lane count — with a pool smaller
+//! than `lanes × window`, short requests still admit because pages, not
+//! whole windows, are the unit of accounting. The first decode step after
+//! admission prefills the prompt; subsequent steps run the model over
+//! exactly *one new token per lane* against the cached K/V, so per-token
+//! cost is flat in sequence position. Lanes are compacted out of the
+//! batch when they finish, their pages are released (shared pages when
+//! the last reader finishes), and freed lanes refill from the queue on
+//! the next step — a request never waits for the rest of its batch.
+//!
+//! **Batched prefill**: newly admitted lanes are prefilled together, not
+//! one `b=1` forward at a time — prompts are bucketed by the length still
+//! to compute and each bucket runs as one chunked `*_decode` forward (the
+//! decode kernels take per-lane past lengths, so lanes with different
+//! amounts of adopted prefix batch together as long as their new chunks
+//! are the same length).
+//!
+//! **Shared-prefix reuse**: before prefilling, each lane adopts the
+//! longest registered whole-page token prefix of its prompt from the
+//! cache's content-keyed index ([`KvCache::adopt_prefix`]) — positions
+//! covered by adopted pages skip the forward entirely, and after prefill
+//! the lane registers its own full prompt pages for later requests.
+//! Identical system prompts are therefore cached once, not once per lane,
+//! and the metrics' `prefix_hit_rate` reports the fraction of prompt
+//! positions served from shared pages.
 //!
 //! `EngineCfg::use_kv_cache = false` selects the legacy full-window step
 //! (re-running the entire padded window every token); both paths produce
-//! token-identical output for the dense and PTQ1.61-fused models, which
-//! `benches/bench_serve.rs` and `tests/kv_decode.rs` gate on.
+//! token-identical output for the dense, PTQ1.61-fused and packed models,
+//! which `benches/bench_serve.rs` and `tests/paged_kv.rs` gate on.
 //!
 //! The weight representation is the [`ModelEval`] handed to
 //! [`Engine::new`] — for PTQ1.61 the production choice is
@@ -22,8 +43,8 @@
 //! containers directly instead of reconstructing dense weights
 //! (`tests/packed_serve.rs` gates the token identity and the
 //! zero-reconstruction invariant). `EngineCfg::backend` records the
-//! choice and the run's metrics carry the resident-memory split (KV cache
-//! bytes, packed-model bytes, effective bits/weight).
+//! choice and the run's metrics carry the resident-memory split (KV
+//! reserved/live bytes, packed-model bytes, effective bits/weight).
 //!
 //! [`Engine::run_drain`] is the classic static-batching baseline for
 //! comparison: it admits whole batches and only takes the next batch when
@@ -32,6 +53,7 @@
 //! compacted active lanes; the fixed-width padding cost model only exists
 //! on the full-window path.)
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -43,6 +65,8 @@ use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::runtime::kv::KvCache;
+
+pub use crate::runtime::kv::DEFAULT_PAGE_SIZE;
 
 /// Engine tunables.
 #[derive(Debug, Clone)]
@@ -67,7 +91,7 @@ impl Default for EngineCfg {
 }
 
 /// One in-flight request bound to a lane (and, when the KV cache is on,
-/// to a cache slot from admission prefill until finish).
+/// to a cache lane from admission until finish).
 #[derive(Debug, Clone)]
 struct Lane {
     id: u64,
@@ -76,8 +100,10 @@ struct Lane {
     max_new: usize,
     submitted: Instant,
     admitted: Instant,
-    /// KV-cache slot; `None` until the lane's first (prefill) step
+    /// paged-cache lane, reserved at admission (KV path only)
     slot: Option<usize>,
+    /// prompt has been prefilled (first token emitted)
+    prefilled: bool,
 }
 
 /// Continuous-batching decode loop over the lane pool (see module docs).
@@ -91,41 +117,70 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    /// An engine over `pipe.cfg.b_eval` lanes with a KV cache slot per
-    /// lane, decoding `model`.
+    /// An engine over `pipe.cfg.b_eval` lanes with a fully provisioned
+    /// page pool (one window per lane, [`DEFAULT_PAGE_SIZE`] positions
+    /// per page), decoding `model`.
     pub fn new(pipe: &'a Pipeline<'a>, model: &'a ModelEval<'a>) -> Engine<'a> {
+        Self::with_cache_geometry(pipe, model, DEFAULT_PAGE_SIZE, None)
+    }
+
+    /// An engine with explicit cache geometry: `page_size` positions per
+    /// page and `kv_pages` pool pages (`None` = one full window per
+    /// lane). The pool is floored at one full window so a maximal
+    /// request stays admissible; an undersized pool trades concurrency
+    /// for memory and surfaces as admission backpressure in the metrics.
+    pub fn with_cache_geometry(
+        pipe: &'a Pipeline<'a>,
+        model: &'a ModelEval<'a>,
+        page_size: usize,
+        kv_pages: Option<usize>,
+    ) -> Engine<'a> {
         let cfg = &pipe.cfg;
+        let ps = page_size.clamp(1, cfg.seq);
+        let per_lane = cfg.seq.div_ceil(ps);
+        let pages = kv_pages.unwrap_or(cfg.b_eval * per_lane).max(per_lane);
         let lanes = (0..cfg.b_eval).map(|_| None).collect();
-        let cache = KvCache::new(
+        let cache = KvCache::with_geometry(
             cfg.b_eval,
             cfg.n_layers,
             cfg.seq,
             cfg.n_heads,
             cfg.d / cfg.n_heads,
+            ps,
+            pages,
         );
         let cfg = EngineCfg { backend: model.label(), ..EngineCfg::default() };
         Engine { pipe, model, cfg, lanes, cache }
     }
 
-    /// Record the run's resident-memory accounting (KV cache bytes,
-    /// packed-model bytes + effective bits/weight, backend label) into
-    /// the metrics registry. Called at the top of every run loop.
+    /// Record the run's resident-memory accounting (KV reserved/live
+    /// bytes and paging stats, packed-model bytes + effective
+    /// bits/weight, backend label) into the metrics registry. Called at
+    /// the top of every run loop and again after it drains, so the JSON
+    /// carries the final live high-water mark and CoW count.
     fn export_memory(&self, metrics: &mut MetricsRegistry) {
         metrics.set_backend(self.cfg.backend);
         if self.cfg.use_kv_cache {
-            metrics.set_kv_cache_bytes(self.cache.bytes());
+            metrics.set_kv_paging(
+                self.cache.bytes(),
+                self.cache.peak_live_bytes(),
+                self.cache.page_size(),
+                self.cache.total_pages(),
+                self.cache.cow_splits(),
+                self.cache.page_alloc_count(),
+            );
         }
         if let Some(pm) = self.model.packed() {
             metrics.set_packed_model(pm.resident_bytes(), pm.effective_bits());
         }
     }
 
-    /// Number of lanes (== max concurrent requests == KV cache slots).
+    /// Number of lanes (== max concurrent requests).
     pub fn capacity(&self) -> usize {
         self.lanes.len()
     }
 
-    /// The engine's KV cache (slot occupancy / reuse accounting).
+    /// The engine's paged KV cache (occupancy / sharing accounting).
     pub fn kv_cache(&self) -> &KvCache {
         &self.cache
     }
@@ -144,6 +199,19 @@ impl<'a> Engine<'a> {
             .unwrap()
     }
 
+    /// The tokenized shape of a request: `(prompt_len, max_new)` after
+    /// window truncation and empty-prompt seeding. Shared by admission's
+    /// page-budget reservation and [`Self::make_lane`] so the reserved
+    /// budget always matches the lane that decodes against it.
+    fn lane_shape(&self, req: &GenRequest) -> (usize, usize) {
+        let t = self.pipe.cfg.seq;
+        // the byte tokenizer is one token per byte; empty prompts are
+        // seeded with a single space, long ones truncate to the window
+        let prompt_len = req.prompt.len().clamp(1, t - 1);
+        let max_new = req.max_new_tokens.min(t - prompt_len);
+        (prompt_len, max_new)
+    }
+
     fn make_lane(
         &self,
         id: u64,
@@ -158,9 +226,22 @@ impl<'a> Engine<'a> {
         if seq.is_empty() {
             seq.push(b' ' as i32);
         }
-        let prompt_len = seq.len();
-        let max_new = req.max_new_tokens.min(t - prompt_len);
-        Lane { id, seq, prompt_len, max_new, submitted, admitted, slot: None }
+        let (prompt_len, max_new) = self.lane_shape(req);
+        assert_eq!(
+            prompt_len,
+            seq.len(),
+            "lane_shape must match the tokenized prompt"
+        );
+        Lane {
+            id,
+            seq,
+            prompt_len,
+            max_new,
+            submitted,
+            admitted,
+            slot: None,
+            prefilled: false,
+        }
     }
 
     fn finish(
@@ -192,8 +273,8 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Take lane `li` out of the pool, release its cache slot, and emit
-    /// the response (recording the slot's cached-position high-water mark
+    /// Take lane `li` out of the pool, release its cache pages, and emit
+    /// the response (recording the lane's cached-position high-water mark
     /// before the free resets it).
     fn finish_lane(
         &mut self,
@@ -213,7 +294,10 @@ impl<'a> Engine<'a> {
 
     /// Admit queued requests into free lanes (continuous mode). Requests
     /// whose deadline lapsed in the queue are dropped; zero-token requests
-    /// complete immediately without occupying a lane.
+    /// complete immediately without occupying a lane. On the KV path each
+    /// admission reserves the request's worst-case page budget — when the
+    /// pool cannot cover it, admission stops (backpressure) and the
+    /// request stays queued until finishing lanes release pages.
     fn admit(
         &mut self,
         batcher: &mut Batcher,
@@ -224,15 +308,33 @@ impl<'a> Engine<'a> {
         metrics.record_expired(batcher.expire_overdue(now).len());
         for i in 0..self.lanes.len() {
             while self.lanes[i].is_none() {
-                let Some((id, req, submitted)) = batcher.pop_ready(now) else {
+                // peek first (borrowed, no clone): the page budget comes
+                // from `lane_shape` without tokenizing, so a rejected
+                // admission leaves the request queued at zero cost
+                let Some((_, peeked, _)) = batcher.peek_ready(now) else {
                     return;
                 };
-                let lane = self.make_lane(id, &req, submitted, now);
+                let (prompt_len, max_new) = self.lane_shape(peeked);
+                let mut slot = None;
+                if max_new > 0 && self.cfg.use_kv_cache {
+                    match self.cache.alloc_with_budget(prompt_len + max_new) {
+                        Some(s) => slot = Some(s),
+                        None => {
+                            // pool exhausted: leave the request queued
+                            metrics.record_backpressure();
+                            return;
+                        }
+                    }
+                }
+                let (id, req, submitted) =
+                    batcher.pop_ready(now).expect("peeked head vanished");
+                let mut lane = self.make_lane(id, &req, submitted, now);
                 if lane.max_new == 0 {
                     out.push(Self::finish(lane, 0, now, metrics));
-                } else {
-                    self.lanes[i] = Some(lane);
+                    continue;
                 }
+                lane.slot = slot;
+                self.lanes[i] = Some(lane);
             }
         }
     }
@@ -300,12 +402,14 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
-    /// One KV-cached decode step. Newly admitted lanes are prefilled
-    /// (whole prompt through the model, K/V appended per layer, first new
-    /// token from the last prompt position); lanes already holding a slot
-    /// decode their single newest token as one compacted batch. Either
-    /// way every active lane yields exactly one token per step, matching
-    /// the full-window step's accounting.
+    /// One KV-cached decode step. Newly admitted lanes adopt any shared
+    /// whole-page prompt prefix from the cache's index, then prefill in
+    /// *batched* buckets — lanes whose remaining (post-adoption) chunks
+    /// are the same length run as one chunked forward instead of one
+    /// `b=1` forward each. Lanes already prefilled decode their single
+    /// newest token as one compacted batch. Either way every active lane
+    /// yields exactly one token per step, matching the full-window step's
+    /// accounting.
     fn decode_step_cached(
         &mut self,
         metrics: &mut MetricsRegistry,
@@ -320,28 +424,50 @@ impl<'a> Engine<'a> {
         let n_active = active.len();
         let (pipe, model) = (self.pipe, self.model);
         let step_started = Instant::now();
-        let mut decoding: Vec<usize> = Vec::with_capacity(n_active);
+        let decoding: Vec<usize> = active
+            .iter()
+            .copied()
+            .filter(|&li| self.lanes[li].as_ref().unwrap().prefilled)
+            .collect();
+        // batched prefill: adopt shared prefixes, then bucket the lanes
+        // by remaining chunk length (BTreeMap for deterministic order)
+        let mut buckets: BTreeMap<usize, Vec<(usize, Vec<i32>)>> = BTreeMap::new();
         for &li in &active {
-            if self.lanes[li].as_ref().unwrap().slot.is_some() {
-                decoding.push(li);
+            if self.lanes[li].as_ref().unwrap().prefilled {
                 continue;
             }
-            // prefill: prompts have per-request lengths, so each runs as
-            // its own b=1 chunk (batched prefill is a ROADMAP item)
-            let slot = self
-                .cache
-                .alloc()
-                .expect("engine invariant: one cache slot per lane");
-            let prompt = {
-                let lane = self.lanes[li].as_mut().unwrap();
-                lane.slot = Some(slot);
-                lane.seq.clone()
+            let (slot, prompt) = {
+                let lane = self.lanes[li].as_ref().unwrap();
+                (lane.slot.expect("cached lane without a slot"), lane.seq.clone())
             };
-            let h = model.forward_h_incremental(pipe, &mut self.cache, &[slot], &prompt)?;
+            let reused = self.cache.adopt_prefix(slot, &prompt);
+            metrics.record_prefill(prompt.len(), reused);
+            let suffix = prompt[reused..].to_vec();
+            buckets.entry(suffix.len()).or_default().push((li, suffix));
+        }
+        for (&t_new, group) in &buckets {
+            let slots: Vec<usize> = group
+                .iter()
+                .map(|(li, _)| self.lanes[*li].as_ref().unwrap().slot.unwrap())
+                .collect();
+            let tokens: Vec<i32> =
+                group.iter().flat_map(|(_, s)| s.iter().copied()).collect();
+            let h = model.forward_h_incremental(pipe, &mut self.cache, &slots, &tokens)?;
             let logits = pipe.head_decode(model.params(), &h)?;
-            let base = (prompt.len() - 1) * vocab;
-            let next = Self::argmax(&logits.data[base..base + vocab]);
-            self.lanes[li].as_mut().unwrap().seq.push(next);
+            for (row, (li, _)) in group.iter().enumerate() {
+                let base = (row * t_new + (t_new - 1)) * vocab;
+                let next = Self::argmax(&logits.data[base..base + vocab]);
+                let lane = self.lanes[*li].as_mut().unwrap();
+                lane.seq.push(next);
+                lane.prefilled = true;
+            }
+            // register after the forward so the pages hold the prompt K/V
+            for (li, _) in group {
+                let lane = self.lanes[*li].as_ref().unwrap();
+                let (slot, plen) = (lane.slot.unwrap(), lane.prompt_len);
+                let prompt = lane.seq[..plen].to_vec();
+                self.cache.register_prefix(slot, &prompt);
+            }
         }
         if !decoding.is_empty() {
             let slots: Vec<usize> = decoding
@@ -385,9 +511,10 @@ impl<'a> Engine<'a> {
     }
 
     /// How long to sleep when requests are queued but none is admissible
-    /// (a deadline/max-wait-gated batcher): bounded by the batcher's own
-    /// cut interval so a ready batch is picked up promptly, floored so an
-    /// aggressive `max_wait` cannot turn the wait back into a hot spin.
+    /// (page-pool backpressure with idle lanes, or a deadline/max-wait
+    /// gated batcher): bounded by the batcher's own cut interval so a
+    /// ready batch is picked up promptly, floored so an aggressive
+    /// `max_wait` cannot turn the wait back into a hot spin.
     fn idle_backoff(batcher: &Batcher) -> Duration {
         batcher
             .max_wait
@@ -410,16 +537,15 @@ impl<'a> Engine<'a> {
                 if batcher.pending() == 0 {
                     break;
                 }
-                // defensive: today's FIFO `pop_ready` always admits, so
-                // pending>0 with idle lanes is unreachable — but if
-                // admission ever becomes time-gated (max-wait/deadline
-                // batch cuts), back off instead of burning the remaining
-                // max_steps budget in a hot spin
+                // reachable only if admission is gated with every lane
+                // idle — an empty pool always covers one full window, so
+                // back off briefly rather than burning the step budget
                 std::thread::sleep(Self::idle_backoff(batcher));
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
         }
+        self.export_memory(metrics);
         Ok(out)
     }
 
@@ -428,7 +554,7 @@ impl<'a> Engine<'a> {
     /// through the same deadline-aware `admit` as continuous mode (called
     /// only when every lane is free, which is exactly batch admission), so
     /// oversized queues and lapsed deadlines are handled per batch, not
-    /// just once up front. Cache slots release at each lane's finish and
+    /// just once up front. Cache pages release at each lane's finish and
     /// are reused by the next batch.
     pub fn run_drain(
         &mut self,
@@ -448,6 +574,7 @@ impl<'a> Engine<'a> {
                 total_steps += 1;
             }
         }
+        self.export_memory(metrics);
         Ok(out)
     }
 

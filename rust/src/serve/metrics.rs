@@ -68,8 +68,28 @@ pub struct MetricsRegistry {
     pub step_ms: Vec<f64>,
     /// weight representation the engine decoded from (dense/fused/packed)
     pub backend: Option<String>,
-    /// resident bytes of the engine's KV cache (capacity, not fill)
-    pub kv_cache_bytes: Option<usize>,
+    /// resident bytes of the engine's KV page pool (capacity, not fill)
+    pub kv_reserved_bytes: Option<usize>,
+    /// high-water bytes of pages actually referenced (shared pages once)
+    pub kv_live_bytes: Option<usize>,
+    /// positions per KV page
+    pub kv_page_size: Option<usize>,
+    /// pages in the KV pool
+    pub kv_pages_total: Option<usize>,
+    /// copy-on-write page splits performed by the cache
+    pub kv_cow_splits: Option<u64>,
+    /// physical pages allocated over the cache's lifetime (fresh + CoW
+    /// copies; adopted shared pages are *not* allocated, so for a fixed
+    /// workload this drops when prefix sharing works)
+    pub kv_page_allocs: Option<u64>,
+    /// prompt positions prefilled (adopted + computed)
+    pub prefill_positions: usize,
+    /// prompt positions satisfied by shared-prefix page adoption
+    pub prefix_reused_positions: usize,
+    /// admission attempts deferred because the page pool could not cover
+    /// the queue head's reservation (one per engine step spent waiting,
+    /// so the count also measures how long backpressure lasted)
+    pub kv_backpressure_events: usize,
     /// resident bytes of the prepared packed model (packed backend only)
     pub packed_model_bytes: Option<usize>,
     /// measured effective bits/weight of the packed containers
@@ -92,7 +112,15 @@ impl MetricsRegistry {
             expired: 0,
             step_ms: Vec::new(),
             backend: None,
-            kv_cache_bytes: None,
+            kv_reserved_bytes: None,
+            kv_live_bytes: None,
+            kv_page_size: None,
+            kv_pages_total: None,
+            kv_cow_splits: None,
+            kv_page_allocs: None,
+            prefill_positions: 0,
+            prefix_reused_positions: 0,
+            kv_backpressure_events: 0,
             packed_model_bytes: None,
             packed_bits_per_weight: None,
         }
@@ -103,9 +131,48 @@ impl MetricsRegistry {
         self.backend = Some(backend.to_string());
     }
 
-    /// Record the KV cache's resident capacity bytes.
-    pub fn set_kv_cache_bytes(&mut self, bytes: usize) {
-        self.kv_cache_bytes = Some(bytes);
+    /// Record the paged KV cache's memory split: `reserved` is the page
+    /// pool's resident capacity, `live` the high-water bytes of pages
+    /// actually referenced (shared pages counted once), plus the paging
+    /// geometry, copy-on-write split count, and lifetime page-allocation
+    /// count (the sharing-sensitive metric: adopted pages are referenced,
+    /// never allocated).
+    pub fn set_kv_paging(
+        &mut self,
+        reserved: usize,
+        live: usize,
+        page_size: usize,
+        pages_total: usize,
+        cow_splits: u64,
+        page_allocs: u64,
+    ) {
+        self.kv_reserved_bytes = Some(reserved);
+        self.kv_live_bytes = Some(live);
+        self.kv_page_size = Some(page_size);
+        self.kv_pages_total = Some(pages_total);
+        self.kv_cow_splits = Some(cow_splits);
+        self.kv_page_allocs = Some(page_allocs);
+    }
+
+    /// Record one lane's prefill: `total` prompt positions, of which
+    /// `reused` were satisfied by shared-prefix page adoption.
+    pub fn record_prefill(&mut self, total: usize, reused: usize) {
+        self.prefill_positions += total;
+        self.prefix_reused_positions += reused;
+    }
+
+    /// Count one admission deferred by page-pool backpressure.
+    pub fn record_backpressure(&mut self) {
+        self.kv_backpressure_events += 1;
+    }
+
+    /// Fraction of prompt positions served from shared prefix pages
+    /// instead of the prefill forward (0 when nothing prefilled).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefill_positions == 0 {
+            return 0.0;
+        }
+        self.prefix_reused_positions as f64 / self.prefill_positions as f64
     }
 
     /// Record the packed model's resident bytes and measured effective
@@ -241,12 +308,37 @@ impl MetricsRegistry {
             ("mean_queue_ms", num(self.mean_queue_ms())),
             ("mean_decode_ms", num(self.mean_decode_ms())),
             ("peak_cached_positions", num(self.peak_cached_positions() as f64)),
+            ("prefill_positions", num(self.prefill_positions as f64)),
+            (
+                "prefix_reused_positions",
+                num(self.prefix_reused_positions as f64),
+            ),
+            ("prefix_hit_rate", num(self.prefix_hit_rate())),
+            (
+                "kv_backpressure_events",
+                num(self.kv_backpressure_events as f64),
+            ),
         ];
         if let Some(b) = &self.backend {
             fields.push(("backend", s(b)));
         }
-        if let Some(n) = self.kv_cache_bytes {
-            fields.push(("kv_cache_bytes", num(n as f64)));
+        if let Some(n) = self.kv_reserved_bytes {
+            fields.push(("kv_reserved_bytes", num(n as f64)));
+        }
+        if let Some(n) = self.kv_live_bytes {
+            fields.push(("kv_live_bytes", num(n as f64)));
+        }
+        if let Some(n) = self.kv_page_size {
+            fields.push(("kv_page_size", num(n as f64)));
+        }
+        if let Some(n) = self.kv_pages_total {
+            fields.push(("kv_pages_total", num(n as f64)));
+        }
+        if let Some(n) = self.kv_cow_splits {
+            fields.push(("kv_cow_splits", num(n as f64)));
+        }
+        if let Some(n) = self.kv_page_allocs {
+            fields.push(("kv_page_allocs", num(n as f64)));
         }
         if let Some(n) = self.packed_model_bytes {
             fields.push(("packed_model_bytes", num(n as f64)));
@@ -355,14 +447,22 @@ mod tests {
     fn memory_accounting_round_trips_through_json() {
         let mut m = MetricsRegistry::new("mem");
         m.set_backend("packed");
-        m.set_kv_cache_bytes(1024);
+        m.set_kv_paging(4096, 512, 16, 8, 3, 6);
         m.set_packed_model(4096, 1.61);
         let back = Json::parse(&m.snapshot().dump()).unwrap();
         assert_eq!(back.get("backend").and_then(Json::as_str), Some("packed"));
         assert_eq!(
-            back.get("kv_cache_bytes").and_then(Json::as_usize),
-            Some(1024)
+            back.get("kv_reserved_bytes").and_then(Json::as_usize),
+            Some(4096)
         );
+        assert_eq!(
+            back.get("kv_live_bytes").and_then(Json::as_usize),
+            Some(512)
+        );
+        assert_eq!(back.get("kv_page_size").and_then(Json::as_usize), Some(16));
+        assert_eq!(back.get("kv_pages_total").and_then(Json::as_usize), Some(8));
+        assert_eq!(back.get("kv_cow_splits").and_then(Json::as_usize), Some(3));
+        assert_eq!(back.get("kv_page_allocs").and_then(Json::as_usize), Some(6));
         assert_eq!(
             back.get("packed_model_bytes").and_then(Json::as_usize),
             Some(4096)
@@ -375,7 +475,31 @@ mod tests {
         // absent until the engine records them
         let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
         assert!(empty.get("backend").is_none());
+        assert!(empty.get("kv_reserved_bytes").is_none());
         assert!(empty.get("packed_model_bytes").is_none());
+    }
+
+    #[test]
+    fn prefix_hit_rate_accounting() {
+        let mut m = MetricsRegistry::new("prefix");
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no prefill yet");
+        m.record_prefill(16, 0);
+        m.record_prefill(16, 12);
+        m.record_backpressure();
+        assert_eq!(m.prefill_positions, 32);
+        assert_eq!(m.prefix_reused_positions, 12);
+        assert!((m.prefix_hit_rate() - 12.0 / 32.0).abs() < 1e-12);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(
+            back.get("prefix_reused_positions").and_then(Json::as_usize),
+            Some(12)
+        );
+        assert_eq!(
+            back.get("kv_backpressure_events").and_then(Json::as_usize),
+            Some(1)
+        );
+        let rate = back.get("prefix_hit_rate").and_then(Json::as_f64).unwrap();
+        assert!((rate - 0.375).abs() < 1e-9);
     }
 
     #[test]

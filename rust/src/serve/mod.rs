@@ -1,17 +1,22 @@
 //! Serving layer: continuous-batching generation over the eval pipeline.
 //!
 //! * [`batcher`] — admission queue (FIFO, max-wait cut, deadlines)
-//! * [`engine`] — slot-based continuous-batching decode loop with
-//!   KV-cached incremental decode (plus the full-window and drain/static
-//!   baselines it is benchmarked against)
+//! * [`engine`] — slot-based continuous-batching decode loop with paged
+//!   KV-cached incremental decode and batched prefill (plus the
+//!   full-window and drain/static baselines it is benchmarked against)
 //! * [`metrics`] — per-request latency split, percentiles, lane occupancy,
-//!   per-step wall times, JSON export into `runs_dir()`
+//!   per-step wall times, paged-cache memory/sharing accounting, JSON
+//!   export into `runs_dir()`
 //!
-//! Each lane owns a slot in the engine's [`crate::runtime::kv::KvCache`]:
-//! prompts are prefilled once on admission and every subsequent step
-//! decodes one new token per lane against cached K/V, so per-token cost
-//! is flat in sequence position (see `ARCHITECTURE.md` for the request
-//! data flow). For PTQ1.61 the production backend is
+//! Each lane binds to a lane of the engine's paged
+//! [`crate::runtime::kv::KvCache`]: admission reserves the request's
+//! worst-case *page* budget (backpressuring on pool exhaustion, not lane
+//! count), prompts are prefilled in batched same-length buckets — with
+//! positions covered by a shared whole-page prompt prefix adopted from
+//! the cache's content-keyed index instead of recomputed — and every
+//! subsequent step decodes one new token per lane against cached K/V, so
+//! per-token cost is flat in sequence position (see `ARCHITECTURE.md`
+//! for the request data flow). For PTQ1.61 the production backend is
 //! `ModelEval::Packed`: weights stay resident in the prepared 1.61-bit
 //! containers (`crate::quant::ptq161::packed`) and every decode step
 //! contracts them directly — no dense-weight reconstruction. At this

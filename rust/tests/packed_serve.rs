@@ -15,7 +15,8 @@ use ptq161::model::{Params, LINEARS};
 use ptq161::quant::ptq161::{initial_parts, PackedLinear, PackedModel};
 use ptq161::quant::Ptq161Parts;
 use ptq161::runtime::autodiff::{
-    packed_qlinear_fwd, qlinear_fwd, qlinear_weight_reconstructions,
+    packed_qlinear_fwd, packed_qlinear_fwd_scalar, qlinear_fwd,
+    qlinear_weight_reconstructions,
 };
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::Batcher;
@@ -133,6 +134,35 @@ fn packed_matvec_matches_fused_qlinear() {
 }
 
 #[test]
+fn blocked_matvec_bit_identical_to_scalar_kernel() {
+    // the 4-row-tiled whole-word kernel must reproduce the scalar set-bit
+    // walk bit-for-bit — same ascending accumulation order per row, and
+    // the masked adds of the tile pass are exact no-ops for unset bits.
+    // Odd row counts exercise the scalar remainder tail.
+    let mut rng = Rng::new(68);
+    for (out, inn) in [(24usize, 40usize), (27, 70), (3, 129), (65, 64)] {
+        let w = Tensor::randn(&[out, inn], 0.2, &mut rng);
+        let mask: Vec<bool> = (0..inn).map(|j| j % 5 == 0).collect();
+        let mut parts = initial_parts(&w, &mask);
+        for v in parts.alpha_r2.iter_mut() {
+            *v = 1.0 + 0.1 * rng.normal();
+        }
+        for v in parts.mu.iter_mut() {
+            *v = 0.05 * rng.normal();
+        }
+        let pl = PackedLinear::pack(&parts);
+        let x = Tensor::randn(&[2, 3, inn], 1.0, &mut rng);
+        let blocked = packed_qlinear_fwd(&x, &pl);
+        let scalar = packed_qlinear_fwd_scalar(&x, &pl);
+        assert_eq!(blocked.shape, scalar.shape);
+        assert_eq!(
+            blocked.data, scalar.data,
+            "blocked kernel deviates from scalar at ({out},{inn})"
+        );
+    }
+}
+
+#[test]
 fn packed_engine_token_identical_with_zero_reconstructions() {
     let _g = QLINEAR_LOCK.lock().unwrap();
     let rt = Runtime::native();
@@ -181,9 +211,18 @@ fn packed_engine_exports_memory_accounting() {
     assert_eq!(engine.cfg.backend, "packed");
     let resps = engine.run(&mut batcher, &mut metrics).unwrap();
     assert_eq!(resps.len(), lens.len());
-    // engine-recorded memory split: KV cache + packed containers
+    // engine-recorded memory split: KV page pool + packed containers
     assert_eq!(metrics.backend.as_deref(), Some("packed"));
-    assert_eq!(metrics.kv_cache_bytes, Some(engine.kv_cache().bytes()));
+    assert_eq!(metrics.kv_reserved_bytes, Some(engine.kv_cache().bytes()));
+    assert_eq!(
+        metrics.kv_live_bytes,
+        Some(engine.kv_cache().peak_live_bytes())
+    );
+    let live = metrics.kv_live_bytes.unwrap();
+    assert!(
+        live > 0 && live < metrics.kv_reserved_bytes.unwrap(),
+        "live occupancy {live} must undershoot the reserved pool"
+    );
     assert_eq!(
         metrics.packed_model_bytes,
         Some(packed.resident_bytes())
