@@ -1,0 +1,109 @@
+"""Unit tests for the bench-regression gate (python/tools/check_bench.py).
+
+The gate has no third-party deps, so these always run.  The headline
+case mirrors the acceptance criterion: a deliberate 2x slowdown of the
+packed decode path (doubling packed_fused_step_ratio) must fail the
+gate, while runner-bound scaling shortfalls on small hosts must not.
+"""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+_TOOL = pathlib.Path(__file__).resolve().parents[1] / "tools" / "check_bench.py"
+_spec = importlib.util.spec_from_file_location("check_bench", _TOOL)
+check_bench = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_bench)
+
+
+BASELINE = {
+    "bench": "bench_serve",
+    "packed_fused_step_ratio": 1.0,
+    "prefix_hit_rate": 0.45,
+    "worker_scaling": {"factor_w4_over_w1": 1.7, "parallelism": 4},
+}
+
+
+def fresh_like_baseline():
+    return copy.deepcopy(BASELINE)
+
+
+def test_identical_run_passes():
+    assert check_bench.run_check(BASELINE, fresh_like_baseline()) == []
+
+
+def test_small_drift_within_tolerance_passes():
+    fresh = fresh_like_baseline()
+    fresh["packed_fused_step_ratio"] = 1.1  # +10% < 20% band
+    fresh["prefix_hit_rate"] = 0.40
+    fresh["worker_scaling"]["factor_w4_over_w1"] = 1.5
+    assert check_bench.run_check(BASELINE, fresh) == []
+
+
+def test_doubled_packed_step_ratio_fails():
+    # the acceptance scenario: packed_qlinear_fwd made 2x slower doubles
+    # the packed/fused step ratio and must trip the gate
+    fresh = fresh_like_baseline()
+    fresh["packed_fused_step_ratio"] = 2.0
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "packed_fused_step_ratio" in failures[0]
+
+
+def test_prefix_hit_rate_collapse_fails():
+    fresh = fresh_like_baseline()
+    fresh["prefix_hit_rate"] = 0.1
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "prefix_hit_rate" in failures[0]
+
+
+def test_scaling_regression_fails_on_big_host():
+    fresh = fresh_like_baseline()
+    fresh["worker_scaling"] = {"factor_w4_over_w1": 1.0, "parallelism": 4}
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "factor_w4_over_w1" in failures[0]
+
+
+def test_scaling_skipped_below_min_parallelism():
+    # a 2-core runner cannot scale 4 workers; that is hardware, not a
+    # regression — the scaling check is skipped, others still apply
+    fresh = fresh_like_baseline()
+    fresh["worker_scaling"] = {"factor_w4_over_w1": 0.9, "parallelism": 2}
+    assert check_bench.run_check(BASELINE, fresh) == []
+    fresh["packed_fused_step_ratio"] = 3.0
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "packed_fused_step_ratio" in failures[0]
+
+
+def test_missing_key_fails():
+    fresh = fresh_like_baseline()
+    del fresh["packed_fused_step_ratio"]
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert any("missing from fresh" in f for f in failures)
+
+
+def test_main_exit_codes(tmp_path):
+    base_p = tmp_path / "base.json"
+    fresh_p = tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(BASELINE))
+    fresh_p.write_text(json.dumps(fresh_like_baseline()))
+    argv = ["--baseline", str(base_p), "--fresh", str(fresh_p)]
+    assert check_bench.main(argv) == 0
+    bad = fresh_like_baseline()
+    bad["packed_fused_step_ratio"] = 2.0
+    fresh_p.write_text(json.dumps(bad))
+    assert check_bench.main(argv) == 1
+
+
+def test_committed_baseline_parses_and_covers_all_checks():
+    # the baseline the CI lane diffs against must exist and carry every
+    # gated key — otherwise the gate silently degrades to a no-op
+    runs = pathlib.Path(__file__).resolve().parents[2] / "runs"
+    with open(runs / "BENCH_baseline.json") as f:
+        baseline = json.load(f)
+    for key, _ in check_bench.CHECKS:
+        assert check_bench.get_path(baseline, key) is not None, key

@@ -1,0 +1,115 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for `benches/bench_serve.rs`.
+
+Compares a freshly produced ``runs/BENCH_serve.json`` against the
+committed ``runs/BENCH_baseline.json`` and fails (exit 1) when a tracked
+metric regresses beyond the tolerance band:
+
+* ``packed_fused_step_ratio`` — packed/fused mean decode-step ratio,
+  lower is better.  A slowdown in the packed 1.61-bit decode path (e.g.
+  ``packed_qlinear_fwd`` doubling in cost) shows up here.
+* ``prefix_hit_rate`` — fraction of prompt positions served from shared
+  prefix pages on the shared-system-prompt workload, higher is better.
+* ``worker_scaling.factor_w4_over_w1`` — 4-worker over 1-worker
+  throughput of the sharded engine, higher is better.  Compared only
+  when the fresh run had >= 4 cores (``worker_scaling.parallelism``);
+  a 2-core runner cannot scale and must not fail the gate for it.
+
+Only ratios and rates are gated — absolute step times depend on the
+runner and would make the gate flaky.  Tolerance is +/-20% by default.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (dotted key, direction): "lower" = fresh must not exceed baseline by
+# more than the tolerance, "higher" = fresh must not undershoot it
+CHECKS = [
+    ("packed_fused_step_ratio", "lower"),
+    ("prefix_hit_rate", "higher"),
+    ("worker_scaling.factor_w4_over_w1", "higher"),
+]
+
+# below this core count the scaling factor is hardware-bound, not a
+# code property: skip the worker_scaling comparison entirely
+MIN_PARALLELISM = 4
+
+
+def get_path(d, dotted):
+    """Walk a dotted key path through nested dicts; None when absent."""
+    cur = d
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def run_check(baseline, fresh, tolerance=0.2):
+    """Compare fresh vs baseline; return a list of failure strings."""
+    failures = []
+    parallelism = get_path(fresh, "worker_scaling.parallelism")
+    for key, direction in CHECKS:
+        if key.startswith("worker_scaling."):
+            if parallelism is None or parallelism < MIN_PARALLELISM:
+                print(
+                    f"skip {key}: fresh run had parallelism="
+                    f"{parallelism} (< {MIN_PARALLELISM} cores)"
+                )
+                continue
+        base = get_path(baseline, key)
+        cur = get_path(fresh, key)
+        if base is None:
+            failures.append(f"{key}: missing from baseline JSON")
+            continue
+        if cur is None:
+            failures.append(f"{key}: missing from fresh summary JSON")
+            continue
+        if direction == "lower":
+            limit = base * (1.0 + tolerance)
+            ok = cur <= limit
+            bound = f"<= {limit:.4f}"
+        else:
+            limit = base * (1.0 - tolerance)
+            ok = cur >= limit
+            bound = f">= {limit:.4f}"
+        verdict = "ok" if ok else "REGRESSION"
+        print(f"{key}: fresh {cur:.4f} vs baseline {base:.4f} ({bound}) {verdict}")
+        if not ok:
+            failures.append(
+                f"{key}: {cur:.4f} regressed past baseline {base:.4f} "
+                f"(allowed {bound}, {direction} is better)"
+            )
+    return failures
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="committed baseline JSON")
+    ap.add_argument("--fresh", required=True, help="freshly benched summary JSON")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=0.2,
+        help="relative regression band (default 0.2 = 20%%)",
+    )
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = run_check(baseline, fresh, args.tolerance)
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("\nbench regression gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

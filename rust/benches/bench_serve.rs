@@ -25,9 +25,16 @@
 //! full-window bytes with a nonzero prefix-hit rate, token-identical to
 //! the non-paged full-window baseline.
 //!
+//! Part 5 shards the same packed-backend serve across 1/2/4 OS workers
+//! (`run_sharded`): responses must stay byte-identical for every worker
+//! count, and on a host with >= 4 cores the 4-worker deployment must
+//! clear 1.5x the single-worker throughput.
+//!
 //! The whole run's summary is also written as machine-readable JSON to
 //! `runs/BENCH_serve.json` (mean step ms per backend, packed/fused step
-//! ratio, KV live/reserved bytes, prefix-hit rate) for CI and tooling.
+//! ratio, KV live/reserved bytes, prefix-hit rate, worker-scaling
+//! factors) for CI's bench-regression gate (`python/tools/check_bench.py`
+//! against `runs/BENCH_baseline.json`) and tooling.
 //!
 //! Runs on FP-initialized weights (scheduling/caching cost is independent
 //! of training) and needs no artifacts directory.
@@ -41,8 +48,11 @@ use ptq161::quant::ptq161::{initial_parts, PackedModel};
 use ptq161::quant::Ptq161Parts;
 use ptq161::runtime::autodiff::qlinear_weight_reconstructions;
 use ptq161::runtime::Runtime;
-use ptq161::serve::batcher::Batcher;
-use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
+use ptq161::runtime::kv::PrefixRouter;
+use ptq161::serve::batcher::{Batcher, ShardedQueue};
+use ptq161::serve::{
+    run_sharded, Engine, EngineCfg, GenRequest, GenResponse, MetricsRegistry, ShardSpec,
+};
 use ptq161::util::json::{arr, num, obj, s};
 
 fn run_mode(
@@ -311,6 +321,76 @@ fn main() {
         "prefix sharing must allocate strictly fewer pages"
     );
 
+    // ---- part 5: multi-worker sharded scaling ---------------------------
+    // the same packed-backend workload across 1/2/4 OS workers: tokens
+    // must not move, throughput must (given the cores to move it)
+    let n_scale = 32;
+    let scale_reqs: Vec<GenRequest> = (0..n_scale)
+        .map(|i| GenRequest {
+            prompt: format!("SYSTEM: terse alda desk. user {i}: "),
+            max_new_tokens: if i % 4 == 0 { 24 } else { 8 },
+        })
+        .collect();
+    let parallelism = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "\n# sharded scaling: {n_scale} requests over 1/2/4 workers \
+         ({parallelism} cores available)"
+    );
+    let worker_counts = [1usize, 2, 4];
+    let mut scale_tput: Vec<f64> = Vec::new();
+    let mut scale_texts: Vec<Vec<String>> = Vec::new();
+    for &w in &worker_counts {
+        let queue = ShardedQueue::new(w.min(pipe.cfg.b_eval));
+        for r in &scale_reqs {
+            queue.submit(r.clone());
+        }
+        let router = PrefixRouter::new(16);
+        let cfg = EngineCfg { workers: w, ..EngineCfg::default() };
+        let spec =
+            ShardSpec { label: "scale", page_size: 16, kv_pages: None };
+        let t0 = Instant::now();
+        let run =
+            run_sharded(&pipe, &packed_me, &cfg, &queue, &router, &spec).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        assert_eq!(run.responses.len(), n_scale, "workers={w}: lost requests");
+        assert_eq!(run.worker_panics, 0, "workers={w}: worker panicked");
+        let toks: usize = run.responses.iter().map(|r| r.new_tokens).sum();
+        let tput = toks as f64 / wall.max(1e-9);
+        println!(
+            "workers={w} ({} effective)  {:>7.1} tok/s  wall {wall:.2}s  \
+             p95 {:>6.0} ms",
+            run.metrics.workers.unwrap_or(1),
+            tput,
+            run.metrics.p95_ms()
+        );
+        scale_tput.push(tput);
+        scale_texts
+            .push(run.responses.into_iter().map(|r| r.text).collect());
+    }
+    for (i, t) in scale_texts.iter().enumerate().skip(1) {
+        assert_eq!(
+            t, &scale_texts[0],
+            "workers={}: tokens differ from workers=1",
+            worker_counts[i]
+        );
+    }
+    println!("token-identical across worker counts: ok");
+    let scaling_factor = scale_tput[2] / scale_tput[0].max(1e-9);
+    println!("4-worker / 1-worker throughput: {scaling_factor:.2}x");
+    if parallelism >= 4 {
+        assert!(
+            scaling_factor >= 1.5,
+            "4 workers must clear 1.5x single-worker throughput on a \
+             {parallelism}-core host, got {scaling_factor:.2}x"
+        );
+    } else {
+        println!(
+            "(scaling assertion skipped: only {parallelism} cores available)"
+        );
+    }
+
     // ---- machine-readable summary ---------------------------------------
     let backends = arr(q_results.iter().map(|(label, step_ms, _, recon)| {
         obj(vec![
@@ -333,6 +413,21 @@ fn main() {
             num(n_shared as f64),
         ),
         ("full_window_bytes_per_lane", num(window_bytes as f64)),
+        (
+            "worker_scaling",
+            obj(vec![
+                (
+                    "workers",
+                    arr(worker_counts.iter().map(|&w| num(w as f64))),
+                ),
+                (
+                    "throughput_tok_s",
+                    arr(scale_tput.iter().map(|&t| num(t))),
+                ),
+                ("factor_w4_over_w1", num(scaling_factor)),
+                ("parallelism", num(parallelism as f64)),
+            ]),
+        ),
         ("token_identity", s("ok")),
     ]);
     let path = ptq161::runs_dir().join("BENCH_serve.json");

@@ -240,7 +240,8 @@ impl<'a> Pipeline<'a> {
         *self
             .rt
             .exec_counts
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(format!("qblock_packed_decode_{}", self.cfg.name))
             .or_insert(0) += 1;
         let out = crate::runtime::native::packed_block_decode(

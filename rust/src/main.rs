@@ -6,25 +6,32 @@
 //!   quantize    --model tiny --method ptq161 [--preprocessed]
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
-//!               [--no-kv] [--backend dense|fused|packed]
+//!               [--no-kv] [--backend dense|fused|packed] [--workers N]
 //!               [--page-size 16] [--kv-pages N] [--verify-identity]
 //!               (quick-scale by default; --full for the full pipeline;
 //!               paged KV-cached incremental decode unless --no-kv;
 //!               ptq161 defaults to the prepared packed-container
 //!               backend; --kv-pages undersizes the page pool to see
-//!               admission backpressure; --verify-identity re-runs the
-//!               workload on the full-window baseline and asserts
-//!               token-identical output; writes runs/serve_metrics.json)
+//!               admission backpressure; --workers N shards lanes and
+//!               the page pool across N OS threads over a work-stealing
+//!               queue (clamped to b_eval; incompatible with --drain);
+//!               --verify-identity re-runs the workload on the
+//!               full-window baseline and asserts token-identical
+//!               output; writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
 use anyhow::Result;
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
-use ptq161::quant::ptq161::PackedModel;
 use ptq161::experiments::{self, ExperimentCtx};
-use ptq161::serve::batcher::Batcher;
-use ptq161::serve::{Engine, GenRequest, MetricsRegistry};
+use ptq161::quant::ptq161::PackedModel;
+use ptq161::runtime::kv::PrefixRouter;
+use ptq161::serve::batcher::{Batcher, ShardedQueue};
+use ptq161::serve::{
+    effective_workers, place_request, run_sharded, Engine, EngineCfg, GenRequest,
+    MetricsRegistry, ShardSpec,
+};
 use ptq161::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -133,10 +140,6 @@ fn main() -> Result<()> {
                     max_new_tokens: if i % 4 == 3 { 48 } else { 6 },
                 })
                 .collect();
-            let mut batcher = Batcher::new(pipe.cfg.b_eval);
-            for r in &requests {
-                batcher.submit(r.clone());
-            }
             let label = if args.flag("drain") { "drain" } else { "continuous" };
             let mut metrics = MetricsRegistry::new(label);
             // paged-cache geometry: --page-size positions per page and an
@@ -150,15 +153,60 @@ fn main() -> Result<()> {
                 0 => None,
                 p => Some(p),
             };
-            let mut engine = Engine::with_cache_geometry(&pipe, &me, page_size, kv_pages);
-            // KV-cached incremental decode is the default; --no-kv selects
-            // the full-window baseline (token-identical, but per-step cost
-            // grows with sequence position)
-            engine.cfg.use_kv_cache = !args.flag("no-kv");
-            let resps = if args.flag("drain") {
-                engine.run_drain(&mut batcher, &mut metrics)?
+            // --workers N shards lanes + page pool across N OS threads
+            // (clamped so every worker owns at least one lane); the drain
+            // baseline is a single static-batching loop by definition
+            let workers =
+                effective_workers(args.usize_opt("workers", 1), pipe.cfg.b_eval);
+            anyhow::ensure!(
+                workers == 1 || !args.flag("drain"),
+                "--drain is the single-loop static baseline; it cannot be \
+                 combined with --workers > 1"
+            );
+            let resps = if workers > 1 {
+                let queue = ShardedQueue::new(workers);
+                let router = PrefixRouter::new(page_size.clamp(1, pipe.cfg.seq));
+                for r in &requests {
+                    // placement hook: route prompts whose prefix pages a
+                    // worker already holds to that worker, else spread by
+                    // load (the router fills as workers publish prompts)
+                    queue.submit_placed(r.clone(), None, place_request(&router, r));
+                }
+                let ecfg = EngineCfg {
+                    use_kv_cache: !args.flag("no-kv"),
+                    workers,
+                    ..EngineCfg::default()
+                };
+                let spec = ShardSpec { label, page_size, kv_pages };
+                let run = run_sharded(&pipe, &me, &ecfg, &queue, &router, &spec)?;
+                anyhow::ensure!(
+                    run.worker_panics == 0,
+                    "{} worker(s) panicked; failed requests {:?}",
+                    run.worker_panics,
+                    run.failed_requests
+                );
+                metrics = run.metrics;
+                run.responses
             } else {
-                engine.run(&mut batcher, &mut metrics)?
+                let mut batcher = Batcher::new(pipe.cfg.b_eval);
+                for r in &requests {
+                    batcher.submit(r.clone());
+                }
+                let mut engine =
+                    Engine::with_cache_geometry(&pipe, &me, page_size, kv_pages);
+                // KV-cached incremental decode is the default; --no-kv
+                // selects the full-window baseline (token-identical, but
+                // per-step cost grows with sequence position)
+                engine.cfg.use_kv_cache = !args.flag("no-kv");
+                let resps = if args.flag("drain") {
+                    engine.run_drain(&mut batcher, &mut metrics)?
+                } else {
+                    engine.run(&mut batcher, &mut metrics)?
+                };
+                // single-loop runs still export the per-worker schema so
+                // the metrics JSON shape is worker-count independent
+                metrics.set_single_worker();
+                resps
             };
             for r in &resps {
                 let preview: String = r.text.chars().take(56).collect();
@@ -168,6 +216,17 @@ fn main() -> Result<()> {
                 );
             }
             metrics.print_summary();
+            for w in &metrics.worker_stats {
+                println!(
+                    "worker {}: {} req, {} steps, occ {:.2}, p95 {:.1} ms{}",
+                    w.worker,
+                    w.requests,
+                    w.steps,
+                    w.occupancy,
+                    w.p95_ms,
+                    if w.panicked { "  PANICKED" } else { "" }
+                );
+            }
             println!(
                 "kv: {} B reserved, {} B live peak, prefix hit rate {:.2}, \
                  {} CoW splits, {} backpressure",

@@ -40,10 +40,133 @@
 //! step can never run out of pages mid-flight (shared pages only make
 //! live usage cheaper than the reservation, never dearer).
 
+use std::sync::Mutex;
+
 use crate::tensor::Tensor;
 
 /// Default positions per page (the engine's `--page-size` default).
 pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Split `total` pool pages across `workers` per-worker cache partitions,
+/// flooring every partition at `min_pages` (one full window) so a maximal
+/// request stays admissible on every worker. Remainder pages go to the
+/// lowest worker ids. The per-partition floor takes precedence over the
+/// aggregate budget: each worker owns an independent arena, so when the
+/// floor binds the partitions sum to more than `total` — an undersized
+/// `--kv-pages` divides the *squeeze* across workers, it never produces a
+/// partition that deadlocks admission.
+pub fn partition_pages(total: usize, workers: usize, min_pages: usize) -> Vec<usize> {
+    assert!(workers > 0, "partitioning for zero workers");
+    let base = total / workers;
+    let rem = total % workers;
+    (0..workers)
+        .map(|w| (base + usize::from(w < rem)).max(min_pages))
+        .collect()
+}
+
+/// One routed whole-page prefix chain: the token chain plus the worker
+/// whose cache partition holds its pages.
+#[derive(Debug)]
+struct RouteEntry {
+    /// FNV-1a over `tokens` (pre-filter; same fold as [`KvCache`]'s index)
+    hash: u64,
+    /// the chain, a whole number of pages long
+    tokens: Vec<i32>,
+    /// worker whose partition holds the chain's pages (latest publisher)
+    worker: usize,
+}
+
+/// Thread-safe placement index for the sharded serve engine: maps the
+/// same whole-page token prefixes that [`KvCache`]'s content-keyed index
+/// stores to the *worker* whose private cache partition holds those
+/// pages. Workers publish after registering a prompt in their own cache;
+/// submission routes a request whose prompt extends a published chain to
+/// that worker's shard, so the prefix adoption happens inside the one
+/// partition that can actually serve it (partitions share nothing).
+///
+/// The index is advisory: entries may outlive the cached pages (the
+/// engine re-checks adoption against its own cache), and a panicked
+/// worker's entries are dropped via [`PrefixRouter::forget_worker`].
+#[derive(Debug)]
+pub struct PrefixRouter {
+    page_size: usize,
+    entries: Mutex<Vec<RouteEntry>>,
+}
+
+impl PrefixRouter {
+    /// An empty router over `page_size`-position pages (must match the
+    /// engines' cache geometry or no published chain will ever match).
+    pub fn new(page_size: usize) -> PrefixRouter {
+        assert!(page_size > 0, "router page_size must be positive");
+        PrefixRouter { page_size, entries: Mutex::new(Vec::new()) }
+    }
+
+    /// Positions per page this router keys on.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Published chains currently alive (test/introspection).
+    pub fn entries(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Tag every whole-page prefix of `tokens` with `worker`. A chain
+    /// published by several workers keeps the latest publisher — that is
+    /// the partition with the freshest live copy of the pages.
+    pub fn publish(&self, worker: usize, tokens: &[i32]) {
+        let hashes = page_prefix_hashes(tokens, self.page_size);
+        let mut entries = self.entries.lock().unwrap();
+        for (m, &hash) in hashes.iter().enumerate() {
+            let chain = &tokens[..(m + 1) * self.page_size];
+            let found = entries
+                .iter_mut()
+                .find(|e| e.hash == hash && e.tokens == chain);
+            match found {
+                Some(e) => e.worker = worker,
+                None => entries.push(RouteEntry {
+                    hash,
+                    tokens: chain.to_vec(),
+                    worker,
+                }),
+            }
+        }
+    }
+
+    /// The worker holding the longest published whole-page prefix of
+    /// `tokens`, or `None` when no chain matches — the submission-side
+    /// placement hook (`None` falls back to least-loaded).
+    pub fn route(&self, tokens: &[i32]) -> Option<usize> {
+        let hashes = page_prefix_hashes(tokens, self.page_size);
+        if hashes.is_empty() {
+            return None;
+        }
+        let entries = self.entries.lock().unwrap();
+        let mut best: Option<(usize, usize)> = None;
+        for e in entries.iter() {
+            let m = e.tokens.len() / self.page_size;
+            let longer = match best {
+                Some((len, _)) => e.tokens.len() > len,
+                None => true,
+            };
+            if longer
+                && m >= 1
+                && m <= hashes.len()
+                && e.hash == hashes[m - 1]
+                && e.tokens == tokens[..e.tokens.len()]
+            {
+                best = Some((e.tokens.len(), e.worker));
+            }
+        }
+        best.map(|(_, worker)| worker)
+    }
+
+    /// Drop every chain published by `worker` — called when a worker
+    /// panics (its partition, and the pages behind its chains, are gone).
+    pub fn forget_worker(&self, worker: usize) {
+        self.entries.lock().unwrap().retain(|e| e.worker != worker);
+    }
+}
 
 /// One lane's view of the paged store: its page table, valid length, and
 /// the admission-time page reservation backing it.
@@ -853,6 +976,60 @@ mod tests {
         assert_eq!(c.peak_live_bytes(), peak, "reuse does not grow the peak");
         let (k, _, _) = c.gather(0, &[b], 0);
         assert_eq!(k.data[0], 9.0);
+    }
+
+    #[test]
+    fn partition_pages_splits_evenly_with_floor() {
+        // even split
+        assert_eq!(partition_pages(32, 4, 4), vec![8, 8, 8, 8]);
+        // remainder goes to the lowest worker ids
+        assert_eq!(partition_pages(10, 3, 1), vec![4, 3, 3]);
+        // the one-window floor binds: partitions may sum past the total
+        assert_eq!(partition_pages(8, 4, 8), vec![8, 8, 8, 8]);
+        // single worker keeps the whole pool
+        assert_eq!(partition_pages(7, 1, 2), vec![7]);
+    }
+
+    #[test]
+    fn router_routes_longest_published_prefix() {
+        let r = PrefixRouter::new(2);
+        assert_eq!(r.route(&[1, 2, 3, 4]), None, "empty router routes nothing");
+        r.publish(0, &[1, 2, 3, 4]);
+        r.publish(1, &[1, 2, 5, 6, 7, 8]);
+        // chains of 1 page route to their publisher
+        assert_eq!(r.route(&[1, 2, 9]), Some(1), "latest publisher of [1,2] wins");
+        // the longest matching chain decides, not the shortest
+        assert_eq!(r.route(&[1, 2, 3, 4, 9]), Some(0));
+        assert_eq!(r.route(&[1, 2, 5, 6, 7, 8, 9]), Some(1));
+        // diverging prompts and sub-page prompts route nowhere
+        assert_eq!(r.route(&[9, 9, 9, 9]), None);
+        assert_eq!(r.route(&[1]), None, "no whole page to match");
+    }
+
+    #[test]
+    fn router_publish_is_idempotent_and_forgettable() {
+        let r = PrefixRouter::new(2);
+        r.publish(0, &[1, 2, 3, 4]);
+        let n = r.entries();
+        r.publish(0, &[1, 2, 3, 4]);
+        assert_eq!(r.entries(), n, "re-publishing the same chains adds nothing");
+        r.publish(1, &[1, 2, 3, 4]);
+        assert_eq!(r.entries(), n, "re-tagging moves chains, never duplicates");
+        assert_eq!(r.route(&[1, 2, 3, 4]), Some(1));
+        r.forget_worker(1);
+        assert_eq!(r.entries(), 0, "a panicked worker's chains all retire");
+        assert_eq!(r.route(&[1, 2, 3, 4]), None);
+    }
+
+    #[test]
+    fn router_page_size_matches_cache_hash_fold() {
+        // the router and the cache key on the same page-aligned FNV fold,
+        // so a chain registered in a cache is routable verbatim
+        let toks = [7, 8, 9, 10, 11];
+        let r = PrefixRouter::new(2);
+        r.publish(3, &toks);
+        assert_eq!(r.entries(), 2, "two whole pages publish two chains");
+        assert_eq!(r.route(&toks), Some(3));
     }
 
     #[test]

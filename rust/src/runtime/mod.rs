@@ -25,9 +25,9 @@ pub mod kv;
 pub mod manifest;
 pub mod native;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -111,11 +111,15 @@ fn shape_ok(base: &str, io: &IoSpec, got: &[usize]) -> bool {
 
 /// The execution layer: a manifest plus the native backend behind it.
 /// Every model computation in the crate goes through [`Runtime::run`].
+///
+/// `Runtime` is `Sync`: the multi-worker serve engine shares one runtime
+/// (through `&Pipeline`) across its OS worker threads, so the per-artifact
+/// execution counter sits behind a `Mutex` rather than a `RefCell`.
 pub struct Runtime {
     /// the artifact contract this runtime validates against
     pub manifest: Manifest,
     /// execution counter per artifact, for the perf report
-    pub exec_counts: RefCell<HashMap<String, u64>>,
+    pub exec_counts: Mutex<HashMap<String, u64>>,
 }
 
 impl Runtime {
@@ -135,7 +139,7 @@ impl Runtime {
         } else {
             Manifest::builtin()
         };
-        Ok(Runtime { manifest, exec_counts: RefCell::new(HashMap::new()) })
+        Ok(Runtime { manifest, exec_counts: Mutex::new(HashMap::new()) })
     }
 
     /// A runtime backed purely by the built-in manifest (tests, serving
@@ -143,7 +147,7 @@ impl Runtime {
     pub fn native() -> Runtime {
         Runtime {
             manifest: Manifest::builtin(),
-            exec_counts: RefCell::new(HashMap::new()),
+            exec_counts: Mutex::new(HashMap::new()),
         }
     }
 
@@ -190,7 +194,8 @@ impl Runtime {
         }
         *self
             .exec_counts
-            .borrow_mut()
+            .lock()
+            .unwrap()
             .entry(name.to_string())
             .or_insert(0) += 1;
         let cfg = self

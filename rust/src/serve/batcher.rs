@@ -11,8 +11,13 @@
 //!
 //! The coordinator invariants tested here (capacity, no starvation, FIFO)
 //! are the property-test surface for the serving layer.
+//!
+//! The multi-worker engine admits through [`ShardedQueue`] instead: the
+//! same deadline/max-wait semantics, but with one FIFO shard per worker,
+//! placement-aware submission, and work stealing between shards.
 
 use std::collections::VecDeque;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::GenRequest;
@@ -152,6 +157,156 @@ impl Batcher {
     }
 }
 
+#[derive(Debug)]
+struct Shards {
+    shards: Vec<VecDeque<Queued>>,
+    next_id: u64,
+}
+
+/// Shared work-stealing admission queue for the sharded engine: one FIFO
+/// shard per worker behind a single mutex. Submission places a request on
+/// its preferred worker's shard (the prefix-affinity hook) or the
+/// least-loaded shard; a worker claims from its own shard first and
+/// *steals the oldest request of the most-loaded other shard* when its
+/// own is empty, so queued work survives an idle — or dead — worker.
+/// Deadline expiry ([`ShardedQueue::expire_overdue`]) and the `max_wait`
+/// idle-backoff bound keep [`Batcher`]'s admission semantics.
+#[derive(Debug)]
+pub struct ShardedQueue {
+    /// idle-backoff bound, same semantics as [`Batcher::max_wait`]
+    pub max_wait: Duration,
+    state: Mutex<Shards>,
+}
+
+impl ShardedQueue {
+    /// A queue with one shard per worker (default 50 ms max-wait).
+    pub fn new(workers: usize) -> ShardedQueue {
+        assert!(workers > 0);
+        ShardedQueue {
+            max_wait: Duration::from_millis(50),
+            state: Mutex::new(Shards {
+                shards: (0..workers).map(|_| VecDeque::new()).collect(),
+                next_id: 0,
+            }),
+        }
+    }
+
+    /// Builder-style override of the max-wait bound.
+    pub fn with_max_wait(mut self, max_wait: Duration) -> ShardedQueue {
+        self.max_wait = max_wait;
+        self
+    }
+
+    /// Number of shards (== worker count).
+    pub fn workers(&self) -> usize {
+        self.state.lock().unwrap().shards.len()
+    }
+
+    /// Requests waiting across every shard.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// Requests waiting on `worker`'s own shard (stealable by others).
+    pub fn pending_for(&self, worker: usize) -> usize {
+        self.state.lock().unwrap().shards[worker].len()
+    }
+
+    /// Enqueue with no deadline or placement preference.
+    pub fn submit(&self, req: GenRequest) -> u64 {
+        self.submit_placed(req, None, None)
+    }
+
+    /// Enqueue with placement: `preferred` worker's shard when given and
+    /// valid (the prefix-cache routing hook), otherwise the least-loaded
+    /// shard, ties to the lowest worker id. Returns the request id —
+    /// ids are global across shards, so deadline expiry and response
+    /// merging stay totally ordered.
+    pub fn submit_placed(
+        &self,
+        req: GenRequest,
+        deadline: Option<Duration>,
+        preferred: Option<usize>,
+    ) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        let n = st.shards.len();
+        let shard = match preferred {
+            Some(w) if w < n => w,
+            _ => (0..n).min_by_key(|&w| st.shards[w].len()).unwrap(),
+        };
+        let id = st.next_id;
+        st.next_id += 1;
+        st.shards[shard].push_back(Queued {
+            id,
+            req,
+            submitted: Instant::now(),
+            deadline,
+        });
+        id
+    }
+
+    /// Claim the next request for `worker`: its own shard's head first
+    /// (FIFO), else the *oldest* request of the most-loaded other shard
+    /// (work stealing). `None` means every shard is empty. The claim is
+    /// atomic under the queue lock — two workers can never pop the same
+    /// request.
+    pub fn claim(
+        &self,
+        worker: usize,
+    ) -> Option<(u64, GenRequest, Instant, Option<Duration>)> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(q) = st.shards[worker].pop_front() {
+            return Some((q.id, q.req, q.submitted, q.deadline));
+        }
+        let victim = (0..st.shards.len())
+            .filter(|&w| w != worker && !st.shards[w].is_empty())
+            .max_by_key(|&w| st.shards[w].len())?;
+        let q = st.shards[victim].pop_front().unwrap();
+        Some((q.id, q.req, q.submitted, q.deadline))
+    }
+
+    /// Return a claimed-but-inadmissible request to the *front* of
+    /// `worker`'s shard (page-pool backpressure): the worker retries it
+    /// first on its next admission pass, and an idle sibling can still
+    /// steal it. The original submit time (and so deadline accounting)
+    /// is preserved.
+    pub fn restore(
+        &self,
+        worker: usize,
+        id: u64,
+        req: GenRequest,
+        submitted: Instant,
+        deadline: Option<Duration>,
+    ) {
+        let mut st = self.state.lock().unwrap();
+        st.shards[worker].push_front(Queued { id, req, submitted, deadline });
+    }
+
+    /// Remove and return every queued request (any shard) whose deadline
+    /// elapsed before admission, sorted by id.
+    pub fn expire_overdue(&self, now: Instant) -> Vec<(u64, GenRequest)> {
+        let mut st = self.state.lock().unwrap();
+        let mut expired = Vec::new();
+        for shard in st.shards.iter_mut() {
+            let mut kept = VecDeque::with_capacity(shard.len());
+            for q in shard.drain(..) {
+                let overdue = q
+                    .deadline
+                    .map(|d| now.duration_since(q.submitted) >= d)
+                    .unwrap_or(false);
+                if overdue {
+                    expired.push((q.id, q.req));
+                } else {
+                    kept.push_back(q);
+                }
+            }
+            *shard = kept;
+        }
+        expired.sort_by_key(|(id, _)| *id);
+        expired
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -278,5 +433,95 @@ mod tests {
         // pop returns exactly what peek advertised
         assert_eq!(b.pop_ready(now).unwrap().0, a);
         assert!(b.peek_ready(now).is_none());
+    }
+
+    #[test]
+    fn sharded_empty_steal_returns_none() {
+        let q = ShardedQueue::new(3);
+        assert!(q.claim(0).is_none(), "empty queue claims nothing");
+        let id = q.submit_placed(req(1), None, Some(2));
+        assert_eq!(q.pending_for(2), 1);
+        // worker 0's shard is empty: the claim steals from shard 2
+        assert_eq!(q.claim(0).unwrap().0, id);
+        assert_eq!(q.pending(), 0);
+        assert!(q.claim(1).is_none(), "stolen work is gone for everyone");
+    }
+
+    #[test]
+    fn sharded_claim_prefers_local_then_steals_oldest_of_most_loaded() {
+        let q = ShardedQueue::new(3);
+        let own = q.submit_placed(req(1), None, Some(0));
+        let other_a = q.submit_placed(req(2), None, Some(1));
+        let other_b = q.submit_placed(req(3), None, Some(1));
+        let lone = q.submit_placed(req(4), None, Some(2));
+        // local first, FIFO
+        assert_eq!(q.claim(0).unwrap().0, own);
+        // then steal from the most-loaded shard (1 holds two), oldest first
+        assert_eq!(q.claim(0).unwrap().0, other_a);
+        // shards 1 and 2 now hold one each; ties steal the lowest id shard
+        assert_eq!(q.claim(0).unwrap().0, other_b);
+        assert_eq!(q.claim(0).unwrap().0, lone);
+        assert!(q.claim(0).is_none());
+    }
+
+    #[test]
+    fn sharded_contended_claim_is_exactly_once() {
+        // the satellite case: N workers race for the last queued request
+        let q = ShardedQueue::new(4);
+        let id = q.submit(req(1));
+        let winners: Vec<u64> = std::thread::scope(|s| {
+            let q = &q;
+            let handles: Vec<_> =
+                (0..4).map(|w| s.spawn(move || q.claim(w))).collect();
+            handles
+                .into_iter()
+                .filter_map(|h| h.join().unwrap())
+                .map(|(got, _, _, _)| got)
+                .collect()
+        });
+        assert_eq!(winners, vec![id], "exactly one worker wins the claim");
+        assert_eq!(q.pending(), 0);
+    }
+
+    #[test]
+    fn sharded_placement_falls_back_to_least_loaded() {
+        let q = ShardedQueue::new(3);
+        // no preference: fills shards round-robin via least-loaded + low id
+        q.submit(req(1));
+        q.submit(req(2));
+        q.submit(req(3));
+        assert_eq!(
+            (q.pending_for(0), q.pending_for(1), q.pending_for(2)),
+            (1, 1, 1)
+        );
+        // an out-of-range preference also falls back to least-loaded
+        q.submit_placed(req(4), None, Some(99));
+        assert_eq!(q.pending_for(0), 2);
+    }
+
+    #[test]
+    fn sharded_restore_keeps_fifo_head_and_submit_time() {
+        let q = ShardedQueue::new(2);
+        let first = q.submit_placed(req(1), None, Some(0));
+        let second = q.submit_placed(req(2), None, Some(0));
+        let (id, r, submitted, deadline) = q.claim(0).unwrap();
+        assert_eq!(id, first);
+        // backpressure: the claim goes back to the front, not the back
+        q.restore(0, id, r, submitted, deadline);
+        assert_eq!(q.claim(0).unwrap().0, first, "restored head claims first");
+        assert_eq!(q.claim(0).unwrap().0, second);
+    }
+
+    #[test]
+    fn sharded_deadline_expiry_spans_all_shards() {
+        let q = ShardedQueue::new(2);
+        let gone_a = q.submit_placed(req(1), Some(Duration::from_millis(5)), Some(0));
+        let kept = q.submit_placed(req(2), None, Some(0));
+        let gone_b = q.submit_placed(req(3), Some(Duration::from_millis(5)), Some(1));
+        let expired = q.expire_overdue(Instant::now() + Duration::from_millis(10));
+        let ids: Vec<u64> = expired.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![gone_a, gone_b], "both shards expire, id order");
+        assert_eq!(q.pending(), 1);
+        assert_eq!(q.claim(1).unwrap().0, kept, "survivor is still stealable");
     }
 }

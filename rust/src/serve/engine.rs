@@ -52,19 +52,33 @@
 //! refill pays. (With the KV cache enabled, drain mode still decodes
 //! compacted active lanes; the fixed-width padding cost model only exists
 //! on the full-window path.)
+//!
+//! **Multi-worker sharding** ([`run_sharded`]): the lane pool and the
+//! page pool split across N OS threads (std scoped threads, no extra
+//! deps), each running its own engine loop over a private [`KvCache`]
+//! partition, all pulling from one work-stealing [`ShardedQueue`].
+//! Submission routes prefix-cache hits to the worker holding the pages
+//! ([`PrefixRouter`]); greedy decode is per-lane deterministic, so
+//! `--workers N` produces byte-identical per-request tokens to
+//! `--workers 1` — scheduling may reorder completion, never tokens
+//! (`tests/multi_worker.rs` gates this). A worker panic is contained:
+//! its in-flight requests are reported failed, its queued shard is
+//! stolen by the survivors, and the process lives on.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
+use std::sync::Mutex;
+use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, ShardedQueue};
 use super::metrics::{MetricsRegistry, RequestMetric};
 use super::{GenRequest, GenResponse};
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
 use crate::model::tokenizer::ByteTokenizer;
-use crate::runtime::kv::KvCache;
+use crate::runtime::kv::{partition_pages, KvCache, PrefixRouter};
 
 pub use crate::runtime::kv::DEFAULT_PAGE_SIZE;
 
@@ -82,11 +96,25 @@ pub struct EngineCfg {
     /// `packed` / `w4a4`; the CLI's `--backend` flag selects which
     /// `ModelEval` gets built) and exported into the metrics JSON
     pub backend: &'static str,
+    /// OS worker threads a [`run_sharded`] deployment fans the lane pool
+    /// over, clamped to `[1, b_eval]` (each worker needs at least one
+    /// lane). The in-process `run`/`run_drain` loops ignore it.
+    pub workers: usize,
+    /// fault-injection hook for the panic-containment tests: the worker
+    /// that claims this request id panics at admission
+    #[doc(hidden)]
+    pub panic_on_request: Option<u64>,
 }
 
 impl Default for EngineCfg {
     fn default() -> Self {
-        EngineCfg { max_steps: 100_000, use_kv_cache: true, backend: "dense" }
+        EngineCfg {
+            max_steps: 100_000,
+            use_kv_cache: true,
+            backend: "dense",
+            workers: 1,
+            panic_on_request: None,
+        }
     }
 }
 
@@ -106,6 +134,16 @@ struct Lane {
     prefilled: bool,
 }
 
+/// Shared-state handles a sharded worker's engine carries: its worker
+/// id, the deployment-wide prefix placement index, and the in-flight
+/// request registry ([`run_sharded`] reads the latter to name the
+/// requests a panicked worker took down).
+struct ShardCtx<'a> {
+    worker: usize,
+    router: &'a PrefixRouter,
+    in_flight: &'a Mutex<Vec<HashSet<u64>>>,
+}
+
 /// Continuous-batching decode loop over the lane pool (see module docs).
 pub struct Engine<'a> {
     pipe: &'a Pipeline<'a>,
@@ -114,6 +152,8 @@ pub struct Engine<'a> {
     pub cfg: EngineCfg,
     lanes: Vec<Option<Lane>>,
     cache: KvCache,
+    /// present only on engines spawned by [`run_sharded`]
+    shard: Option<ShardCtx<'a>>,
 }
 
 impl<'a> Engine<'a> {
@@ -139,9 +179,27 @@ impl<'a> Engine<'a> {
         let ps = page_size.clamp(1, cfg.seq);
         let per_lane = cfg.seq.div_ceil(ps);
         let pages = kv_pages.unwrap_or(cfg.b_eval * per_lane).max(per_lane);
-        let lanes = (0..cfg.b_eval).map(|_| None).collect();
+        Self::with_shard_geometry(pipe, model, cfg.b_eval, ps, pages)
+    }
+
+    /// An engine owning exactly `lanes` lanes over its own private
+    /// `pool_pages`-page cache — one sharded worker's slice of a
+    /// deployment ([`run_sharded`] partitions lanes and pages with this;
+    /// `new`/`with_cache_geometry` are the whole-pool specializations).
+    /// The pool is floored at one full window per the cache's invariant.
+    pub fn with_shard_geometry(
+        pipe: &'a Pipeline<'a>,
+        model: &'a ModelEval<'a>,
+        lanes: usize,
+        page_size: usize,
+        pool_pages: usize,
+    ) -> Engine<'a> {
+        let cfg = &pipe.cfg;
+        assert!(lanes >= 1 && lanes <= cfg.b_eval, "lanes out of [1, b_eval]");
+        let ps = page_size.clamp(1, cfg.seq);
+        let pages = pool_pages.max(cfg.seq.div_ceil(ps));
         let cache = KvCache::with_geometry(
-            cfg.b_eval,
+            lanes,
             cfg.n_layers,
             cfg.seq,
             cfg.n_heads,
@@ -149,8 +207,15 @@ impl<'a> Engine<'a> {
             ps,
             pages,
         );
-        let cfg = EngineCfg { backend: model.label(), ..EngineCfg::default() };
-        Engine { pipe, model, cfg, lanes, cache }
+        let ecfg = EngineCfg { backend: model.label(), ..EngineCfg::default() };
+        Engine {
+            pipe,
+            model,
+            cfg: ecfg,
+            lanes: (0..lanes).map(|_| None).collect(),
+            cache,
+            shard: None,
+        }
     }
 
     /// Record the run's resident-memory accounting (KV reserved/live
@@ -284,12 +349,27 @@ impl<'a> Engine<'a> {
         out: &mut Vec<GenResponse>,
     ) {
         let lane = self.lanes[li].take().unwrap();
+        self.deregister_in_flight(lane.id);
         let cached_positions =
             lane.slot.map(|slot| self.cache.len(slot)).unwrap_or(0);
         if let Some(slot) = lane.slot {
             self.cache.free(slot);
         }
         out.push(Self::finish(lane, cached_positions, now, metrics));
+    }
+
+    /// Sharded runs track which requests each worker holds so a panic can
+    /// be attributed; no-ops on single-loop engines.
+    fn register_in_flight(&self, id: u64) {
+        if let Some(ctx) = &self.shard {
+            ctx.in_flight.lock().unwrap()[ctx.worker].insert(id);
+        }
+    }
+
+    fn deregister_in_flight(&self, id: u64) {
+        if let Some(ctx) = &self.shard {
+            ctx.in_flight.lock().unwrap()[ctx.worker].remove(&id);
+        }
     }
 
     /// Admit queued requests into free lanes (continuous mode). Requests
@@ -467,6 +547,11 @@ impl<'a> Engine<'a> {
                 let (slot, plen) = (lane.slot.unwrap(), lane.prompt_len);
                 let prompt = lane.seq[..plen].to_vec();
                 self.cache.register_prefix(slot, &prompt);
+                // sharded: advertise the chains deployment-wide so later
+                // submissions route to this worker's partition
+                if let Some(ctx) = &self.shard {
+                    ctx.router.publish(ctx.worker, &prompt);
+                }
             }
         }
         if !decoding.is_empty() {
@@ -594,4 +679,230 @@ impl<'a> Engine<'a> {
         out.sort_by_key(|r| r.id);
         Ok(out)
     }
+
+    /// Sharded admission: claim from the work-stealing queue (own shard
+    /// first, then the most-loaded sibling) into free lanes. Page budgets
+    /// come from this worker's **private** partition — on exhaustion the
+    /// claimed request is restored to our shard's head (so FIFO order and
+    /// the submit timestamp survive) and admission backpressures exactly
+    /// like the single-engine path.
+    fn admit_sharded(
+        &mut self,
+        queue: &ShardedQueue,
+        metrics: &mut MetricsRegistry,
+        out: &mut Vec<GenResponse>,
+    ) {
+        let worker =
+            self.shard.as_ref().expect("sharded admission without ctx").worker;
+        let now = Instant::now();
+        metrics.record_expired(queue.expire_overdue(now).len());
+        for i in 0..self.lanes.len() {
+            while self.lanes[i].is_none() {
+                let Some((id, req, submitted, deadline)) = queue.claim(worker)
+                else {
+                    return;
+                };
+                self.register_in_flight(id);
+                if self.cfg.panic_on_request == Some(id) {
+                    panic!("injected worker panic on request {id}");
+                }
+                let (prompt_len, max_new) = self.lane_shape(&req);
+                let mut slot = None;
+                if max_new > 0 && self.cfg.use_kv_cache {
+                    match self.cache.alloc_with_budget(prompt_len + max_new) {
+                        Some(s) => slot = Some(s),
+                        None => {
+                            // partition exhausted: hand the request back
+                            // and wait for our own lanes to free pages
+                            self.deregister_in_flight(id);
+                            queue.restore(worker, id, req, submitted, deadline);
+                            metrics.record_backpressure();
+                            return;
+                        }
+                    }
+                }
+                let mut lane = self.make_lane(id, &req, submitted, now);
+                if lane.max_new == 0 {
+                    self.deregister_in_flight(id);
+                    out.push(Self::finish(lane, 0, now, metrics));
+                    continue;
+                }
+                lane.slot = slot;
+                self.lanes[i] = Some(lane);
+            }
+        }
+    }
+
+    /// One sharded worker's continuous-batching loop: [`Engine::run`]
+    /// against the shared [`ShardedQueue`] instead of a private
+    /// [`Batcher`]. Exits once the queue is drained *and* every one of
+    /// this worker's lanes has finished — siblings may still be decoding
+    /// their own lanes. [`run_sharded`] drives one of these per worker;
+    /// it is public so tests can run a single worker in isolation.
+    pub fn run_worker(
+        &mut self,
+        queue: &ShardedQueue,
+        metrics: &mut MetricsRegistry,
+    ) -> Result<Vec<GenResponse>> {
+        let mut out = Vec::new();
+        self.export_memory(metrics);
+        for _ in 0..self.cfg.max_steps {
+            self.admit_sharded(queue, metrics, &mut out);
+            if self.active_lanes() == 0 {
+                if queue.pending() == 0 {
+                    break;
+                }
+                // queued work exists but nothing was admissible (raced
+                // with a sibling's claim, or our partition backpressured
+                // with every lane idle): back off briefly, then re-claim
+                std::thread::sleep(
+                    queue
+                        .max_wait
+                        .min(Duration::from_millis(1))
+                        .max(Duration::from_micros(50)),
+                );
+                continue;
+            }
+            self.decode_step(false, metrics, &mut out)?;
+        }
+        self.export_memory(metrics);
+        Ok(out)
+    }
+}
+
+/// Deployment geometry for [`run_sharded`]: the merged-metrics label plus
+/// the cache geometry `serve` would otherwise hand to
+/// [`Engine::with_cache_geometry`]. `kv_pages` is the **aggregate** pool
+/// across all workers; [`partition_pages`] splits it with a one-window
+/// floor per worker so every partition can admit a maximal request.
+#[derive(Debug, Clone)]
+pub struct ShardSpec<'a> {
+    /// label for the merged metrics registry (exported in the JSON)
+    pub label: &'a str,
+    /// positions per KV page (clamped to `[1, seq]`)
+    pub page_size: usize,
+    /// aggregate pool pages across workers (`None` = one full window per
+    /// lane, the fully provisioned default)
+    pub kv_pages: Option<usize>,
+}
+
+/// What a sharded deployment produced: responses sorted by request id,
+/// the per-worker metrics merged into one deployment view, and the
+/// panic-containment report.
+#[derive(Debug)]
+pub struct ShardRun {
+    pub responses: Vec<GenResponse>,
+    pub metrics: MetricsRegistry,
+    /// workers that panicked (their lanes failed; the process survived)
+    pub worker_panics: usize,
+    /// request ids a panicked worker held when it died (no response)
+    pub failed_requests: Vec<u64>,
+}
+
+/// Clamp a requested worker count to what the pipeline can shard: every
+/// worker needs at least one of the `b_eval` lanes. The CLI sizes its
+/// [`ShardedQueue`] with this so the queue's shard count always matches
+/// the spawned workers.
+pub fn effective_workers(requested: usize, b_eval: usize) -> usize {
+    requested.clamp(1, b_eval.max(1))
+}
+
+/// Prefix-cache-aware placement: the worker whose KV partition holds the
+/// longest *published* whole-page prefix of this prompt, or `None` when
+/// no worker has seen it (submit least-loaded instead). Called at
+/// submission time, before the request is tokenized by a lane.
+pub fn place_request(router: &PrefixRouter, req: &GenRequest) -> Option<usize> {
+    let tk = ByteTokenizer;
+    router.route(&tk.encode(&req.prompt))
+}
+
+/// Run a sharded deployment to completion: `cfg.workers` OS threads
+/// (clamped to `[1, b_eval]`), each owning `b_eval / workers` lanes
+/// (remainder to the low ids) and a private partition of the aggregate
+/// page pool, all claiming from one work-stealing `queue`. Placement
+/// hits published via `router` steer prefix-sharing requests to the
+/// worker holding the pages.
+///
+/// **Identity invariant**: greedy decode is per-lane deterministic — a
+/// request's tokens depend only on its own prompt and the weights, never
+/// on which worker ran it or what shared its batch — so for a fixed
+/// request set the responses are byte-identical for every worker count
+/// (`--verify-identity` and `tests/multi_worker.rs` gate this).
+///
+/// **Panic containment**: workers are joined *inside* the thread scope,
+/// so a panicking worker is absorbed rather than re-raised — its
+/// in-flight request ids are returned in `failed_requests`, its routing
+/// entries are dropped, and every other worker finishes normally.
+pub fn run_sharded(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    cfg: &EngineCfg,
+    queue: &ShardedQueue,
+    router: &PrefixRouter,
+    spec: &ShardSpec,
+) -> Result<ShardRun> {
+    let b_eval = pipe.cfg.b_eval;
+    let workers = effective_workers(cfg.workers, b_eval);
+    assert_eq!(
+        queue.workers(),
+        workers,
+        "queue shards must match the effective worker count"
+    );
+    let ps = spec.page_size.clamp(1, pipe.cfg.seq);
+    let per_window = pipe.cfg.seq.div_ceil(ps);
+    let total_pages = spec.kv_pages.unwrap_or(b_eval * per_window);
+    let page_split = partition_pages(total_pages, workers, per_window);
+    let lane_split: Vec<usize> = (0..workers)
+        .map(|w| b_eval / workers + usize::from(w < b_eval % workers))
+        .collect();
+    let in_flight = Mutex::new(vec![HashSet::new(); workers]);
+    type WorkerOutput = (Vec<GenResponse>, MetricsRegistry);
+    let joined: Vec<thread::Result<Result<WorkerOutput>>> = thread::scope(|s| {
+        let in_flight = &in_flight;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let (lanes, pages) = (lane_split[w], page_split[w]);
+                s.spawn(move || -> Result<WorkerOutput> {
+                    let mut engine =
+                        Engine::with_shard_geometry(pipe, model, lanes, ps, pages);
+                    engine.cfg =
+                        EngineCfg { backend: engine.cfg.backend, ..cfg.clone() };
+                    engine.shard = Some(ShardCtx { worker: w, router, in_flight });
+                    let mut metrics = MetricsRegistry::new(&format!("worker{w}"));
+                    let out = engine.run_worker(queue, &mut metrics)?;
+                    Ok((out, metrics))
+                })
+            })
+            .collect();
+        // join INSIDE the scope: a joined handle's panic is ours to
+        // absorb — only unjoined handles re-raise when the scope exits
+        handles.into_iter().map(|h| h.join()).collect()
+    });
+    let mut responses = Vec::new();
+    let mut per_worker = Vec::with_capacity(workers);
+    let mut worker_panics = 0;
+    let mut failed_requests: Vec<u64> = Vec::new();
+    for (w, res) in joined.into_iter().enumerate() {
+        match res {
+            Ok(run) => {
+                let (out, m) = run?;
+                responses.extend(out);
+                per_worker.push((m, false));
+            }
+            Err(_) => {
+                // the worker died: report its in-flight requests failed
+                // and stop routing new prompts at a dead partition
+                worker_panics += 1;
+                router.forget_worker(w);
+                failed_requests
+                    .extend(in_flight.lock().unwrap()[w].iter().copied());
+                per_worker
+                    .push((MetricsRegistry::new(&format!("worker{w}")), true));
+            }
+        }
+    }
+    failed_requests.sort_unstable();
+    responses.sort_by_key(|r| r.id);
+    let metrics = MetricsRegistry::merge_workers(spec.label, per_worker);
+    Ok(ShardRun { responses, metrics, worker_panics, failed_requests })
 }

@@ -26,6 +26,50 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[idx.min(v.len() - 1)]
 }
 
+/// Sum two optional counters, `None` only when both sides are absent
+/// (a worker that recorded nothing must not erase its siblings' totals).
+fn sum_opt(a: Option<usize>, b: Option<usize>) -> Option<usize> {
+    match (a, b) {
+        (None, None) => None,
+        (x, y) => Some(x.unwrap_or(0) + y.unwrap_or(0)),
+    }
+}
+
+/// [`sum_opt`] for u64 counters.
+fn sum_opt_u64(a: Option<u64>, b: Option<u64>) -> Option<u64> {
+    match (a, b) {
+        (None, None) => None,
+        (x, y) => Some(x.unwrap_or(0) + y.unwrap_or(0)),
+    }
+}
+
+/// One worker's slice of a sharded run, kept alongside the aggregate
+/// registry so the JSON's `per_worker` array can show the occupancy and
+/// latency split per shard (see [`MetricsRegistry::merge_workers`]).
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    /// worker id (shard index)
+    pub worker: usize,
+    /// requests this worker finished
+    pub requests: usize,
+    /// decode steps this worker ran
+    pub steps: usize,
+    /// new tokens this worker decoded
+    pub tokens: usize,
+    /// this worker's lane occupancy over its own lane set
+    pub occupancy: f64,
+    /// mean decode-step wall time on this worker (ms)
+    pub mean_step_ms: f64,
+    /// median end-to-end latency of this worker's requests (ms)
+    pub p50_ms: f64,
+    /// 95th-percentile latency of this worker's requests (ms)
+    pub p95_ms: f64,
+    /// 99th-percentile latency of this worker's requests (ms)
+    pub p99_ms: f64,
+    /// worker died to a panic; its in-flight requests were failed
+    pub panicked: bool,
+}
+
 /// One finished request's accounting.
 #[derive(Debug, Clone)]
 pub struct RequestMetric {
@@ -94,6 +138,17 @@ pub struct MetricsRegistry {
     pub packed_model_bytes: Option<usize>,
     /// measured effective bits/weight of the packed containers
     pub packed_bits_per_weight: Option<f64>,
+    /// worker threads the run was sharded over (`None` until tagged by
+    /// [`Self::merge_workers`] or [`Self::set_single_worker`])
+    pub workers: Option<usize>,
+    /// per-worker occupancy/latency split of a sharded run
+    pub worker_stats: Vec<WorkerStat>,
+    /// workers lost to panics during the run
+    pub worker_panics: usize,
+    /// merged-run occupancy denominator, Σ over workers of
+    /// `steps_w × lanes_w` — per-worker step counts differ, so the
+    /// aggregate `steps × capacity` product would misweight idle lanes
+    occ_denom: Option<f64>,
 }
 
 impl MetricsRegistry {
@@ -123,6 +178,10 @@ impl MetricsRegistry {
             kv_backpressure_events: 0,
             packed_model_bytes: None,
             packed_bits_per_weight: None,
+            workers: None,
+            worker_stats: Vec::new(),
+            worker_panics: 0,
+            occ_denom: None,
         }
     }
 
@@ -248,12 +307,105 @@ impl MetricsRegistry {
 
     /// Mean fraction of lanes busy per decode step (1.0 = every lane busy
     /// every step — what continuous batching buys on skewed workloads).
+    /// For a merged multi-worker registry the denominator is the sum of
+    /// each worker's own `steps × lanes` (workers step independently).
     pub fn lane_occupancy(&self) -> f64 {
-        let denom = (self.steps * self.capacity.max(1)) as f64;
+        let denom = self
+            .occ_denom
+            .unwrap_or((self.steps * self.capacity.max(1)) as f64);
         if denom == 0.0 {
             return 0.0;
         }
         self.active_lane_steps as f64 / denom
+    }
+
+    /// This registry's numbers as one worker's [`WorkerStat`] row.
+    fn as_worker_stat(&self, worker: usize, panicked: bool) -> WorkerStat {
+        WorkerStat {
+            worker,
+            requests: self.requests.len(),
+            steps: self.steps,
+            tokens: self.total_tokens,
+            occupancy: self.lane_occupancy(),
+            mean_step_ms: self.mean_step_ms(),
+            p50_ms: self.p50_ms(),
+            p95_ms: self.p95_ms(),
+            p99_ms: self.p99_ms(),
+            panicked,
+        }
+    }
+
+    /// Tag a single-loop run as a one-worker deployment so its JSON
+    /// carries the same `workers`/`per_worker` schema as sharded runs
+    /// (the CI scale matrix reads both through one set of assertions).
+    pub fn set_single_worker(&mut self) {
+        self.workers = Some(1);
+        self.worker_panics = 0;
+        self.worker_stats = vec![self.as_worker_stat(0, false)];
+    }
+
+    /// Merge the per-worker registries of one sharded run into the
+    /// aggregate view. Per-request rows concatenate — so the aggregate
+    /// p50/p95/p99 are *exact* percentiles over the union of the
+    /// per-worker populations, not an approximation from pre-binned
+    /// summaries — counters and memory accounting sum across partitions,
+    /// and each worker's occupancy/latency split is kept as a
+    /// [`WorkerStat`] (the JSON's `per_worker` array). A `true` flag
+    /// marks a worker that panicked; its (empty) registry still takes a
+    /// row so worker ids stay dense.
+    pub fn merge_workers(
+        label: &str,
+        parts: Vec<(MetricsRegistry, bool)>,
+    ) -> MetricsRegistry {
+        let mut out = MetricsRegistry::new(label);
+        out.workers = Some(parts.len());
+        let mut denom = 0.0;
+        for (w, (m, panicked)) in parts.into_iter().enumerate() {
+            out.worker_stats.push(m.as_worker_stat(w, panicked));
+            out.worker_panics += usize::from(panicked);
+            denom += (m.steps * m.capacity.max(1)) as f64;
+            out.steps += m.steps;
+            out.active_lane_steps += m.active_lane_steps;
+            out.capacity += m.capacity;
+            out.total_tokens += m.total_tokens;
+            out.expired += m.expired;
+            out.requests.extend(m.requests.iter().cloned());
+            out.step_ms.extend(m.step_ms.iter().copied());
+            out.prefill_positions += m.prefill_positions;
+            out.prefix_reused_positions += m.prefix_reused_positions;
+            out.kv_backpressure_events += m.kv_backpressure_events;
+            // memory: partition pools sum to the deployment's resident
+            // footprint; live peaks sum as an upper bound on the
+            // simultaneous peak (partitions peak independently)
+            out.kv_reserved_bytes = sum_opt(out.kv_reserved_bytes, m.kv_reserved_bytes);
+            out.kv_live_bytes = sum_opt(out.kv_live_bytes, m.kv_live_bytes);
+            out.kv_pages_total = sum_opt(out.kv_pages_total, m.kv_pages_total);
+            out.kv_cow_splits = sum_opt_u64(out.kv_cow_splits, m.kv_cow_splits);
+            out.kv_page_allocs = sum_opt_u64(out.kv_page_allocs, m.kv_page_allocs);
+            if out.kv_page_size.is_none() {
+                out.kv_page_size = m.kv_page_size;
+            }
+            if out.backend.is_none() {
+                out.backend = m.backend.clone();
+            }
+            if out.packed_model_bytes.is_none() {
+                // one packed model shared by every worker: count it once
+                out.packed_model_bytes = m.packed_model_bytes;
+                out.packed_bits_per_weight = m.packed_bits_per_weight;
+            }
+            // decode window: earliest first step to latest last step
+            out.first_step = match (out.first_step, m.first_step) {
+                (Some(a), Some(b)) => Some(a.min(b)),
+                (a, b) => a.or(b),
+            };
+            out.last_step = match (out.last_step, m.last_step) {
+                (Some(a), Some(b)) => Some(a.max(b)),
+                (a, b) => a.or(b),
+            };
+        }
+        out.requests.sort_by_key(|r| r.id);
+        out.occ_denom = Some(denom);
+        out
     }
 
     fn totals_ms(&self) -> Vec<f64> {
@@ -345,6 +497,27 @@ impl MetricsRegistry {
         }
         if let Some(b) = self.packed_bits_per_weight {
             fields.push(("packed_bits_per_weight", num(b)));
+        }
+        if let Some(w) = self.workers {
+            fields.push(("workers", num(w as f64)));
+            fields.push(("worker_panics", num(self.worker_panics as f64)));
+            fields.push((
+                "per_worker",
+                arr(self.worker_stats.iter().map(|ws| {
+                    obj(vec![
+                        ("worker", num(ws.worker as f64)),
+                        ("requests", num(ws.requests as f64)),
+                        ("steps", num(ws.steps as f64)),
+                        ("tokens", num(ws.tokens as f64)),
+                        ("occupancy", num(ws.occupancy)),
+                        ("mean_step_ms", num(ws.mean_step_ms)),
+                        ("p50_ms", num(ws.p50_ms)),
+                        ("p95_ms", num(ws.p95_ms)),
+                        ("p99_ms", num(ws.p99_ms)),
+                        ("panicked", num(if ws.panicked { 1.0 } else { 0.0 })),
+                    ])
+                })),
+            ));
         }
         fields.push((
             "per_request",
@@ -500,6 +673,83 @@ mod tests {
         );
         let rate = back.get("prefix_hit_rate").and_then(Json::as_f64).unwrap();
         assert!((rate - 0.375).abs() < 1e-9);
+    }
+
+    fn worker_part(steps: usize, cap: usize, reqs: &[(u64, f64)]) -> MetricsRegistry {
+        let mut m = MetricsRegistry::new("part");
+        for _ in 0..steps {
+            m.record_step(cap, cap);
+        }
+        for &(id, total_ms) in reqs {
+            m.record_tokens(2);
+            m.record_request(RequestMetric {
+                id,
+                queue_ms: 1.0,
+                decode_ms: total_ms - 1.0,
+                total_ms,
+                new_tokens: 2,
+                cached_positions: 4,
+            });
+        }
+        m.set_kv_paging(1000, 100, 16, 8, 0, 5);
+        m
+    }
+
+    #[test]
+    fn merge_workers_sums_counters_and_merges_percentiles() {
+        let a = worker_part(4, 2, &[(0, 10.0), (2, 30.0)]);
+        let b = worker_part(2, 2, &[(1, 20.0), (3, 40.0)]);
+        let m = MetricsRegistry::merge_workers("sharded", vec![(a, false), (b, false)]);
+        assert_eq!(m.workers, Some(2));
+        assert_eq!(m.worker_panics, 0);
+        assert_eq!(m.steps, 6);
+        assert_eq!(m.capacity, 4, "lane capacity sums across shards");
+        assert_eq!(m.total_tokens, 8);
+        // requests merge sorted by id, percentiles exact over the union
+        let ids: Vec<u64> = m.requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        assert_eq!(m.p50_ms(), 30.0, "nearest-rank median of 10/20/30/40");
+        assert_eq!(m.p99_ms(), 40.0);
+        // every step ran all lanes on both workers: occupancy is exactly 1
+        assert!((m.lane_occupancy() - 1.0).abs() < 1e-12);
+        // pool memory sums across partitions
+        assert_eq!(m.kv_reserved_bytes, Some(2000));
+        assert_eq!(m.kv_page_allocs, Some(10));
+        assert_eq!(m.worker_stats.len(), 2);
+        assert_eq!(m.worker_stats[1].worker, 1);
+        assert_eq!(m.worker_stats[1].requests, 2);
+    }
+
+    #[test]
+    fn merge_workers_keeps_panicked_row() {
+        let ok = worker_part(2, 1, &[(0, 10.0)]);
+        let dead = MetricsRegistry::new("worker1");
+        let m = MetricsRegistry::merge_workers("sharded", vec![(ok, false), (dead, true)]);
+        assert_eq!(m.worker_panics, 1);
+        assert_eq!(m.worker_stats.len(), 2, "dead worker keeps its row");
+        assert!(m.worker_stats[1].panicked);
+        assert_eq!(m.requests.len(), 1);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("worker_panics").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn single_worker_tag_exports_per_worker_schema() {
+        let mut m = worker_part(3, 2, &[(0, 12.0)]);
+        m.set_single_worker();
+        assert_eq!(m.workers, Some(1));
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("workers").and_then(Json::as_usize), Some(1));
+        assert_eq!(back.get("worker_panics").and_then(Json::as_usize), Some(0));
+        let per = back.get("per_worker").and_then(Json::as_arr).unwrap();
+        assert_eq!(per.len(), 1);
+        assert_eq!(per[0].get("worker").and_then(Json::as_usize), Some(0));
+        assert!(per[0].get("occupancy").and_then(Json::as_f64).is_some());
+        assert!(per[0].get("p95_ms").and_then(Json::as_f64).is_some());
+        // untagged registries keep the legacy schema
+        let legacy = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
+        assert!(legacy.get("workers").is_none());
+        assert!(legacy.get("per_worker").is_none());
     }
 
     #[test]

@@ -1,6 +1,9 @@
 //! Serving layer: continuous-batching generation over the eval pipeline.
 //!
-//! * [`batcher`] — admission queue (FIFO, max-wait cut, deadlines)
+//! * [`batcher`] — admission queues: the single-loop [`batcher::Batcher`]
+//!   (FIFO, max-wait cut, deadlines) and the multi-worker
+//!   [`batcher::ShardedQueue`] (per-worker shards, work stealing,
+//!   placement-aware submit)
 //! * [`engine`] — slot-based continuous-batching decode loop with paged
 //!   KV-cached incremental decode and batched prefill (plus the
 //!   full-window and drain/static baselines it is benchmarked against)
@@ -25,6 +28,11 @@
 //! refill beating batch drain, cached decode beating full-window
 //! re-reads, packed beating the rebuild-Wq' fused path — are measured by
 //! `benches/bench_serve.rs`.
+//!
+//! **Multi-worker**: [`engine::run_sharded`] fans the lane pool and the
+//! page pool across N OS threads pulling from one work-stealing
+//! [`batcher::ShardedQueue`], with prefix-cache-aware placement and
+//! byte-identical tokens for every worker count (see `ARCHITECTURE.md`).
 
 pub mod batcher;
 pub mod engine;
@@ -32,8 +40,11 @@ pub mod metrics;
 
 use anyhow::Result;
 
-pub use engine::{Engine, EngineCfg};
-pub use metrics::{percentile, MetricsRegistry, RequestMetric};
+pub use batcher::{Batcher, ShardedQueue};
+pub use engine::{
+    effective_workers, place_request, run_sharded, Engine, EngineCfg, ShardRun, ShardSpec,
+};
+pub use metrics::{percentile, MetricsRegistry, RequestMetric, WorkerStat};
 
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;

@@ -1,0 +1,250 @@
+//! Multi-worker sharded serve tests (tier-1, no artifacts needed): for a
+//! fixed request set, `run_sharded` must produce byte-identical
+//! per-request responses for every worker count and every backend
+//! (greedy decode is per-lane deterministic — scheduling may reorder
+//! completion, never tokens); a panicking worker must fail only its own
+//! in-flight requests; exhausted per-worker page partitions must
+//! backpressure (not lose or corrupt requests); placement must route
+//! published prefixes to the owning worker; and the merged metrics must
+//! carry the per-worker schema.
+
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::model::{Params, LINEARS};
+use ptq161::quant::ptq161::{initial_parts, PackedModel};
+use ptq161::quant::Ptq161Parts;
+use ptq161::runtime::kv::PrefixRouter;
+use ptq161::runtime::Runtime;
+use ptq161::serve::batcher::{Batcher, ShardedQueue};
+use ptq161::serve::{
+    place_request, run_sharded, Engine, EngineCfg, GenRequest,
+    MetricsRegistry, ShardRun, ShardSpec,
+};
+use ptq161::util::json::Json;
+
+/// PTQ1.61 parts for every linear with a fixed structured mask.
+fn fused_parts(params: &Params, pipe: &Pipeline) -> Vec<Vec<Ptq161Parts>> {
+    (0..pipe.cfg.n_layers)
+        .map(|l| {
+            LINEARS
+                .iter()
+                .map(|lin| {
+                    let w = params.get(&format!("l{l}.{lin}"));
+                    let mask: Vec<bool> = (0..w.cols()).map(|j| j % 4 == 0).collect();
+                    initial_parts(w, &mask)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Shared-prefix micro workload, small enough for debug-mode CI.
+fn micro_requests() -> Vec<GenRequest> {
+    let lens = [4usize, 1, 2, 3, 1, 2];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &n)| GenRequest {
+            prompt: format!("SYSTEM: be terse. req {i}"),
+            max_new_tokens: n,
+        })
+        .collect()
+}
+
+/// Classic single-loop engine run — the identity baseline. Responses
+/// sorted by id (ids are assigned in submit order, like the queue's).
+fn baseline(
+    pipe: &Pipeline,
+    me: &ModelEval,
+    reqs: &[GenRequest],
+) -> Vec<String> {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new("baseline");
+    let mut engine = Engine::new(pipe, me);
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), reqs.len());
+    resps.into_iter().map(|r| r.text).collect()
+}
+
+/// Run the workload sharded over `workers` threads; panics propagate
+/// into the returned report, never out of this call.
+fn sharded(
+    pipe: &Pipeline,
+    me: &ModelEval,
+    reqs: &[GenRequest],
+    workers: usize,
+    kv_pages: Option<usize>,
+    panic_on: Option<u64>,
+) -> ShardRun {
+    let queue = ShardedQueue::new(workers);
+    for r in reqs {
+        queue.submit(r.clone());
+    }
+    let router = PrefixRouter::new(16);
+    let cfg = EngineCfg {
+        workers,
+        panic_on_request: panic_on,
+        ..EngineCfg::default()
+    };
+    let spec = ShardSpec { label: "sharded", page_size: 16, kv_pages };
+    run_sharded(pipe, me, &cfg, &queue, &router, &spec).unwrap()
+}
+
+#[test]
+fn responses_identical_across_worker_counts_and_backends() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(91);
+    let parts = fused_parts(&params, &pipe);
+    let packed = PackedModel::pack(&parts);
+    let reqs = micro_requests();
+    let backends: Vec<(&str, ModelEval)> = vec![
+        ("dense", ModelEval::Dense(&params)),
+        ("packed", ModelEval::Packed { params: &params, packed: &packed }),
+    ];
+    for (name, me) in &backends {
+        let base = baseline(&pipe, me, &reqs);
+        // micro has b_eval = 2, so 2 is the max effective worker count
+        for workers in [1usize, 2] {
+            let run = sharded(&pipe, me, &reqs, workers, None, None);
+            assert_eq!(run.worker_panics, 0, "{name}/w{workers}: panicked");
+            assert!(run.failed_requests.is_empty());
+            assert_eq!(run.responses.len(), reqs.len());
+            let texts: Vec<String> =
+                run.responses.into_iter().map(|r| r.text).collect();
+            assert_eq!(
+                texts, base,
+                "{name}/w{workers}: tokens diverge from single-loop engine"
+            );
+        }
+    }
+}
+
+#[test]
+fn worker_panic_fails_only_its_in_flight_requests() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(92);
+    let me = ModelEval::Dense(&params);
+    let reqs = micro_requests();
+    let base = baseline(&pipe, &me, &reqs);
+    // poison request id 2: whichever worker claims it dies at admission
+    let run = sharded(&pipe, &me, &reqs, 2, None, Some(2));
+    assert_eq!(run.worker_panics, 1, "exactly one worker must die");
+    assert_eq!(run.failed_requests, vec![2], "only the poisoned request fails");
+    assert_eq!(
+        run.responses.len() + run.failed_requests.len(),
+        reqs.len(),
+        "every request is either answered or reported failed"
+    );
+    // survivors are untouched — token-identical to the baseline
+    for r in &run.responses {
+        assert_ne!(r.id, 2);
+        assert_eq!(
+            r.text,
+            base[r.id as usize],
+            "request {} corrupted by the sibling's panic",
+            r.id
+        );
+    }
+    // the merged metrics carry the containment report
+    assert_eq!(run.metrics.worker_panics, 1);
+    assert!(run.metrics.worker_stats.iter().any(|w| w.panicked));
+}
+
+#[test]
+fn exhausted_partitions_backpressure_without_losing_requests() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "tiny").unwrap();
+    let params = pipe.init_params(93);
+    let me = ModelEval::Dense(&params);
+    // tiny: b_eval 4, seq 128 → 2 lanes per worker at w = 2. With 16
+    // aggregate pages each partition gets 8 (the one-window floor), and
+    // each request budgets 5 pages — a worker's second admission cannot
+    // fit and must backpressure until its first request frees pages.
+    let head = "SYSTEM: you are the terse assistant of the upper alda river desk";
+    let reqs: Vec<GenRequest> = (0..4)
+        .map(|i| GenRequest {
+            prompt: format!("{head} {i}"),
+            max_new_tokens: 2,
+        })
+        .collect();
+    let run = sharded(&pipe, &me, &reqs, 2, Some(16), None);
+    assert_eq!(run.worker_panics, 0);
+    assert_eq!(run.responses.len(), reqs.len(), "backpressure lost requests");
+    assert!(
+        run.metrics.kv_backpressure_events >= 1,
+        "undersized partitions must defer admissions"
+    );
+    // deferral must not change a single token: compare to a run with
+    // fully provisioned partitions
+    let free = sharded(&pipe, &me, &reqs, 2, None, None);
+    assert_eq!(free.metrics.kv_backpressure_events, 0);
+    for (a, b) in run.responses.iter().zip(&free.responses) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.text, b.text, "backpressure changed request {}", a.id);
+    }
+}
+
+#[test]
+fn placement_routes_published_prefixes_to_the_owning_worker() {
+    // queue + router without an engine: once worker 1 publishes a prompt's
+    // prefix pages, submission steers matching prompts to worker 1's
+    // shard — and an idle sibling can still steal them
+    let router = PrefixRouter::new(4);
+    let queue = ShardedQueue::new(2);
+    let req = GenRequest {
+        prompt: "abcdefgh unique tail".into(),
+        max_new_tokens: 2,
+    };
+    // nothing published yet: no placement hint
+    assert_eq!(place_request(&router, &req), None);
+    let tokens: Vec<i32> =
+        req.prompt.bytes().map(|b| b as i32).collect();
+    router.publish(1, &tokens);
+    assert_eq!(place_request(&router, &req), Some(1));
+    let id = queue.submit_placed(req.clone(), None, place_request(&router, &req));
+    assert_eq!(queue.pending_for(1), 1, "placed on the publishing worker");
+    assert_eq!(queue.pending_for(0), 0);
+    // the owner claims locally
+    let (got, _, _, _) = queue.claim(1).unwrap();
+    assert_eq!(got, id);
+    // … but a starved sibling steals rather than idling
+    let id2 = queue.submit_placed(req, None, place_request(&router, &req));
+    let (stolen, _, _, _) = queue.claim(0).unwrap();
+    assert_eq!(stolen, id2, "worker 0 must steal worker 1's queued work");
+}
+
+#[test]
+fn merged_metrics_export_per_worker_schema() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(94);
+    let me = ModelEval::Dense(&params);
+    let reqs = micro_requests();
+    let run = sharded(&pipe, &me, &reqs, 2, None, None);
+    let m = &run.metrics;
+    assert_eq!(m.workers, Some(2));
+    assert_eq!(m.worker_stats.len(), 2);
+    let total: usize = m.worker_stats.iter().map(|w| w.requests).sum();
+    assert_eq!(total, reqs.len(), "per-worker requests must sum to the run");
+    let back = Json::parse(&m.snapshot().dump()).unwrap();
+    assert_eq!(back.get("workers").and_then(Json::as_usize), Some(2));
+    assert_eq!(back.get("worker_panics").and_then(Json::as_usize), Some(0));
+    let per = back.get("per_worker").and_then(Json::as_arr).unwrap();
+    assert_eq!(per.len(), 2);
+    for row in per {
+        for key in ["worker", "requests", "steps", "tokens"] {
+            assert!(row.get(key).and_then(Json::as_usize).is_some(), "{key}");
+        }
+        for key in ["occupancy", "mean_step_ms", "p50_ms", "p95_ms", "p99_ms"] {
+            assert!(row.get(key).and_then(Json::as_f64).is_some(), "{key}");
+        }
+    }
+    // aggregate percentiles come from the union of per-request rows
+    assert_eq!(m.requests.len(), reqs.len());
+    assert!(m.p95_ms() >= m.p50_ms());
+}

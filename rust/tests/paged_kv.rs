@@ -240,7 +240,7 @@ fn batched_prefill_runs_one_forward_per_length_bucket() {
     let params = pipe.init_params(85);
     let me = ModelEval::Dense(&params);
     let count = |name: &str| -> u64 {
-        rt.exec_counts.borrow().get(name).copied().unwrap_or(0)
+        rt.exec_counts.lock().unwrap().get(name).copied().unwrap_or(0)
     };
     let embed = "embed_fwd_decode_micro";
     let reqs: Vec<GenRequest> = (0..2)
