@@ -22,6 +22,13 @@ BASELINE = {
     "packed_fused_step_ratio": 1.0,
     "prefix_hit_rate": 0.45,
     "worker_scaling": {"factor_w4_over_w1": 1.7, "parallelism": 4},
+    "cross_method": {
+        "identity": 1.0,
+        "rtn2": {"bits_per_weight": 2.2143},
+        "gptq2": {"bits_per_weight": 2.2143},
+        "pbllm": {"bits_per_weight": 3.0215},
+        "billm": {"bits_per_weight": 3.4286},
+    },
 }
 
 
@@ -77,6 +84,29 @@ def test_scaling_skipped_below_min_parallelism():
     failures = check_bench.run_check(BASELINE, fresh)
     assert len(failures) == 1
     assert "packed_fused_step_ratio" in failures[0]
+
+
+def test_cross_method_bits_inflation_fails():
+    # a container growing a plane (or mis-charging its fp16 vectors)
+    # inflates the measured bits/weight deterministically — gate it
+    fresh = fresh_like_baseline()
+    fresh["cross_method"]["billm"]["bits_per_weight"] = 4.5  # +31%
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "cross_method.billm.bits_per_weight" in failures[0]
+
+
+def test_cross_method_identity_drop_fails():
+    # the section vanishing from the summary (or reporting non-identity)
+    # must trip the gate, not silently degrade it to a no-op
+    fresh = fresh_like_baseline()
+    fresh["cross_method"]["identity"] = 0.0
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "cross_method.identity" in failures[0]
+    del fresh["cross_method"]
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert any("missing from fresh" in f for f in failures)
 
 
 def test_missing_key_fails():

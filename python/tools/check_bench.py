@@ -14,9 +14,20 @@ metric regresses beyond the tolerance band:
   throughput of the sharded engine, higher is better.  Compared only
   when the fresh run had >= 4 cores (``worker_scaling.parallelism``);
   a 2-core runner cannot scale and must not fail the gate for it.
+* ``cross_method.<m>.bits_per_weight`` — measured storage accounting of
+  each method's packed containers on the bench model, lower is better.
+  Deterministic (shape-dependent only): a container growing a plane or
+  mis-charging its scaling vectors moves this immediately.
+* ``cross_method.identity`` — 1.0 when every packed method decoded
+  byte-identical tokens to its dense baseline; higher is better (the
+  bench aborts on divergence, so this also guards against the section
+  being dropped from the summary).
 
-Only ratios and rates are gated — absolute step times depend on the
-runner and would make the gate flaky.  Tolerance is +/-20% by default.
+Only ratios, rates and storage accounting are gated — absolute step
+times depend on the runner and would make the gate flaky (the per-method
+``packed_dense_step_ratio`` is recorded for tracking, not gated, since
+its baseline varies with the decode kernels' host).  Tolerance is
++/-20% by default.
 """
 
 from __future__ import annotations
@@ -31,6 +42,11 @@ CHECKS = [
     ("packed_fused_step_ratio", "lower"),
     ("prefix_hit_rate", "higher"),
     ("worker_scaling.factor_w4_over_w1", "higher"),
+    ("cross_method.rtn2.bits_per_weight", "lower"),
+    ("cross_method.gptq2.bits_per_weight", "lower"),
+    ("cross_method.pbllm.bits_per_weight", "lower"),
+    ("cross_method.billm.bits_per_weight", "lower"),
+    ("cross_method.identity", "higher"),
 ]
 
 # below this core count the scaling factor is hardware-bound, not a

@@ -30,6 +30,13 @@
 //! count, and on a host with >= 4 cores the 4-worker deployment must
 //! clear 1.5x the single-worker throughput.
 //!
+//! Part 6 exercises the method-agnostic packed abstraction: each
+//! quantizer with a `PackedContainer` impl (RTN2, GPTQ2, PB-LLM, BiLLM)
+//! quantizes the model on synthetic calibration, and the same workload is
+//! served dense vs packed — tokens must be byte-identical per method,
+//! with measured bits/weight and the packed/dense step ratio reported
+//! under a `cross_method` summary section.
+//!
 //! The whole run's summary is also written as machine-readable JSON to
 //! `runs/BENCH_serve.json` (mean step ms per backend, packed/fused step
 //! ratio, KV live/reserved bytes, prefix-hit rate, worker-scaling
@@ -43,9 +50,11 @@ use std::time::Instant;
 
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
-use ptq161::model::LINEARS;
+use ptq161::model::{Params, LINEARS};
 use ptq161::quant::ptq161::{initial_parts, PackedModel};
-use ptq161::quant::Ptq161Parts;
+use ptq161::quant::{by_name, LinearCalib, Ptq161Parts};
+use ptq161::tensor::Tensor;
+use ptq161::util::rng::Rng;
 use ptq161::runtime::autodiff::qlinear_weight_reconstructions;
 use ptq161::runtime::Runtime;
 use ptq161::runtime::kv::PrefixRouter;
@@ -81,6 +90,38 @@ fn run_mode(
     assert_eq!(engine.kv_cache().in_use_count(), 0, "{label}: leaked slots");
     resps.sort_by_key(|r| r.id);
     (metrics, resps, wall)
+}
+
+/// Quantize every block linear with `method` (synthetic calibration) into
+/// a dense-baseline params clone plus the prepared container model.
+fn quantized_model(
+    pipe: &Pipeline,
+    params: &Params,
+    method: &str,
+    seed: u64,
+) -> (Params, PackedModel) {
+    let mut rng = Rng::new(seed);
+    let q = by_name(method).unwrap();
+    let mut dense = params.clone();
+    let mut layers = Vec::new();
+    for l in 0..pipe.cfg.n_layers {
+        let mut layer = Vec::new();
+        for lin in LINEARS {
+            let name = format!("l{l}.{lin}");
+            let w = params.get(&name);
+            let inn = w.cols();
+            let x = Tensor::randn(&[2 * inn, inn], 1.0, &mut rng);
+            let mut calib = LinearCalib::empty(inn);
+            calib.accumulate(&x, true);
+            let ql = q.quantize_linear(w, &calib);
+            *dense.get_mut(&name) = ql.deq;
+            layer.push(ql.container.unwrap_or_else(|| {
+                panic!("{method} must emit a container for {name}")
+            }));
+        }
+        layers.push(layer);
+    }
+    (dense, PackedModel::from_containers(method, &layers))
 }
 
 fn mean(xs: &[f64]) -> f64 {
@@ -391,6 +432,63 @@ fn main() {
         );
     }
 
+    // ---- part 6: one container abstraction, every quantizer -------------
+    // per method: quantize tiny's linears on synthetic calibration, then
+    // serve the same workload dense vs packed — byte-identical tokens
+    // (the containers' decode kernels accumulate in the dense kernel's
+    // exact order), zero dense-weight reconstructions, with measured
+    // bits/weight and the packed/dense step ratio per method
+    let xm_reqs: Vec<GenRequest> = (0..8)
+        .map(|i| GenRequest {
+            prompt: format!("SYSTEM: terse alda desk. user {i}: "),
+            max_new_tokens: if i % 3 == 0 { 12 } else { 4 },
+        })
+        .collect();
+    println!("\n# cross-method packed backends (dense-identical serve)");
+    let mut xm_fields: Vec<(&str, _)> = Vec::new();
+    for method in ["rtn2", "gptq2", "pbllm", "billm"] {
+        let (dense_params, xm_packed) =
+            quantized_model(&pipe, &params, method, 17);
+        let dense_me = ModelEval::Dense(&dense_params);
+        let packed_xm =
+            ModelEval::Packed { params: &dense_params, packed: &xm_packed };
+        let (dm, dresps, _) = run_mode(
+            &pipe, &dense_me, &xm_reqs, &format!("{method}/dense"), false, true,
+        );
+        let r0 = qlinear_weight_reconstructions();
+        let (pm, presps, _) = run_mode(
+            &pipe, &packed_xm, &xm_reqs, &format!("{method}/packed"), false, true,
+        );
+        assert_eq!(
+            qlinear_weight_reconstructions() - r0,
+            0,
+            "{method}: packed decode must not reconstruct dense weights"
+        );
+        let dtexts: Vec<String> = dresps.into_iter().map(|r| r.text).collect();
+        let ptexts: Vec<String> = presps.into_iter().map(|r| r.text).collect();
+        assert_eq!(ptexts, dtexts, "{method}: packed tokens diverge from dense");
+        let xm_ratio = pm.mean_step_ms() / dm.mean_step_ms().max(1e-9);
+        println!(
+            "{method:<7} {:.4} bits/weight  {:>5} KiB resident  \
+             packed/dense mean step {xm_ratio:.2}x  token-identity ok",
+            xm_packed.effective_bits(),
+            xm_packed.resident_bytes() / 1024,
+        );
+        xm_fields.push((
+            method,
+            obj(vec![
+                ("bits_per_weight", num(xm_packed.effective_bits())),
+                ("packed_dense_step_ratio", num(xm_ratio)),
+                ("packed_bytes", num(xm_packed.resident_bytes() as f64)),
+                ("mean_step_ms", num(pm.mean_step_ms())),
+            ]),
+        ));
+    }
+    // scalar flag for the regression gate: 1.0 = every method above served
+    // byte-identical tokens (the asserts abort the bench otherwise)
+    xm_fields.push(("identity", num(1.0)));
+    println!("token-identical across all packed methods: ok");
+
     // ---- machine-readable summary ---------------------------------------
     let backends = arr(q_results.iter().map(|(label, step_ms, _, recon)| {
         obj(vec![
@@ -428,6 +526,7 @@ fn main() {
                 ("parallelism", num(parallelism as f64)),
             ]),
         ),
+        ("cross_method", obj(xm_fields)),
         ("token_identity", s("ok")),
     ]);
     let path = ptq161::runs_dir().join("BENCH_serve.json");

@@ -207,6 +207,8 @@ pub fn ptq161_optimize(
             bits_label: "1.61".into(),
             params: out_params,
             parts: Some(parts_all),
+            // packed lazily from the optimized parts (PackedModel::pack)
+            containers: None,
             avg_bits,
         },
         final_losses,

@@ -12,7 +12,7 @@ pub mod quantize;
 use anyhow::{anyhow, Result};
 
 use crate::model::{Params, LINEARS};
-use crate::quant::ptq161::PackedLinear;
+use crate::quant::ArcContainer;
 use crate::runtime::manifest::ModelConfig;
 use crate::runtime::{Runtime, Value};
 use crate::tensor::Tensor;
@@ -218,9 +218,10 @@ impl<'a> Pipeline<'a> {
         Ok(Self::unpack_decode(out))
     }
 
-    /// PTQ1.61 block over new positions served straight from the prepared
-    /// packed containers (decode variant of the packed backend): `layer`
-    /// holds one [`PackedLinear`] per block linear in LINEARS order.
+    /// Quantized block over new positions served straight from the
+    /// prepared packed containers (decode variant of the packed backend,
+    /// any method with a [`crate::quant::PackedContainer`] impl): `layer`
+    /// holds one container per block linear in LINEARS order.
     ///
     /// Packed containers are host structures, not artifact `Value`s, so
     /// this calls the native backend directly instead of going through
@@ -234,7 +235,7 @@ impl<'a> Pipeline<'a> {
         lens: &[usize],
         attn_norm: &Tensor,
         mlp_norm: &Tensor,
-        layer: &[PackedLinear],
+        layer: &[ArcContainer],
     ) -> Result<(Tensor, Tensor, Tensor)> {
         assert_eq!(layer.len(), LINEARS.len());
         *self

@@ -8,7 +8,7 @@ use anyhow::Result;
 use super::capture::ModelCalib;
 use super::Pipeline;
 use crate::model::{Params, LINEARS};
-use crate::quant::{Ptq161Parts, Quantizer};
+use crate::quant::{ArcContainer, Ptq161Parts, Quantizer};
 
 pub struct QuantModel {
     pub method: String,
@@ -17,6 +17,10 @@ pub struct QuantModel {
     pub params: Params,
     /// PTQ1.61 structured parts per [layer][linear]
     pub parts: Option<Vec<Vec<Ptq161Parts>>>,
+    /// serve-ready packed containers per [layer][linear] (all-or-nothing:
+    /// `Some` only when every block linear emitted one at quantization
+    /// time — the methods the packed backend can serve directly)
+    pub containers: Option<Vec<Vec<ArcContainer>>>,
     /// weight-count-weighted average effective bits over quantized linears
     pub avg_bits: f64,
 }
@@ -30,11 +34,14 @@ pub fn quantize_model(
     let cfg = &pipe.cfg;
     let mut out = params.clone();
     let mut parts_all: Vec<Vec<Ptq161Parts>> = Vec::new();
+    let mut containers_all: Vec<Vec<ArcContainer>> = Vec::new();
     let mut bits_acc = 0.0f64;
     let mut weights_acc = 0.0f64;
     let mut have_parts = true;
+    let mut have_containers = true;
     for l in 0..cfg.n_layers {
         let mut layer_parts = Vec::new();
+        let mut layer_containers = Vec::new();
         for lin in LINEARS {
             let name = format!("l{l}.{lin}");
             let w = params.get(&name);
@@ -46,15 +53,22 @@ pub fn quantize_model(
             } else {
                 have_parts = false;
             }
+            if let Some(c) = &q.container {
+                layer_containers.push(c.clone());
+            } else {
+                have_containers = false;
+            }
             *out.get_mut(&name) = q.deq;
         }
         parts_all.push(layer_parts);
+        containers_all.push(layer_containers);
     }
     Ok(QuantModel {
         method: method.name().to_string(),
         bits_label: method.bits_label(),
         params: out,
         parts: if have_parts { Some(parts_all) } else { None },
+        containers: if have_containers { Some(containers_all) } else { None },
         avg_bits: bits_acc / weights_acc,
     })
 }

@@ -6,7 +6,7 @@ pub mod zeroshot;
 
 use crate::coordinator::Pipeline;
 use crate::model::{Params, LINEARS};
-use crate::quant::ptq161::PackedModel;
+use crate::quant::PackedModel;
 use crate::quant::Ptq161Parts;
 use crate::runtime::kv::KvCache;
 use crate::tensor::Tensor;
@@ -35,9 +35,9 @@ fn fused_layer_inputs(parts: &[Ptq161Parts]) -> Vec<[Tensor; 6]> {
 
 /// How to run the model forward — dense fake-quant (paper's eval contract),
 /// the fused Pallas-kernel path (reconstructs Wq' from the six part
-/// tensors each call), the prepared packed-container path (decodes the
-/// 1.61-bit containers directly, zero per-step reconstruction), or the
-/// SmoothQuant W4A4 block (Table 13).
+/// tensors each call), the prepared packed-container path (decodes any
+/// method's [`crate::quant::PackedContainer`]s directly, zero per-step
+/// reconstruction), or the SmoothQuant W4A4 block (Table 13).
 pub enum ModelEval<'a> {
     Dense(&'a Params),
     Fused { params: &'a Params, parts: &'a [Vec<Ptq161Parts>] },

@@ -215,6 +215,7 @@ fn clone_qm(q: &QuantModel) -> QuantModel {
         bits_label: q.bits_label.clone(),
         params: q.params.clone(),
         parts: q.parts.clone(),
+        containers: q.containers.clone(),
         avg_bits: q.avg_bits,
     }
 }

@@ -16,8 +16,10 @@
 //!               the page pool across N OS threads over a work-stealing
 //!               queue (clamped to b_eval; incompatible with --drain);
 //!               --verify-identity re-runs the workload on the
-//!               full-window baseline and asserts token-identical
-//!               output; writes runs/serve_metrics.json)
+//!               full-window dense baseline and asserts token-identical
+//!               output — gating both the paged KV cache and the packed
+//!               decode backend of whichever method is served;
+//!               writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
@@ -25,7 +27,7 @@ use anyhow::Result;
 use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::experiments::{self, ExperimentCtx};
-use ptq161::quant::ptq161::PackedModel;
+use ptq161::quant::PackedModel;
 use ptq161::runtime::kv::PrefixRouter;
 use ptq161::serve::batcher::{Batcher, ShardedQueue};
 use ptq161::serve::{
@@ -100,13 +102,25 @@ fn main() -> Result<()> {
                 if method == "ptq161" { "packed" } else { "dense" },
             );
             let packed = if backend == "packed" {
-                let parts = qm.parts.as_ref().ok_or_else(|| {
-                    anyhow::anyhow!("--backend packed needs a ptq161 model")
-                })?;
-                let pm = PackedModel::pack(parts);
+                // any method whose quantizer emitted serve-ready containers
+                // can be packed; ptq161 packs from the block-optimized
+                // parts instead (containers built at quantize time would
+                // predate the learned scaling factors)
+                let pm = if let Some(parts) = qm.parts.as_ref() {
+                    PackedModel::pack(parts)
+                } else if let Some(layers) = qm.containers.as_ref() {
+                    PackedModel::from_containers(&method, layers)
+                } else {
+                    anyhow::bail!(
+                        "--backend packed: method '{method}' has no \
+                         PackedContainer impl (supported: ptq161, billm, \
+                         pbllm, rtn2/4/8, gptq2/4/8); use --backend dense"
+                    )
+                };
                 println!(
-                    "packed {} layers: {} KiB resident, {:.3} bits/weight",
+                    "packed {} layers ({}): {} KiB resident, {:.3} bits/weight",
                     pm.n_layers(),
+                    pm.method(),
                     pm.resident_bytes() / 1024,
                     pm.effective_bits()
                 );
@@ -241,22 +255,26 @@ fn main() -> Result<()> {
             println!("metrics written to {}", path.display());
             if args.flag("verify-identity") {
                 // token-identity gate: the same workload on the legacy
-                // full-window path must decode byte-identical responses.
-                // Meaningless when the primary run already was
-                // full-window — comparing the baseline to itself would
-                // always "pass" — so reject that combination outright.
+                // full-window *dense* path must decode byte-identical
+                // responses, so one pass gates both the paged KV cache and
+                // any packed/fused decode backend against the reference
+                // reconstruction. When the primary run already was the
+                // dense full-window baseline the comparison is vacuous, so
+                // reject that combination outright.
                 anyhow::ensure!(
-                    !args.flag("no-kv"),
-                    "--verify-identity checks the paged KV path against \
-                     the full-window baseline; it cannot be combined with \
-                     --no-kv (that would compare the baseline to itself)"
+                    backend != "dense" || !args.flag("no-kv"),
+                    "--verify-identity checks the serve path against the \
+                     full-window dense baseline; with --backend dense it \
+                     cannot be combined with --no-kv (that would compare \
+                     the baseline to itself)"
                 );
                 let mut b2 = Batcher::new(pipe.cfg.b_eval);
                 for r in &requests {
                     b2.submit(r.clone());
                 }
                 let mut m2 = MetricsRegistry::new("identity-baseline");
-                let mut e2 = Engine::new(&pipe, &me);
+                let base_me = ModelEval::Dense(&qm.params);
+                let mut e2 = Engine::new(&pipe, &base_me);
                 e2.cfg.use_kv_cache = false;
                 let mut base = if args.flag("drain") {
                     e2.run_drain(&mut b2, &mut m2)?
@@ -275,12 +293,14 @@ fn main() -> Result<()> {
                 for (a, b) in got.iter().zip(&base) {
                     anyhow::ensure!(
                         a.text == b.text,
-                        "token identity violated for request {}",
+                        "token identity violated for request {} \
+                         (backend {backend} vs full-window dense)",
                         a.id
                     );
                 }
                 println!(
-                    "token-identity vs full-window baseline: ok ({} requests)",
+                    "token-identity vs full-window dense baseline: ok \
+                     ({} requests, backend {backend})",
                     base.len()
                 );
             }

@@ -1,0 +1,132 @@
+//! Generic b-bit code plane: the INT2/INT4/INT8 container behind the
+//! uniform-grid quantizers (RTN, GPTQ) and the salient plane of PB-LLM.
+//!
+//! [`CodeVec`] packs fixed-width unsigned codes into `u64` words, little
+//! end first, for any width that divides 64 (1, 2, 4, 8, 16) — the same
+//! storage convention as [`super::bitpack::BitVec`] (width 1) and
+//! [`super::nibble::NibbleVec`] (width 4), generalized so one container
+//! serves every integer plane a [`crate::quant::PackedContainer`] needs.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct CodeVec {
+    /// code width in bits (must divide 64)
+    pub bits: u32,
+    /// number of codes stored
+    pub len: usize,
+    words: Vec<u64>,
+}
+
+impl CodeVec {
+    pub fn zeros(bits: u32, len: usize) -> CodeVec {
+        assert!(bits >= 1 && bits <= 16 && 64 % bits == 0, "width {bits}");
+        let per = (64 / bits) as usize;
+        CodeVec { bits, len, words: vec![0; len.div_ceil(per)] }
+    }
+
+    pub fn from_codes(bits: u32, codes: &[u16]) -> CodeVec {
+        let mut v = CodeVec::zeros(bits, codes.len());
+        for (i, &c) in codes.iter().enumerate() {
+            v.set(i, c);
+        }
+        v
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> u16 {
+        debug_assert!(i < self.len);
+        let per = (64 / self.bits) as usize;
+        let shift = (i % per) as u32 * self.bits;
+        let mask = if self.bits == 64 { u64::MAX } else { (1u64 << self.bits) - 1 };
+        ((self.words[i / per] >> shift) & mask) as u16
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, code: u16) {
+        debug_assert!(i < self.len);
+        let mask = (1u64 << self.bits) - 1;
+        assert!(
+            (code as u64) <= mask,
+            "code {code} exceeds {}-bit range",
+            self.bits
+        );
+        let per = (64 / self.bits) as usize;
+        let shift = (i % per) as u32 * self.bits;
+        let w = &mut self.words[i / per];
+        *w = (*w & !(mask << shift)) | ((code as u64) << shift);
+    }
+
+    pub fn to_codes(&self) -> Vec<u16> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// Storage in bits (what the accounting layer charges).
+    pub fn storage_bits(&self) -> u64 {
+        self.len as u64 * self.bits as u64
+    }
+
+    /// Actual resident bytes of the word buffer.
+    pub fn storage_bytes_padded(&self) -> usize {
+        self.words.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn set_get_round_trip_all_widths() {
+        for bits in [1u32, 2, 4, 8, 16] {
+            let n = 97;
+            let top = (1u32 << bits) - 1;
+            let codes: Vec<u16> =
+                (0..n).map(|i| ((i * 7) as u32 % (top + 1)) as u16).collect();
+            let v = CodeVec::from_codes(bits, &codes);
+            assert_eq!(v.to_codes(), codes, "width {bits}");
+            assert_eq!(v.storage_bits(), n as u64 * bits as u64);
+        }
+    }
+
+    #[test]
+    fn set_overwrites_cleanly() {
+        let mut v = CodeVec::zeros(2, 40);
+        v.set(7, 3);
+        v.set(7, 1);
+        assert_eq!(v.get(7), 1);
+        assert_eq!(v.get(6), 0);
+        assert_eq!(v.get(8), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn out_of_range_code_rejected() {
+        let mut v = CodeVec::zeros(2, 4);
+        v.set(0, 4);
+    }
+
+    #[test]
+    fn random_round_trip_property() {
+        check(
+            "codevec-roundtrip",
+            60,
+            |r: &mut Rng| {
+                let bits = [1u32, 2, 4, 8][r.below(4)] as usize;
+                let n = r.below(200) + 1;
+                let top = (1usize << bits) - 1;
+                let codes: Vec<usize> =
+                    (0..n).map(|_| r.below(top + 1)).collect();
+                (bits, codes)
+            },
+            |(bits, codes)| {
+                let c16: Vec<u16> = codes.iter().map(|&c| c as u16).collect();
+                let v = CodeVec::from_codes(*bits as u32, &c16);
+                if v.to_codes() != c16 {
+                    return Err("round trip deviates".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

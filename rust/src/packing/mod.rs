@@ -9,9 +9,11 @@
 
 pub mod bitpack;
 pub mod bitwidth;
+pub mod codes;
 pub mod memory;
 pub mod nibble;
 
 pub use bitpack::BitVec;
 pub use bitwidth::{average_bits, BitScheme};
+pub use codes::CodeVec;
 pub use nibble::NibbleVec;

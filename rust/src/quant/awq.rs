@@ -75,6 +75,7 @@ impl Quantizer for Awq {
             deq: best.unwrap().1,
             scheme: BitScheme::Uniform { bits: self.bits as f64 },
             parts: None,
+            container: None,
         }
     }
 }

@@ -9,6 +9,8 @@
 
 use super::{LinearCalib, QuantizedLinear, Quantizer};
 use crate::packing::bitwidth::BitScheme;
+use crate::packing::BitVec;
+use crate::quant::container::BiLlmPacked;
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone, Copy)]
@@ -75,6 +77,17 @@ impl Quantizer for BiLlm {
             salient[i] = true;
         }
         let mut deq = Tensor::zeros(&[n, m]);
+        // packed planes carried from this pass, compacted in row-major
+        // walk order: two sign bits per salient entry (order-1 +
+        // residual), sign + group-select bits per non-salient entry
+        let mut sal_sign1 = Vec::with_capacity(k);
+        let mut sal_sign2 = Vec::with_capacity(k);
+        let mut ns_sign = Vec::with_capacity(total - k);
+        let mut ns_group = Vec::with_capacity(total - k);
+        let mut row_a1 = Vec::with_capacity(n);
+        let mut row_a2 = Vec::with_capacity(n);
+        let mut row_alo = Vec::with_capacity(n);
+        let mut row_ahi = Vec::with_capacity(n);
         for r in 0..n {
             let row = w.row(r);
             // salient entries: residual binarization
@@ -123,11 +136,20 @@ impl Quantizer for BiLlm {
                 }
             }
             let (_, t, alo, ahi) = best;
+            row_a1.push(a1);
+            row_a2.push(a2);
+            row_alo.push(alo);
+            row_ahi.push(ahi);
             for c in 0..m {
                 let x = row[c];
                 deq.data[r * m + c] = if salient[r * m + c] {
+                    sal_sign1.push(x >= 0.0);
+                    let s1 = if x >= 0.0 { a1 } else { -a1 };
+                    sal_sign2.push(x - s1 >= 0.0);
                     residual_deq(x, a1, a2)
                 } else {
+                    ns_group.push(x.abs() <= t);
+                    ns_sign.push(x >= 0.0);
                     let a = if x.abs() <= t { alo } else { ahi };
                     if x >= 0.0 {
                         a
@@ -137,7 +159,24 @@ impl Quantizer for BiLlm {
                 };
             }
         }
-        QuantizedLinear { deq, scheme: BitScheme::BiLlm, parts: None }
+        let container = BiLlmPacked::new(
+            &salient,
+            BitVec::from_bools(&sal_sign1),
+            BitVec::from_bools(&sal_sign2),
+            BitVec::from_bools(&ns_sign),
+            BitVec::from_bools(&ns_group),
+            row_a1,
+            row_a2,
+            row_alo,
+            row_ahi,
+            &deq,
+        );
+        QuantizedLinear {
+            deq,
+            scheme: BitScheme::BiLlm,
+            parts: None,
+            container: Some(std::sync::Arc::new(container)),
+        }
     }
 }
 

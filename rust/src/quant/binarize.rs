@@ -63,6 +63,7 @@ impl Quantizer for PlainBinarize {
             deq: binarize_dense(w),
             scheme: BitScheme::Uniform { bits: 1.0 },
             parts: None,
+            container: None,
         }
     }
 }

@@ -11,12 +11,24 @@
 
 use super::{LinearCalib, QuantizedLinear, Quantizer};
 use crate::packing::bitwidth::BitScheme;
+use crate::quant::container::IntPacked;
 use crate::tensor::{cholesky, spd_inverse, Tensor};
 
-/// Per-row b-bit asymmetric quantize of a single column slice.
-fn quantize_scalar(x: f32, mn: f32, mx: f32, qmax: f32) -> f32 {
+/// Per-row b-bit asymmetric quantize of a single value, also returning
+/// the integer code so the packed container can decode
+/// `code * scale + min` bit-exactly.
+fn quantize_scalar_coded(x: f32, mn: f32, mx: f32, qmax: f32) -> (f32, u16) {
     let scale = ((mx - mn) / qmax).max(1e-8);
-    ((x - mn) / scale).round().clamp(0.0, qmax) * scale + mn
+    let q = ((x - mn) / scale).round().clamp(0.0, qmax);
+    (q * scale + mn, q as u16)
+}
+
+/// Integer planes emitted alongside a GPTQ run when every column is
+/// active: row-major codes over (out, in) plus per-row `(scale, min)`.
+struct IntCodes {
+    codes: Vec<u16>,
+    row_scale: Vec<f32>,
+    row_min: Vec<f32>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -37,7 +49,20 @@ impl Gptq {
     /// (not in `order`) are left untouched and excluded from error
     /// propagation — OWQ freezes its fp16 outlier columns this way.
     fn run(&self, w: &Tensor, hess: &Tensor, order: &[usize]) -> Tensor {
-        let (n, _m) = (w.rows(), w.cols());
+        self.run_coded(w, hess, order).0
+    }
+
+    /// [`Gptq::run`] that also emits the integer code planes when the
+    /// active set covers every column (plain GPTQ; `None` under OWQ's
+    /// frozen fp16 columns, which have no codes).
+    fn run_coded(
+        &self,
+        w: &Tensor,
+        hess: &Tensor,
+        order: &[usize],
+    ) -> (Tensor, Option<IntCodes>) {
+        let (n, m) = (w.rows(), w.cols());
+        let full = order.len() == m;
         let k = order.len();
         // sub-Hessian over active columns, damped
         let mut h = Tensor::zeros(&[k, k]);
@@ -57,19 +82,29 @@ impl Gptq {
         let hinv = match spd_inverse(&h) {
             Ok(x) => x,
             Err(_) => {
-                // degenerate calibration: fall back to plain RTN
+                // degenerate calibration: fall back to plain RTN (over all
+                // columns, so the code planes are always complete here)
                 let mut out = w.clone();
                 let qmax = ((1u32 << self.bits) - 1) as f32;
+                let mut ic = IntCodes {
+                    codes: vec![0u16; n * m],
+                    row_scale: Vec::with_capacity(n),
+                    row_min: Vec::with_capacity(n),
+                };
                 for r in 0..n {
                     let row = out.row_mut(r);
                     let mn = row.iter().cloned().fold(f32::INFINITY, f32::min);
                     let mx =
                         row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    for x in row.iter_mut() {
-                        *x = quantize_scalar(*x, mn, mx, qmax);
+                    ic.row_scale.push(((mx - mn) / qmax).max(1e-8));
+                    ic.row_min.push(mn);
+                    for (j, x) in row.iter_mut().enumerate() {
+                        let (d, c) = quantize_scalar_coded(*x, mn, mx, qmax);
+                        *x = d;
+                        ic.codes[r * m + j] = c;
                     }
                 }
-                return out;
+                return (out, Some(ic));
             }
         };
         let l = match cholesky(&hinv) {
@@ -87,6 +122,7 @@ impl Gptq {
         }
         let mut work = w.clone();
         let mut out = w.clone();
+        let mut codes = vec![0u16; if full { n * m } else { 0 }];
         // iterate active columns; d = L[j][j] (diag of chol(H^-1)),
         // propagation coefficients L[j..][j] / d.
         for (j, &cj) in order.iter().enumerate() {
@@ -94,8 +130,11 @@ impl Gptq {
             for r in 0..n {
                 let (mn, mx) = grid[r];
                 let wv = work.at2(r, cj);
-                let q = quantize_scalar(wv, mn, mx, qmax);
+                let (q, code) = quantize_scalar_coded(wv, mn, mx, qmax);
                 *out.at2_mut(r, cj) = q;
+                if full {
+                    codes[r * m + cj] = code;
+                }
                 let err = (wv - q) / d;
                 // compensate the remaining active columns
                 for (j2, &cj2) in order.iter().enumerate().skip(j + 1) {
@@ -103,7 +142,15 @@ impl Gptq {
                 }
             }
         }
-        out
+        let ic = full.then(|| IntCodes {
+            codes,
+            row_scale: grid
+                .iter()
+                .map(|&(mn, mx)| ((mx - mn) / qmax).max(1e-8))
+                .collect(),
+            row_min: grid.iter().map(|&(mn, _)| mn).collect(),
+        });
+        (out, ic)
     }
 }
 
@@ -132,10 +179,22 @@ impl Quantizer for Gptq {
                 hess.at2(b, b).partial_cmp(&hess.at2(a, a)).unwrap()
             });
         }
+        let (deq, ic) = self.run_coded(w, &hess, &order);
+        let container = ic.map(|ic| {
+            std::sync::Arc::new(IntPacked::new(
+                &format!("gptq{}", self.bits),
+                self.bits,
+                ic.codes,
+                ic.row_scale,
+                ic.row_min,
+                &deq,
+            )) as crate::quant::ArcContainer
+        });
         QuantizedLinear {
-            deq: self.run(w, &hess, &order),
+            deq,
             scheme: BitScheme::Uniform { bits: self.bits as f64 },
             parts: None,
+            container,
         }
     }
 }
@@ -210,6 +269,8 @@ impl Quantizer for Owq {
             deq: gptq.run(w, &hess, &active), // frozen columns stay fp
             scheme: BitScheme::Owq { fp16_ratio: self.fp16_ratio },
             parts: None,
+            // no container: the frozen fp16 columns have no code plane
+            container: None,
         }
     }
 }

@@ -12,6 +12,7 @@
 pub mod awq;
 pub mod billm;
 pub mod binarize;
+pub mod container;
 pub mod gptq;
 pub mod omniquant;
 pub mod pbllm;
@@ -19,6 +20,8 @@ pub mod ptq161;
 pub mod quip;
 pub mod rtn;
 pub mod smoothquant;
+
+pub use container::{ArcContainer, PackedContainer, PackedModel};
 
 use crate::packing::bitwidth::BitScheme;
 use crate::tensor::Tensor;
@@ -141,6 +144,11 @@ pub struct QuantizedLinear {
     pub scheme: BitScheme,
     /// PTQ1.61 structured parts (None for baselines)
     pub parts: Option<Ptq161Parts>,
+    /// serve-ready packed container, built at quantization time with the
+    /// codes the method already computed (None for methods without a
+    /// container impl; PTQ1.61 packs from `parts` *after* block-wise
+    /// optimization instead, so it also stays None here)
+    pub container: Option<ArcContainer>,
 }
 
 impl QuantizedLinear {

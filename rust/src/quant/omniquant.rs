@@ -61,6 +61,7 @@ impl Quantizer for OmniQuantLite {
             deq,
             scheme: BitScheme::Uniform { bits: self.bits as f64 },
             parts: None,
+            container: None,
         }
     }
 }

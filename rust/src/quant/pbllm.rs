@@ -5,6 +5,8 @@
 
 use super::{LinearCalib, QuantizedLinear, Quantizer};
 use crate::packing::bitwidth::BitScheme;
+use crate::packing::BitVec;
+use crate::quant::container::PbLlmPacked;
 use crate::tensor::Tensor;
 
 #[derive(Debug, Clone, Copy)]
@@ -41,6 +43,13 @@ impl Quantizer for PbLlm {
             salient[i] = true;
         }
         let mut deq = Tensor::zeros(&[n, m]);
+        // packed planes, carried from this pass: compacted salient codes
+        // and non-salient sign bits in row-major walk order
+        let mut codes: Vec<u16> = Vec::with_capacity(k);
+        let mut sign_bools: Vec<bool> = Vec::with_capacity(total - k);
+        let mut row_scale = Vec::with_capacity(n);
+        let mut row_min = Vec::with_capacity(n);
+        let mut row_alpha = Vec::with_capacity(n);
         for r in 0..n {
             // 8-bit asymmetric grid over the salient entries of this row
             let row = w.row(r);
@@ -67,21 +76,39 @@ impl Quantizer for PbLlm {
             } else {
                 ns.iter().sum::<f32>() / ns.len() as f32
             };
+            row_scale.push(scale);
+            row_min.push(mn);
+            row_alpha.push(alpha);
             for c in 0..m {
                 let x = row[c];
                 deq.data[r * m + c] = if salient[r * m + c] {
-                    ((x - mn) / scale).round().clamp(0.0, 255.0) * scale + mn
-                } else if x >= 0.0 {
-                    alpha
+                    let q = ((x - mn) / scale).round().clamp(0.0, 255.0);
+                    codes.push(q as u16);
+                    q * scale + mn
                 } else {
-                    -alpha
+                    sign_bools.push(x >= 0.0);
+                    if x >= 0.0 {
+                        alpha
+                    } else {
+                        -alpha
+                    }
                 };
             }
         }
+        let container = PbLlmPacked::new(
+            &salient,
+            codes,
+            row_scale,
+            row_min,
+            row_alpha,
+            BitVec::from_bools(&sign_bools),
+            &deq,
+        );
         QuantizedLinear {
             deq,
             scheme: BitScheme::PbLlm { salient_ratio: self.salient_ratio },
             parts: None,
+            container: Some(std::sync::Arc::new(container)),
         }
     }
 }

@@ -16,7 +16,10 @@ use crate::packing::bitwidth::BitScheme;
 use crate::tensor::Tensor;
 
 pub use mask::{structured_mask, MaskCriterion};
-pub use packed::{parts_storage_bits, PackedLinear, PackedModel};
+pub use packed::{parts_storage_bits, PackedLinear};
+// back-compat: the model-level container moved to the method-agnostic
+// `quant::container` in the PackedContainer refactor
+pub use crate::quant::container::PackedModel;
 pub use scaling::initial_parts;
 
 #[derive(Debug, Clone, Copy)]
@@ -66,6 +69,9 @@ impl Quantizer for Ptq161 {
             deq: parts.dequantize(),
             scheme: BitScheme::Ptq161 { salient_ratio: self.salient_ratio },
             parts: Some(parts),
+            // packed after block-wise optimization (PackedModel::pack),
+            // not here — a container built now would go stale
+            container: None,
         }
     }
 }

@@ -8,12 +8,19 @@
 //! every decode step. This module closes that gap: [`PackedLinear`] packs
 //! one [`Ptq161Parts`] into sign [`BitVec`]s, a salient [`NibbleVec`] with
 //! per-column `(scale, min)` pairs, the channel-mask bitmap, and the fp
-//! scaling vectors; [`PackedModel`] holds one such container per block
-//! linear and is built **once** at engine construction. The decode-time
-//! contraction (`runtime::autodiff::packed_qlinear_fwd`) then runs
-//! directly on these containers — ±1 accumulation over sign words, nibble
-//! decode fused into the salient dot product — with zero per-step weight
-//! reconstruction.
+//! scaling vectors; the method-agnostic
+//! [`crate::quant::container::PackedModel`] holds one such container per
+//! block linear and is built **once** at engine construction. The
+//! decode-time contraction (`runtime::autodiff::packed_qlinear_fwd`) then
+//! runs directly on these containers — ±1 accumulation over sign words,
+//! nibble decode fused into the salient dot product — with zero per-step
+//! weight reconstruction. [`PackedLinear`] implements
+//! [`crate::quant::PackedContainer`], the trait the serve engine
+//! dispatches on; note its kernel re-associates the float accumulation
+//! (sign words first, salient nibbles second), so unlike the baseline
+//! containers it is *token*-identical to the dense backend (gated in
+//! `tests/packed_serve.rs` / `tests/multi_worker.rs`) rather than
+//! bit-identical per linear.
 //!
 //! Packing is lossless: [`PackedLinear::unpack`] reproduces the source
 //! parts bit-for-bit (gated in `tests/packed_serve.rs`), because the INT4
@@ -330,65 +337,33 @@ fn requantize_salient(w_sal: &Tensor, sal_cols: &[u32]) -> SalientQuant {
     crate::quant::rtn::quant4_columns_coded(w_sal, &mask).1
 }
 
-/// A whole model's packed block linears: `layers[l]` holds one
-/// [`PackedLinear`] per entry of [`crate::model::LINEARS`], in order.
-/// Built once from the quantizer's parts (engine construction, bench
-/// setup) and then read-only for the life of the serve run.
-#[derive(Debug, Clone)]
-pub struct PackedModel {
-    /// per layer, per block linear (LINEARS order)
-    pub layers: Vec<Vec<PackedLinear>>,
-}
-
-impl PackedModel {
-    /// Pack every layer's parts (the same `[layer][linear]` nesting the
-    /// fused eval path consumes).
-    pub fn pack(parts: &[Vec<Ptq161Parts>]) -> PackedModel {
-        PackedModel {
-            layers: parts
-                .iter()
-                .map(|layer| layer.iter().map(PackedLinear::pack).collect())
-                .collect(),
-        }
+impl crate::quant::PackedContainer for PackedLinear {
+    fn method(&self) -> &str {
+        "ptq161"
     }
 
-    /// Number of packed transformer layers.
-    pub fn n_layers(&self) -> usize {
-        self.layers.len()
+    fn out(&self) -> usize {
+        self.out
     }
 
-    /// Total stored bits across all packed linears (paper accounting).
-    pub fn storage_bits(&self) -> u64 {
-        self.layers
-            .iter()
-            .flatten()
-            .map(PackedLinear::storage_bits)
-            .sum()
+    fn inn(&self) -> usize {
+        self.inn
     }
 
-    /// Total quantized weight count across all packed linears.
-    pub fn weights(&self) -> u64 {
-        self.layers
-            .iter()
-            .flatten()
-            .map(|p| (p.out() * p.inn()) as u64)
-            .sum()
+    fn storage_bits(&self) -> u64 {
+        PackedLinear::storage_bits(self)
     }
 
-    /// Model-wide effective bits per weight, mask and scaling overheads
-    /// included.
-    pub fn effective_bits(&self) -> f64 {
-        self.storage_bits() as f64 / self.weights().max(1) as f64
+    fn resident_bytes(&self) -> usize {
+        PackedLinear::resident_bytes(self)
     }
 
-    /// Resident heap bytes of every packed container (serve-metrics
-    /// memory accounting).
-    pub fn resident_bytes(&self) -> usize {
-        self.layers
-            .iter()
-            .flatten()
-            .map(PackedLinear::resident_bytes)
-            .sum()
+    fn decode_fwd(&self, x: &Tensor) -> Tensor {
+        crate::runtime::autodiff::packed_qlinear_fwd(x, self)
+    }
+
+    fn dequantize(&self) -> Tensor {
+        self.unpack().dequantize()
     }
 }
 
@@ -474,20 +449,28 @@ mod tests {
 
     #[test]
     fn model_accounting_sums_layers() {
+        use crate::quant::container::PackedModel;
         let parts = vec![
             vec![demo_parts(12, 16, 75), demo_parts(12, 16, 76)],
             vec![demo_parts(12, 16, 77), demo_parts(12, 16, 78)],
         ];
         let pm = PackedModel::pack(&parts);
+        assert_eq!(pm.method(), "ptq161");
         assert_eq!(pm.n_layers(), 2);
         assert_eq!(pm.weights(), 4 * 12 * 16);
-        let per: u64 = pm
-            .layers
-            .iter()
-            .flatten()
-            .map(PackedLinear::storage_bits)
-            .sum();
+        let per: u64 =
+            pm.layers.iter().flatten().map(|c| c.storage_bits()).sum();
         assert_eq!(pm.storage_bits(), per);
         assert!(pm.effective_bits() > 1.0);
+    }
+
+    #[test]
+    fn trait_dequantize_matches_parts_dequantize() {
+        use crate::quant::PackedContainer;
+        let p = demo_parts(16, 24, 80);
+        let packed = PackedLinear::pack(&p);
+        let via_trait = PackedContainer::dequantize(&packed);
+        assert_eq!(via_trait.data, p.dequantize().data);
+        assert_eq!(PackedContainer::method(&packed), "ptq161");
     }
 }

@@ -70,6 +70,7 @@ impl Quantizer for QuipLite {
             deq,
             scheme: BitScheme::Uniform { bits: self.bits as f64 },
             parts: None,
+            container: None,
         }
     }
 }

@@ -4,11 +4,26 @@
 
 use super::{LinearCalib, QuantizedLinear, Quantizer, SalientQuant};
 use crate::packing::bitwidth::BitScheme;
+use crate::quant::container::IntPacked;
 use crate::tensor::Tensor;
 
 /// Quantize one row to `bits` asymmetric with a clip factor on the range;
 /// returns the dequantized row in place.
 pub fn rtn_row(row: &mut [f32], bits: u32, clip: f32) {
+    let mut codes = Vec::new();
+    rtn_row_coded(row, bits, clip, &mut codes);
+}
+
+/// [`rtn_row`] that also emits the integer codes and the `(scale, min)`
+/// affine pair they decode with — the bit-exact source for the packed
+/// [`crate::quant::container::IntPacked`] container (the dequantized row
+/// is exactly `code * scale + min` elementwise).
+pub fn rtn_row_coded(
+    row: &mut [f32],
+    bits: u32,
+    clip: f32,
+    codes: &mut Vec<u16>,
+) -> (f32, f32) {
     let qmax = ((1u32 << bits) - 1) as f32;
     let mn0 = row.iter().cloned().fold(f32::INFINITY, f32::min);
     let mx0 = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -20,8 +35,10 @@ pub fn rtn_row(row: &mut [f32], bits: u32, clip: f32) {
     let scale = ((mx - mn) / qmax).max(1e-8);
     for x in row.iter_mut() {
         let q = ((*x - mn) / scale).round().clamp(0.0, qmax);
+        codes.push(q as u16);
         *x = q * scale + mn;
     }
+    (scale, mn)
 }
 
 /// Dense per-row RTN dequantized copy.
@@ -88,10 +105,29 @@ impl Quantizer for Rtn {
     }
 
     fn quantize_linear(&self, w: &Tensor, _calib: &LinearCalib) -> QuantizedLinear {
+        let mut deq = w.clone();
+        let n = deq.rows();
+        let mut codes = Vec::with_capacity(n * deq.cols());
+        let mut row_scale = Vec::with_capacity(n);
+        let mut row_min = Vec::with_capacity(n);
+        for r in 0..n {
+            let (scale, mn) = rtn_row_coded(deq.row_mut(r), self.bits, 1.0, &mut codes);
+            row_scale.push(scale);
+            row_min.push(mn);
+        }
+        let container = IntPacked::new(
+            &format!("rtn{}", self.bits),
+            self.bits,
+            codes,
+            row_scale,
+            row_min,
+            &deq,
+        );
         QuantizedLinear {
-            deq: rtn_dense(w, self.bits, 1.0),
+            deq,
             scheme: BitScheme::Uniform { bits: self.bits as f64 },
             parts: None,
+            container: Some(std::sync::Arc::new(container)),
         }
     }
 }

@@ -18,13 +18,13 @@
 use anyhow::{bail, Result};
 
 use super::autodiff::{
-    attn_decode, linear_fwd, packed_qlinear_fwd, qlinear_fwd, rmsnorm_fwd,
-    rope_at, silu_mul_fwd, NodeId, Tape, ROPE_THETA,
+    attn_decode, linear_fwd, qlinear_fwd, rmsnorm_fwd, rope_at, silu_mul_fwd,
+    NodeId, Tape, ROPE_THETA,
 };
 use super::manifest::{ArtifactSpec, ModelConfig};
 use super::Value;
 use crate::model::LINEARS;
-use crate::quant::ptq161::PackedLinear;
+use crate::quant::{ArcContainer, PackedContainer};
 use crate::tensor::Tensor;
 
 /// Offsets of the 7 block linears inside the 9-tensor block parameter list
@@ -137,8 +137,9 @@ enum LinFwd<'a> {
     },
     /// SmoothQuant W4A4 fake-quant linear.
     W4A4 { w: &'a Tensor, smooth: &'a Tensor },
-    /// PTQ1.61 prepared packed container (no per-step reconstruction).
-    Packed(&'a PackedLinear),
+    /// Prepared packed container, any method (no per-step reconstruction;
+    /// the container's own decode kernel runs).
+    Packed(&'a dyn PackedContainer),
 }
 
 fn apply_lin_fwd(x: &Tensor, lin: &LinFwd) -> Tensor {
@@ -148,7 +149,7 @@ fn apply_lin_fwd(x: &Tensor, lin: &LinFwd) -> Tensor {
             qlinear_fwd(x, a_s, r1, r2, mu, w_sal, sign)
         }
         LinFwd::W4A4 { w, smooth } => w4a4_linear(x, w, smooth),
-        LinFwd::Packed(pl) => packed_qlinear_fwd(x, pl),
+        LinFwd::Packed(c) => c.decode_fwd(x),
     }
 }
 
@@ -210,12 +211,12 @@ fn block_decode(
 }
 
 /// One transformer block over new positions with every linear served from
-/// its prepared [`PackedLinear`] container — the packed-backend entry the
-/// pipeline calls directly (packed containers are host structures, not
-/// manifest `Value`s, so this path bypasses the artifact marshalling; the
-/// attention/norm/residual kernels and their ordering are exactly
-/// `block_decode`'s). `layer` holds one container per block linear in
-/// `LINEARS` order.
+/// its prepared [`PackedContainer`] — the packed-backend entry the
+/// pipeline calls directly, for any method with a container impl (packed
+/// containers are host structures, not manifest `Value`s, so this path
+/// bypasses the artifact marshalling; the attention/norm/residual kernels
+/// and their ordering are exactly `block_decode`'s). `layer` holds one
+/// container per block linear in `LINEARS` order.
 pub fn packed_block_decode(
     cfg: &ModelConfig,
     h_new: &Tensor,
@@ -224,7 +225,7 @@ pub fn packed_block_decode(
     lens: &[usize],
     attn_norm: &Tensor,
     mlp_norm: &Tensor,
-    layer: &[PackedLinear],
+    layer: &[ArcContainer],
 ) -> Result<Vec<Tensor>> {
     if layer.len() != LINEARS.len() {
         bail!(
@@ -233,7 +234,8 @@ pub fn packed_block_decode(
             LINEARS.len()
         );
     }
-    let lins: Vec<LinFwd> = layer.iter().map(LinFwd::Packed).collect();
+    let lins: Vec<LinFwd> =
+        layer.iter().map(|c| LinFwd::Packed(c.as_ref())).collect();
     block_decode(cfg, h_new, k_cache, v_cache, lens, attn_norm, mlp_norm, &lins)
 }
 
@@ -658,8 +660,10 @@ mod tests {
                 initial_parts(&w, &mask)
             })
             .collect();
-        let packed: Vec<PackedLinear> =
-            parts.iter().map(PackedLinear::pack).collect();
+        let packed: Vec<ArcContainer> = parts
+            .iter()
+            .map(|p| std::sync::Arc::new(PackedLinear::pack(p)) as ArcContainer)
+            .collect();
         let lens = vec![0usize; b];
         let vecs: Vec<(Tensor, Tensor, Tensor, Tensor)> = parts
             .iter()

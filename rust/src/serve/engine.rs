@@ -236,7 +236,11 @@ impl<'a> Engine<'a> {
             );
         }
         if let Some(pm) = self.model.packed() {
-            metrics.set_packed_model(pm.resident_bytes(), pm.effective_bits());
+            metrics.set_packed_model(
+                pm.method(),
+                pm.resident_bytes(),
+                pm.effective_bits(),
+            );
         }
     }
 

@@ -134,6 +134,10 @@ pub struct MetricsRegistry {
     /// the queue head's reservation (one per engine step spent waiting,
     /// so the count also measures how long backpressure lasted)
     pub kv_backpressure_events: usize,
+    /// quantization method the packed containers encode (packed backend
+    /// only — "ptq161", "billm", "rtn2", ... as labeled by the
+    /// [`crate::quant::PackedModel`])
+    pub packed_method: Option<String>,
     /// resident bytes of the prepared packed model (packed backend only)
     pub packed_model_bytes: Option<usize>,
     /// measured effective bits/weight of the packed containers
@@ -176,6 +180,7 @@ impl MetricsRegistry {
             prefill_positions: 0,
             prefix_reused_positions: 0,
             kv_backpressure_events: 0,
+            packed_method: None,
             packed_model_bytes: None,
             packed_bits_per_weight: None,
             workers: None,
@@ -234,9 +239,15 @@ impl MetricsRegistry {
         self.prefix_reused_positions as f64 / self.prefill_positions as f64
     }
 
-    /// Record the packed model's resident bytes and measured effective
-    /// bits/weight (packed backend only).
-    pub fn set_packed_model(&mut self, bytes: usize, bits_per_weight: f64) {
+    /// Record the packed model's quantization method, resident bytes and
+    /// measured effective bits/weight (packed backend only).
+    pub fn set_packed_model(
+        &mut self,
+        method: &str,
+        bytes: usize,
+        bits_per_weight: f64,
+    ) {
+        self.packed_method = Some(method.to_string());
         self.packed_model_bytes = Some(bytes);
         self.packed_bits_per_weight = Some(bits_per_weight);
     }
@@ -390,6 +401,7 @@ impl MetricsRegistry {
             }
             if out.packed_model_bytes.is_none() {
                 // one packed model shared by every worker: count it once
+                out.packed_method = m.packed_method.clone();
                 out.packed_model_bytes = m.packed_model_bytes;
                 out.packed_bits_per_weight = m.packed_bits_per_weight;
             }
@@ -491,6 +503,9 @@ impl MetricsRegistry {
         }
         if let Some(n) = self.kv_page_allocs {
             fields.push(("kv_page_allocs", num(n as f64)));
+        }
+        if let Some(pm) = &self.packed_method {
+            fields.push(("packed_method", s(pm)));
         }
         if let Some(n) = self.packed_model_bytes {
             fields.push(("packed_model_bytes", num(n as f64)));
@@ -621,9 +636,13 @@ mod tests {
         let mut m = MetricsRegistry::new("mem");
         m.set_backend("packed");
         m.set_kv_paging(4096, 512, 16, 8, 3, 6);
-        m.set_packed_model(4096, 1.61);
+        m.set_packed_model("ptq161", 4096, 1.61);
         let back = Json::parse(&m.snapshot().dump()).unwrap();
         assert_eq!(back.get("backend").and_then(Json::as_str), Some("packed"));
+        assert_eq!(
+            back.get("packed_method").and_then(Json::as_str),
+            Some("ptq161")
+        );
         assert_eq!(
             back.get("kv_reserved_bytes").and_then(Json::as_usize),
             Some(4096)
@@ -649,6 +668,7 @@ mod tests {
         let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
         assert!(empty.get("backend").is_none());
         assert!(empty.get("kv_reserved_bytes").is_none());
+        assert!(empty.get("packed_method").is_none());
         assert!(empty.get("packed_model_bytes").is_none());
     }
 

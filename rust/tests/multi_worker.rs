@@ -12,7 +12,7 @@ use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::model::{Params, LINEARS};
 use ptq161::quant::ptq161::{initial_parts, PackedModel};
-use ptq161::quant::Ptq161Parts;
+use ptq161::quant::{by_name, LinearCalib, Ptq161Parts};
 use ptq161::runtime::kv::PrefixRouter;
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::{Batcher, ShardedQueue};
@@ -20,7 +20,9 @@ use ptq161::serve::{
     place_request, run_sharded, Engine, EngineCfg, GenRequest,
     MetricsRegistry, ShardRun, ShardSpec,
 };
+use ptq161::tensor::Tensor;
 use ptq161::util::json::Json;
+use ptq161::util::rng::Rng;
 
 /// PTQ1.61 parts for every linear with a fixed structured mask.
 fn fused_parts(params: &Params, pipe: &Pipeline) -> Vec<Vec<Ptq161Parts>> {
@@ -118,6 +120,67 @@ fn responses_identical_across_worker_counts_and_backends() {
             assert_eq!(
                 texts, base,
                 "{name}/w{workers}: tokens diverge from single-loop engine"
+            );
+        }
+    }
+}
+
+/// Quantize every block linear with `method` (synthetic calibration) into
+/// a dense-baseline params clone plus the prepared container model.
+fn quantized_model(
+    pipe: &Pipeline,
+    params: &Params,
+    method: &str,
+    seed: u64,
+) -> (Params, PackedModel) {
+    let mut rng = Rng::new(seed);
+    let q = by_name(method).unwrap();
+    let mut dense = params.clone();
+    let mut layers = Vec::new();
+    for l in 0..pipe.cfg.n_layers {
+        let mut layer = Vec::new();
+        for lin in LINEARS {
+            let name = format!("l{l}.{lin}");
+            let w = params.get(&name);
+            let inn = w.cols();
+            let x = Tensor::randn(&[2 * inn, inn], 1.0, &mut rng);
+            let mut calib = LinearCalib::empty(inn);
+            calib.accumulate(&x, true);
+            let ql = q.quantize_linear(w, &calib);
+            *dense.get_mut(&name) = ql.deq;
+            layer.push(ql.container.unwrap_or_else(|| {
+                panic!("{method} must emit a container for {name}")
+            }));
+        }
+        layers.push(layer);
+    }
+    (dense, PackedModel::from_containers(method, &layers))
+}
+
+#[test]
+fn cross_method_packed_identical_across_worker_counts() {
+    // Non-PTQ1.61 containers through the sharded engine: the packed
+    // backend must stay byte-identical to the dense single-loop baseline
+    // for every worker count, over the shared-prefix workload (exercises
+    // prefix-page adoption against the rank-scan/group-bit decode paths).
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(95);
+    let reqs = micro_requests();
+    for method in ["billm", "pbllm"] {
+        let (dense, packed) = quantized_model(&pipe, &params, method, 96);
+        let base = baseline(&pipe, &ModelEval::Dense(&dense), &reqs);
+        let pe = ModelEval::Packed { params: &dense, packed: &packed };
+        for workers in [1usize, 2] {
+            let run = sharded(&pipe, &pe, &reqs, workers, None, None);
+            assert_eq!(run.worker_panics, 0, "{method}/w{workers}: panicked");
+            assert!(run.failed_requests.is_empty());
+            assert_eq!(run.responses.len(), reqs.len());
+            let texts: Vec<String> =
+                run.responses.into_iter().map(|r| r.text).collect();
+            assert_eq!(
+                texts, base,
+                "{method}/w{workers}: packed shards diverge from dense"
             );
         }
     }

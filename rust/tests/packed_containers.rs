@@ -1,0 +1,173 @@
+//! Property-based pack/unpack round-trip suite for every
+//! [`PackedContainer`] implementation (tier-1, no artifacts needed).
+//!
+//! For random shapes, masks and scales the packed planes must reconstruct
+//! the quantizer's dense dequantized weight **bit-exactly**, and the
+//! container's `decode_fwd` must be bit-identical to the dense
+//! `linear_fwd` over the dequantized weight — the identity invariant that
+//! lets `--backend packed` serve byte-identical tokens to
+//! `--backend dense` for every method. Failures shrink to a minimized
+//! (shape, seed) counterexample via `util::proptest`.
+//!
+//! PTQ1.61's `PackedLinear` is round-tripped on its own contract (lossless
+//! plane reconstruction; its kernel re-associates, so token identity is
+//! gated at the engine level in `tests/packed_serve.rs`).
+
+use ptq161::quant::ptq161::{initial_parts, PackedLinear};
+use ptq161::quant::{by_name, ArcContainer, LinearCalib, PackedContainer};
+use ptq161::runtime::autodiff::linear_fwd;
+use ptq161::tensor::Tensor;
+use ptq161::util::proptest::check;
+use ptq161::util::rng::Rng;
+
+/// Random weight + calibration with hot channels and enough rows for a
+/// full-rank Hessian (GPTQ, BiLLM consume it; the rest ignore it).
+fn demo_linear(out: usize, inn: usize, seed: u64) -> (Tensor, LinearCalib) {
+    let mut rng = Rng::new(seed);
+    let w = Tensor::randn(&[out, inn], 0.1, &mut rng);
+    let rows = 4 * inn;
+    let mut x = Tensor::randn(&[rows, inn], 1.0, &mut rng);
+    for r in 0..rows {
+        for j in 0..inn.div_ceil(8) {
+            *x.at2_mut(r, j * 8) *= 6.0; // hot channels
+        }
+    }
+    let mut calib = LinearCalib::empty(inn);
+    calib.accumulate(&x, true);
+    (w, calib)
+}
+
+/// Quantize one linear with `method` and return (dense dequant, container).
+fn quantize(method: &str, out: usize, inn: usize, seed: u64) -> (Tensor, ArcContainer) {
+    let (w, calib) = demo_linear(out, inn, seed);
+    let q = by_name(method).unwrap().quantize_linear(&w, &calib);
+    let c = q
+        .container
+        .clone()
+        .unwrap_or_else(|| panic!("{method} must emit a container"));
+    (q.deq, c)
+}
+
+/// Shapes stay small (quantizing with a Hessian is O(inn^3) for GPTQ) but
+/// cover the interesting boundaries: single row/column, non-multiple-of-64
+/// plane lengths, out > inn and inn > out.
+fn gen_case(r: &mut Rng) -> ((usize, usize), usize) {
+    ((1 + r.below(10), 1 + r.below(24)), r.below(1 << 16))
+}
+
+/// The shared property: bit-exact dequantize round-trip, bit-identical
+/// decode_fwd vs the dense kernel, and shape/effective-bits consistency.
+fn container_round_trip(method: &'static str) -> impl Fn(&((usize, usize), usize)) -> Result<(), String> {
+    move |&((out, inn), seed)| {
+        let (deq, c) = quantize(method, out, inn, seed as u64);
+        if (c.out(), c.inn()) != (out, inn) {
+            return Err(format!("{method}: shape ({},{})", c.out(), c.inn()));
+        }
+        if c.method() != method {
+            return Err(format!("{method}: labeled {}", c.method()));
+        }
+        let back = c.dequantize();
+        for (i, (a, b)) in back.data.iter().zip(&deq.data).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "{method}: dequantize not bit-exact at flat {i}: {a} vs {b}"
+                ));
+            }
+        }
+        // decode_fwd must associate exactly like the dense kernel
+        let mut rng = Rng::new(seed as u64 ^ 0x5EED);
+        let x = Tensor::randn(&[2, 3, inn], 1.0, &mut rng);
+        let want = linear_fwd(&x, &deq);
+        let got = c.decode_fwd(&x);
+        if got.shape != want.shape {
+            return Err(format!("{method}: decode shape {:?}", got.shape));
+        }
+        for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "{method}: decode_fwd differs from dense at flat {i}: {a} vs {b}"
+                ));
+            }
+        }
+        let eff = c.effective_bits();
+        let expect = c.storage_bits() as f64 / (out * inn) as f64;
+        if (eff - expect).abs() > 1e-12 {
+            return Err(format!("{method}: effective_bits {eff} vs {expect}"));
+        }
+        Ok(())
+    }
+}
+
+#[test]
+fn prop_rtn_container_round_trips() {
+    check("rtn2-container", 8, gen_case, container_round_trip("rtn2"));
+}
+
+#[test]
+fn prop_gptq_container_round_trips() {
+    check("gptq2-container", 8, gen_case, container_round_trip("gptq2"));
+}
+
+#[test]
+fn prop_pbllm_container_round_trips() {
+    check("pbllm-container", 8, gen_case, container_round_trip("pbllm"));
+}
+
+#[test]
+fn prop_billm_container_round_trips() {
+    check("billm-container", 8, gen_case, container_round_trip("billm"));
+}
+
+#[test]
+fn prop_ptq161_packed_linear_round_trips() {
+    // PTQ1.61's container packs from structured parts: random structured
+    // masks and learned-looking scales must round-trip losslessly through
+    // the sign/INT4 planes, and the trait dequantize must equal the
+    // parts' own dequantize bit-for-bit.
+    check(
+        "ptq161-packed-linear",
+        8,
+        gen_case,
+        |&((out, inn), seed)| {
+            let mut rng = Rng::new(seed as u64);
+            let w = Tensor::randn(&[out, inn], 0.1, &mut rng);
+            let mask: Vec<bool> = (0..inn).map(|_| rng.f32() < 0.25).collect();
+            let mut p = initial_parts(&w, &mask);
+            for v in p.alpha_r1.iter_mut() {
+                *v = 1.0 + 0.05 * rng.normal();
+            }
+            for v in p.alpha_r2.iter_mut() {
+                *v = 1.0 + 0.05 * rng.normal();
+            }
+            let packed = PackedLinear::pack(&p);
+            let back = packed.unpack();
+            if back.mask != p.mask {
+                return Err("mask plane".into());
+            }
+            if back.w_sal.data != p.w_sal.data {
+                return Err("w_sal plane".into());
+            }
+            if back.sign_ns.data != p.sign_ns.data {
+                return Err("sign plane".into());
+            }
+            if back.alpha_s != p.alpha_s
+                || back.alpha_r1 != p.alpha_r1
+                || back.alpha_r2 != p.alpha_r2
+                || back.mu != p.mu
+            {
+                return Err("scaling vectors".into());
+            }
+            let want = p.dequantize();
+            let got = PackedContainer::dequantize(&packed);
+            for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("dequantize at flat {i}: {a} vs {b}"));
+                }
+            }
+            if PackedContainer::method(&packed) != "ptq161" {
+                return Err("method label".into());
+            }
+            Ok(())
+        },
+    );
+}

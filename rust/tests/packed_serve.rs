@@ -13,7 +13,7 @@ use ptq161::coordinator::Pipeline;
 use ptq161::eval::ModelEval;
 use ptq161::model::{Params, LINEARS};
 use ptq161::quant::ptq161::{initial_parts, PackedLinear, PackedModel};
-use ptq161::quant::Ptq161Parts;
+use ptq161::quant::{by_name, LinearCalib, Ptq161Parts};
 use ptq161::runtime::autodiff::{
     packed_qlinear_fwd, packed_qlinear_fwd_scalar, qlinear_fwd,
     qlinear_weight_reconstructions,
@@ -190,6 +190,83 @@ fn packed_engine_token_identical_with_zero_reconstructions() {
     }
 }
 
+/// Quantize every block linear with `method` (synthetic calibration),
+/// writing each dense dequantized weight back into a params clone (the
+/// dense baseline the packed run must match byte-for-byte) and collecting
+/// the emitted containers into a prepared [`PackedModel`].
+fn quantized_model(
+    pipe: &Pipeline,
+    params: &Params,
+    method: &str,
+    seed: u64,
+) -> (Params, PackedModel) {
+    let mut rng = Rng::new(seed);
+    let q = by_name(method).unwrap();
+    let mut dense = params.clone();
+    let mut layers = Vec::new();
+    for l in 0..pipe.cfg.n_layers {
+        let mut layer = Vec::new();
+        for lin in LINEARS {
+            let name = format!("l{l}.{lin}");
+            let w = params.get(&name);
+            let inn = w.cols();
+            let x = Tensor::randn(&[2 * inn, inn], 1.0, &mut rng);
+            let mut calib = LinearCalib::empty(inn);
+            calib.accumulate(&x, true);
+            let ql = q.quantize_linear(w, &calib);
+            *dense.get_mut(&name) = ql.deq;
+            layer.push(ql.container.unwrap_or_else(|| {
+                panic!("{method} must emit a container for {name}")
+            }));
+        }
+        layers.push(layer);
+    }
+    (dense, PackedModel::from_containers(method, &layers))
+}
+
+#[test]
+fn cross_method_packed_token_identical_to_dense() {
+    // The tentpole invariant, per method: serving from prepared containers
+    // must decode byte-identical tokens to the dense dequantized weights,
+    // with zero per-step dense-weight reconstructions. Holds by
+    // construction because every container's decode kernel accumulates in
+    // the dense kernel's exact order (gated per-op by the property suite
+    // in tests/packed_containers.rs; this gates the end-to-end engine).
+    let _g = QLINEAR_LOCK.lock().unwrap();
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(71);
+    for (i, method) in ["rtn2", "gptq2", "pbllm", "billm"].iter().enumerate() {
+        let (dense, packed) =
+            quantized_model(&pipe, &params, method, 72 + i as u64);
+        assert_eq!(packed.method(), *method);
+        let bits = packed.effective_bits();
+        assert!(
+            bits > 1.0 && bits < 16.0,
+            "{method}: implausible bits/weight {bits}"
+        );
+        let de = ModelEval::Dense(&dense);
+        let pe = ModelEval::Packed { params: &dense, packed: &packed };
+        let dense_out = run_workload(&pipe, &de);
+        let p0 = qlinear_weight_reconstructions();
+        let packed_out = run_workload(&pipe, &pe);
+        assert_eq!(
+            qlinear_weight_reconstructions() - p0,
+            0,
+            "{method}: packed decode must never reconstruct dense weights"
+        );
+        assert_eq!(dense_out.len(), packed_out.len());
+        for (d, p) in dense_out.iter().zip(&packed_out) {
+            assert_eq!(d.id, p.id);
+            assert_eq!(
+                d.text, p.text,
+                "{method}: request {} tokens diverge from dense",
+                d.id
+            );
+        }
+    }
+}
+
 #[test]
 fn packed_engine_exports_memory_accounting() {
     let rt = Runtime::native();
@@ -223,6 +300,7 @@ fn packed_engine_exports_memory_accounting() {
         live > 0 && live < metrics.kv_reserved_bytes.unwrap(),
         "live occupancy {live} must undershoot the reserved pool"
     );
+    assert_eq!(metrics.packed_method.as_deref(), Some("ptq161"));
     assert_eq!(
         metrics.packed_model_bytes,
         Some(packed.resident_bytes())
