@@ -29,6 +29,7 @@ BASELINE = {
         "pbllm": {"bits_per_weight": 3.0215},
         "billm": {"bits_per_weight": 3.4286},
     },
+    "p99_itl_overload_ratio": 0.75,
 }
 
 
@@ -107,6 +108,19 @@ def test_cross_method_identity_drop_fails():
     del fresh["cross_method"]
     failures = check_bench.run_check(BASELINE, fresh)
     assert any("missing from fresh" in f for f in failures)
+
+
+def test_overload_itl_ratio_band():
+    # the overload ratio is "lower is better": chunked prefill losing its
+    # tail-latency win (ratio drifting toward 1.0) must trip the gate,
+    # while jitter inside the 20% band must not
+    fresh = fresh_like_baseline()
+    fresh["p99_itl_overload_ratio"] = 0.88  # within 0.75 * 1.2
+    assert check_bench.run_check(BASELINE, fresh) == []
+    fresh["p99_itl_overload_ratio"] = 0.95  # past the band
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "p99_itl_overload_ratio" in failures[0]
 
 
 def test_missing_key_fails():

@@ -22,6 +22,12 @@ metric regresses beyond the tolerance band:
   byte-identical tokens to its dense baseline; higher is better (the
   bench aborts on divergence, so this also guards against the section
   being dropped from the summary).
+* ``p99_itl_overload_ratio`` — p99 inter-token latency of the overload
+  workload with chunked prefill + preemption on over the same workload
+  with both off, lower is better.  Chunking bounds per-step prefill
+  work, so the ratio sits well below 1.0; a scheduler change that lets
+  monolithic stalls (or long preemption park times) back into the tail
+  moves it up immediately.
 
 Only ratios, rates and storage accounting are gated — absolute step
 times depend on the runner and would make the gate flaky (the per-method
@@ -47,6 +53,7 @@ CHECKS = [
     ("cross_method.pbllm.bits_per_weight", "lower"),
     ("cross_method.billm.bits_per_weight", "lower"),
     ("cross_method.identity", "higher"),
+    ("p99_itl_overload_ratio", "lower"),
 ]
 
 # below this core count the scaling factor is hardware-bound, not a

@@ -37,6 +37,16 @@
 //! with measured bits/weight and the packed/dense step ratio reported
 //! under a `cross_method` summary section.
 //!
+//! Part 7 is the overload section: a mixed long/short workload where
+//! every third prompt spans several pages. With the scheduler levers
+//! off, each long prompt prefills in one monolithic step and stalls
+//! every decoding lane for its full duration; with chunked prefill (and
+//! preemption armed) the per-step prefill work is bounded, so p99
+//! inter-token latency must improve at byte-identical tokens. A third
+//! run repeats the workload against an undersized page pool to prove
+//! lane preemption actually fires, restores recompute their positions,
+//! and the tokens still match.
+//!
 //! The whole run's summary is also written as machine-readable JSON to
 //! `runs/BENCH_serve.json` (mean step ms per backend, packed/fused step
 //! ratio, KV live/reserved bytes, prefix-hit rate, worker-scaling
@@ -122,6 +132,32 @@ fn quantized_model(
         layers.push(layer);
     }
     (dense, PackedModel::from_containers(method, &layers))
+}
+
+/// Overload leg: single-loop serve with explicit scheduler levers and an
+/// optional explicit page pool. Returns metrics plus texts ordered by id.
+fn run_overload(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    reqs: &[GenRequest],
+    label: &str,
+    kv_pages: Option<usize>,
+    chunk: Option<usize>,
+    preempt: bool,
+) -> (MetricsRegistry, Vec<String>) {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new(label);
+    let mut engine = Engine::with_cache_geometry(pipe, model, 16, kv_pages);
+    engine.cfg.prefill_chunk = chunk;
+    engine.cfg.preempt = preempt;
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    assert_eq!(resps.len(), reqs.len(), "{label}: lost requests");
+    assert_eq!(engine.kv_cache().in_use_count(), 0, "{label}: leaked slots");
+    resps.sort_by_key(|r| r.id);
+    (metrics, resps.into_iter().map(|r| r.text).collect())
 }
 
 fn mean(xs: &[f64]) -> f64 {
@@ -489,6 +525,80 @@ fn main() {
     xm_fields.push(("identity", num(1.0)));
     println!("token-identical across all packed methods: ok");
 
+    // ---- part 7: overload — preemption + chunked prefill ----------------
+    // mixed long/short: every third prompt spans several pages, shorts
+    // decode long enough that a monolithic prefill stall lands in their
+    // inter-token gaps. Same workload three ways: levers off, levers on
+    // (the p99 ITL comparison), and levers on against an undersized
+    // 12-page pool where admission is only possible by evicting a lane
+    let overload_reqs: Vec<GenRequest> = (0..24)
+        .map(|i| {
+            if i % 3 == 2 {
+                GenRequest {
+                    prompt: format!(
+                        "SYSTEM: request {i} files the complete valley \
+                         ledger, every entry of the season recited in full \
+                         order"
+                    ),
+                    max_new_tokens: 8,
+                }
+            } else {
+                GenRequest { prompt: format!("q{i}"), max_new_tokens: 24 }
+            }
+        })
+        .collect();
+    println!(
+        "\n# overload: preemption + chunked prefill vs plain scheduling \
+         ({} requests)",
+        overload_reqs.len()
+    );
+    let (off_m, off_texts) = run_overload(
+        &pipe, &packed_me, &overload_reqs, "overload/off", None, None, false,
+    );
+    let (on_m, on_texts) = run_overload(
+        &pipe, &packed_me, &overload_reqs, "overload/on", None, Some(16), true,
+    );
+    assert_eq!(on_texts, off_texts, "scheduler levers changed tokens");
+    let p99_on = on_m.p99_itl_ms();
+    let p99_off = off_m.p99_itl_ms();
+    let p99_itl_overload_ratio = p99_on / p99_off.max(1e-9);
+    println!(
+        "p99 inter-token latency: on {p99_on:.2} ms vs off {p99_off:.2} ms \
+         ({p99_itl_overload_ratio:.2}x, below 1.0 = chunking wins)"
+    );
+    assert!(
+        p99_itl_overload_ratio < 1.0,
+        "chunked prefill must improve p99 inter-token latency under \
+         overload, got {p99_itl_overload_ratio:.2}x"
+    );
+    // pressure leg: tiny is 8 pages/window, so 12 aggregate pages cannot
+    // hold three short lanes plus a long prompt — preemption must fire,
+    // restores must recompute, and not one token may move
+    let (press_m, press_texts) = run_overload(
+        &pipe,
+        &packed_me,
+        &overload_reqs,
+        "overload/pressure",
+        Some(12),
+        Some(16),
+        true,
+    );
+    assert_eq!(press_texts, off_texts, "preemption changed tokens");
+    assert!(press_m.preemptions >= 1, "undersized pool never preempted");
+    assert!(press_m.prefill_chunks >= 1, "long prompts were never chunked");
+    assert!(
+        press_m.restored_positions >= 1,
+        "restores must account recomputed positions"
+    );
+    println!(
+        "pressure leg: {} preemptions, {} prefill chunks, {} restored \
+         positions, p99 itl {:.2} ms — token-identical: ok",
+        press_m.preemptions,
+        press_m.prefill_chunks,
+        press_m.restored_positions,
+        press_m.p99_itl_ms()
+    );
+
     // ---- machine-readable summary ---------------------------------------
     let backends = arr(q_results.iter().map(|(label, step_ms, _, recon)| {
         obj(vec![
@@ -527,6 +637,20 @@ fn main() {
             ]),
         ),
         ("cross_method", obj(xm_fields)),
+        ("p99_itl_overload_ratio", num(p99_itl_overload_ratio)),
+        (
+            "overload",
+            obj(vec![
+                ("p99_itl_on_ms", num(p99_on)),
+                ("p99_itl_off_ms", num(p99_off)),
+                ("preemptions", num(press_m.preemptions as f64)),
+                ("prefill_chunks", num(press_m.prefill_chunks as f64)),
+                (
+                    "restored_positions",
+                    num(press_m.restored_positions as f64),
+                ),
+            ]),
+        ),
         ("token_identity", s("ok")),
     ]);
     let path = ptq161::runs_dir().join("BENCH_serve.json");

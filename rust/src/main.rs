@@ -7,7 +7,8 @@
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
 //!               [--no-kv] [--backend dense|fused|packed] [--workers N]
-//!               [--page-size 16] [--kv-pages N] [--verify-identity]
+//!               [--page-size 16] [--kv-pages N] [--prefill-chunk N]
+//!               [--preempt] [--overload] [--verify-identity]
 //!               (quick-scale by default; --full for the full pipeline;
 //!               paged KV-cached incremental decode unless --no-kv;
 //!               ptq161 defaults to the prepared packed-container
@@ -15,11 +16,17 @@
 //!               admission backpressure; --workers N shards lanes and
 //!               the page pool across N OS threads over a work-stealing
 //!               queue (clamped to b_eval; incompatible with --drain);
-//!               --verify-identity re-runs the workload on the
-//!               full-window dense baseline and asserts token-identical
-//!               output — gating both the paged KV cache and the packed
-//!               decode backend of whichever method is served;
-//!               writes runs/serve_metrics.json)
+//!               --prefill-chunk caps prefill tokens per step so decode
+//!               lanes keep emitting between a long prompt's chunks;
+//!               --preempt evicts low-progress lanes under page pressure
+//!               instead of backpressuring (parked requests restore by
+//!               recompute, token-identically); --overload switches the
+//!               workload to a mixed long/short prompt soup that makes
+//!               an undersized pool preempt; --verify-identity re-runs
+//!               the workload on the full-window dense baseline and
+//!               asserts token-identical output — gating the paged KV
+//!               cache, the packed decode backend, chunking, and
+//!               preemption in one pass; writes runs/serve_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
@@ -144,14 +151,36 @@ fn main() -> Result<()> {
                     anyhow::bail!("unknown backend '{other}' (dense|fused|packed)")
                 }
             };
-            // skewed request lengths sharing a prompt prefix: the workload
-            // continuous batching + the paged prefix index are built for
-            // (one long request no longer stalls three lanes; the common
-            // "system prompt" head of every request is cached once)
+            // default workload: skewed request lengths sharing a prompt
+            // prefix — what continuous batching + the paged prefix index
+            // are built for. --overload swaps in a mixed long/short soup:
+            // every third prompt nearly fills the window (truncated to
+            // the model's seq), so an undersized --kv-pages pool has to
+            // preempt and --prefill-chunk has chunks to split.
+            let overload = args.flag("overload");
             let requests: Vec<GenRequest> = (0..n)
-                .map(|i| GenRequest {
-                    prompt: format!("the quiet river of alda {}", i % 3),
-                    max_new_tokens: if i % 4 == 3 { 48 } else { 6 },
+                .map(|i| {
+                    if overload {
+                        if i % 3 == 2 {
+                            GenRequest {
+                                prompt: format!(
+                                    "req {i} tells the long history of the \
+                                     valley and the river people in full"
+                                ),
+                                max_new_tokens: 4,
+                            }
+                        } else {
+                            GenRequest {
+                                prompt: format!("q{i}"),
+                                max_new_tokens: 12,
+                            }
+                        }
+                    } else {
+                        GenRequest {
+                            prompt: format!("the quiet river of alda {}", i % 3),
+                            max_new_tokens: if i % 4 == 3 { 48 } else { 6 },
+                        }
+                    }
                 })
                 .collect();
             let label = if args.flag("drain") { "drain" } else { "continuous" };
@@ -167,6 +196,15 @@ fn main() -> Result<()> {
                 0 => None,
                 p => Some(p),
             };
+            // scheduler levers: --prefill-chunk caps prefill tokens per
+            // step (0/absent = whole prompts at once), --preempt turns
+            // page-pressure backpressure into lane eviction + parked
+            // restore-by-recompute
+            let prefill_chunk = match args.usize_opt("prefill-chunk", 0) {
+                0 => None,
+                c => Some(c),
+            };
+            let preempt = args.flag("preempt");
             // --workers N shards lanes + page pool across N OS threads
             // (clamped so every worker owns at least one lane); the drain
             // baseline is a single static-batching loop by definition
@@ -189,6 +227,8 @@ fn main() -> Result<()> {
                 let ecfg = EngineCfg {
                     use_kv_cache: !args.flag("no-kv"),
                     workers,
+                    prefill_chunk,
+                    preempt,
                     ..EngineCfg::default()
                 };
                 let spec = ShardSpec { label, page_size, kv_pages };
@@ -212,6 +252,8 @@ fn main() -> Result<()> {
                 // selects the full-window baseline (token-identical, but
                 // per-step cost grows with sequence position)
                 engine.cfg.use_kv_cache = !args.flag("no-kv");
+                engine.cfg.prefill_chunk = prefill_chunk;
+                engine.cfg.preempt = preempt;
                 let resps = if args.flag("drain") {
                     engine.run_drain(&mut batcher, &mut metrics)?
                 } else {
@@ -249,6 +291,14 @@ fn main() -> Result<()> {
                 metrics.prefix_hit_rate(),
                 metrics.kv_cow_splits.unwrap_or(0),
                 metrics.kv_backpressure_events,
+            );
+            println!(
+                "scheduler: {} preemptions, {} prefill chunks, \
+                 {} restored positions, p99 itl {:.2} ms",
+                metrics.preemptions,
+                metrics.prefill_chunks,
+                metrics.restored_positions,
+                metrics.p99_itl_ms(),
             );
             let path = ptq161::runs_dir().join("serve_metrics.json");
             metrics.write_json(&path)?;

@@ -477,14 +477,23 @@ impl KvCache {
     /// reference this was go back to the free list and retire their
     /// prefix-index entries — one retain pass for the whole lane, not one
     /// per page) and the admission reservation is returned.
-    pub fn free(&mut self, lane: usize) {
+    ///
+    /// Returns the number of pages *physically* freed. The distinction
+    /// carries the preemption economics: a preempted lane whose prefix
+    /// pages are shared with other lanes (or pinned by the prefix index
+    /// through them) frees fewer physical pages, but those surviving
+    /// pages are exactly what `adopt_prefix` re-adopts for free when the
+    /// victim restores.
+    pub fn free(&mut self, lane: usize) -> usize {
         let ls = self.lanes[lane].take().expect("freeing a lane that is not in use");
         let mut stale = false;
+        let mut physically_freed = 0;
         for &p in &ls.pages {
             debug_assert!(self.ref_count[p] > 0);
             self.ref_count[p] -= 1;
             if self.ref_count[p] == 0 {
                 self.free_pages.push(p);
+                physically_freed += 1;
                 stale |= self.registered[p];
             }
         }
@@ -498,6 +507,7 @@ impl KvCache {
         }
         self.reserved_pages -= ls.reserved;
         self.free_lanes.push(lane);
+        physically_freed
     }
 
     /// Drop every prefix-index entry referencing `page` and recompute the
@@ -988,6 +998,67 @@ mod tests {
         assert_eq!(partition_pages(8, 4, 8), vec![8, 8, 8, 8]);
         // single worker keeps the whole pool
         assert_eq!(partition_pages(7, 1, 2), vec![7]);
+    }
+
+    #[test]
+    fn partition_pages_remainder_edge_cases() {
+        // every remainder residue against the same worker count
+        assert_eq!(partition_pages(12, 4, 1), vec![3, 3, 3, 3]);
+        assert_eq!(partition_pages(13, 4, 1), vec![4, 3, 3, 3]);
+        assert_eq!(partition_pages(14, 4, 1), vec![4, 4, 3, 3]);
+        assert_eq!(partition_pages(15, 4, 1), vec![4, 4, 4, 3]);
+        // fewer pages than workers: the floor carries every partition
+        assert_eq!(partition_pages(2, 3, 1), vec![1, 1, 1]);
+        assert_eq!(partition_pages(0, 3, 2), vec![2, 2, 2]);
+        // remainder pages and a binding floor interact per worker: the
+        // raw split [2,1,1] floors to the window, not the aggregate
+        assert_eq!(partition_pages(4, 3, 2), vec![2, 2, 2]);
+        // floor binds only where the raw share is short
+        assert_eq!(partition_pages(7, 3, 2), vec![3, 2, 2]);
+    }
+
+    #[test]
+    fn preempted_shared_prefix_lane_readopts_without_new_page_allocs() {
+        // the preemption restore path: a victim whose prompt pages are
+        // shared (still referenced by the registering lane) releases
+        // only its private tail; on restore, adopt_prefix re-adopts the
+        // surviving prefix pages without allocating any new page
+        let mut c = KvCache::with_geometry(3, 1, 8, 1, 1, 2, 8);
+        let toks = [10, 11, 12, 13, 14];
+        let a = c.alloc_with_budget(6).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0, 4.0, 5.0], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        c.advance(a, 5);
+        c.register_prefix(a, &toks);
+        let b = c.alloc_with_budget(6).unwrap();
+        assert_eq!(c.adopt_prefix(b, &toks), 4);
+        // preempt b: its two prefix pages survive through a's references
+        let reserved_before = c.reserved_page_count();
+        let freed = c.free(b);
+        assert_eq!(freed, 0, "shared prefix pages are not physically freed");
+        assert!(c.reserved_page_count() < reserved_before, "reservation returned");
+        assert_eq!(c.index_entries(), 2, "prefix chains stay registered");
+        // restore: re-adoption is free — no page allocations at all
+        let allocs_before = c.page_alloc_count();
+        let b2 = c.alloc_with_budget(6).unwrap();
+        assert_eq!(c.adopt_prefix(b2, &toks), 4);
+        assert_eq!(c.page_alloc_count(), allocs_before, "restore allocates no pages");
+    }
+
+    #[test]
+    fn preempted_sole_holder_frees_pages_and_restores_cold() {
+        // a victim holding the last reference physically frees its pages
+        // and retires the index chains; restore recomputes from scratch
+        let mut c = KvCache::with_geometry(2, 1, 8, 1, 1, 2, 8);
+        let toks = [20, 21, 22, 23];
+        let a = c.alloc_with_budget(5).unwrap();
+        c.append(a, 0, &[1.0, 2.0, 3.0, 4.0], &[1.0, 2.0, 3.0, 4.0]);
+        c.advance(a, 4);
+        c.register_prefix(a, &toks);
+        assert_eq!(c.free(a), 2, "sole holder frees both pages");
+        assert_eq!(c.live_pages(), 0);
+        assert_eq!(c.index_entries(), 0, "unreferenced chains retire");
+        let a2 = c.alloc_with_budget(5).unwrap();
+        assert_eq!(c.adopt_prefix(a2, &toks), 0, "cold restore recomputes");
     }
 
     #[test]

@@ -30,6 +30,45 @@ struct Queued {
     deadline: Option<Duration>,
 }
 
+/// A request evicted from a running lane by the scheduler (page pressure
+/// or a forced-preemption tick). It parks here — queued-but-not-in-flight
+/// — carrying everything needed to restore it by recompute: the full
+/// committed token sequence (prompt + tokens generated so far), the
+/// original lane shape, and its latency-accounting timestamps. Restore
+/// re-prefills `seq` as if it were a prompt; greedy decode is
+/// deterministic, so the continuation is byte-identical to a run that was
+/// never preempted.
+#[derive(Debug, Clone)]
+pub struct PreemptedReq {
+    /// global request id (unchanged across preempt/restore cycles)
+    pub id: u64,
+    /// the original request, kept for deadline-expiry reporting
+    pub req: GenRequest,
+    /// committed tokens: prompt plus everything generated before eviction
+    pub seq: Vec<i32>,
+    /// prompt span of `seq` (prefix registration + response slicing)
+    pub prompt_len: usize,
+    /// original generation budget — the page reservation on restore is
+    /// `prompt_len + max_new`, same as first admission
+    pub max_new: usize,
+    /// original submit time (deadline expiry keeps counting while parked)
+    pub submitted: Instant,
+    /// first admission time (queue-latency accounting spans preemptions)
+    pub admitted: Instant,
+    pub deadline: Option<Duration>,
+    /// when the lane last emitted a token, so the restore's first token
+    /// honestly records the parked gap as inter-token latency
+    pub last_token_at: Option<Instant>,
+}
+
+impl PreemptedReq {
+    fn overdue(&self, now: Instant) -> bool {
+        self.deadline
+            .map(|d| now.duration_since(self.submitted) >= d)
+            .unwrap_or(false)
+    }
+}
+
 /// FIFO admission queue with deadline expiry and a max-wait batch cut.
 #[derive(Debug)]
 pub struct Batcher {
@@ -39,6 +78,8 @@ pub struct Batcher {
     /// waited this long
     pub max_wait: Duration,
     queue: VecDeque<Queued>,
+    /// preempted requests, restored before anything in the fresh queue
+    parked: VecDeque<PreemptedReq>,
     next_id: u64,
 }
 
@@ -50,6 +91,7 @@ impl Batcher {
             capacity,
             max_wait: Duration::from_millis(50),
             queue: VecDeque::new(),
+            parked: VecDeque::new(),
             next_id: 0,
         }
     }
@@ -83,9 +125,35 @@ impl Batcher {
         id
     }
 
-    /// Requests currently waiting for a lane.
+    /// Requests currently waiting for a lane — fresh and parked alike,
+    /// so the engine's run loop cannot exit while a preempted request
+    /// still awaits restoration.
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.queue.len() + self.parked.len()
+    }
+
+    /// Park a preempted request. Parked requests restore before any
+    /// fresh admission ("restore-to-front"): a victim never loses its
+    /// place to work that arrived after it.
+    pub fn park(&mut self, p: PreemptedReq) {
+        self.parked.push_back(p);
+    }
+
+    /// Preempted requests awaiting restoration.
+    pub fn parked(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Borrow the next request to restore (FIFO among parked). The
+    /// engine peeks to size the page reservation first; on backpressure
+    /// the request stays parked at the head.
+    pub fn peek_parked(&self) -> Option<&PreemptedReq> {
+        self.parked.front()
+    }
+
+    /// Dequeue the request `peek_parked` advertised.
+    pub fn pop_parked(&mut self) -> Option<PreemptedReq> {
+        self.parked.pop_front()
     }
 
     /// Pop the next batch (up to capacity, FIFO). Empty queue -> None.
@@ -123,8 +191,13 @@ impl Batcher {
 
     /// Continuous admission: pop the oldest queued request for a freed
     /// lane. FIFO; deadline filtering is done by `expire_overdue` first.
-    pub fn pop_ready(&mut self, _now: Instant) -> Option<(u64, GenRequest, Instant)> {
-        self.queue.pop_front().map(|q| (q.id, q.req, q.submitted))
+    /// The deadline rides along so a later preemption can park it with
+    /// the lane and expiry still covers the parked state.
+    pub fn pop_ready(
+        &mut self,
+        _now: Instant,
+    ) -> Option<(u64, GenRequest, Instant, Option<Duration>)> {
+        self.queue.pop_front().map(|q| (q.id, q.req, q.submitted, q.deadline))
     }
 
     /// Look at the request `pop_ready` would return without dequeuing it
@@ -136,8 +209,11 @@ impl Batcher {
         self.queue.front().map(|q| (q.id, &q.req, q.submitted))
     }
 
-    /// Remove and return every queued request whose deadline elapsed
-    /// before it was admitted.
+    /// Remove and return every waiting request whose deadline elapsed
+    /// before it was (re)admitted. Covers *every* parked state: a
+    /// request preempted past its deadline is expired here, not
+    /// silently restored — deadlines keep counting from the original
+    /// submit time while a request sits preempted.
     pub fn expire_overdue(&mut self, now: Instant) -> Vec<(u64, GenRequest)> {
         let mut kept = VecDeque::with_capacity(self.queue.len());
         let mut expired = Vec::new();
@@ -153,6 +229,16 @@ impl Batcher {
             }
         }
         self.queue = kept;
+        let mut kept_parked = VecDeque::with_capacity(self.parked.len());
+        for p in self.parked.drain(..) {
+            if p.overdue(now) {
+                expired.push((p.id, p.req));
+            } else {
+                kept_parked.push_back(p);
+            }
+        }
+        self.parked = kept_parked;
+        expired.sort_by_key(|(id, _)| *id);
         expired
     }
 }
@@ -160,6 +246,10 @@ impl Batcher {
 #[derive(Debug)]
 struct Shards {
     shards: Vec<VecDeque<Queued>>,
+    /// per-shard parked (preempted) requests, restored shard-locally
+    /// first so a victim's still-registered prefix pages are re-adopted
+    /// from the same worker's partition
+    parked: Vec<VecDeque<PreemptedReq>>,
     next_id: u64,
 }
 
@@ -186,6 +276,7 @@ impl ShardedQueue {
             max_wait: Duration::from_millis(50),
             state: Mutex::new(Shards {
                 shards: (0..workers).map(|_| VecDeque::new()).collect(),
+                parked: (0..workers).map(|_| VecDeque::new()).collect(),
                 next_id: 0,
             }),
         }
@@ -202,14 +293,24 @@ impl ShardedQueue {
         self.state.lock().unwrap().shards.len()
     }
 
-    /// Requests waiting across every shard.
+    /// Requests waiting across every shard, fresh and parked alike —
+    /// worker loops must not exit while a preempted request awaits
+    /// restoration somewhere.
     pub fn pending(&self) -> usize {
-        self.state.lock().unwrap().shards.iter().map(|s| s.len()).sum()
+        let st = self.state.lock().unwrap();
+        st.shards.iter().map(|s| s.len()).sum::<usize>()
+            + st.parked.iter().map(|s| s.len()).sum::<usize>()
     }
 
-    /// Requests waiting on `worker`'s own shard (stealable by others).
+    /// Fresh requests waiting on `worker`'s own shard (stealable by
+    /// others). Parked requests are counted by [`ShardedQueue::parked`].
     pub fn pending_for(&self, worker: usize) -> usize {
         self.state.lock().unwrap().shards[worker].len()
+    }
+
+    /// Preempted requests parked across every shard.
+    pub fn parked(&self) -> usize {
+        self.state.lock().unwrap().parked.iter().map(|s| s.len()).sum()
     }
 
     /// Enqueue with no deadline or placement preference.
@@ -265,6 +366,40 @@ impl ShardedQueue {
         Some((q.id, q.req, q.submitted, q.deadline))
     }
 
+    /// Park a preempted request on `worker`'s shard. The owning worker
+    /// restores it before claiming fresh work; idle siblings (or the
+    /// survivors of a worker panic) can adopt it via
+    /// [`ShardedQueue::claim_parked`] with `steal`.
+    pub fn park(&self, worker: usize, p: PreemptedReq) {
+        self.state.lock().unwrap().parked[worker].push_back(p);
+    }
+
+    /// Return a claimed-but-inadmissible parked request to the *front*
+    /// of `worker`'s shard, keeping restore-to-front ordering across a
+    /// page-budget backpressure round trip.
+    pub fn park_front(&self, worker: usize, p: PreemptedReq) {
+        self.state.lock().unwrap().parked[worker].push_front(p);
+    }
+
+    /// Claim the next preempted request to restore: `worker`'s own
+    /// parked shard first (FIFO). With `steal`, an otherwise-idle worker
+    /// also adopts the oldest parked request of the most-loaded other
+    /// shard — this is how a dead worker's preempted lanes survive it.
+    /// Atomic under the queue lock, like [`ShardedQueue::claim`].
+    pub fn claim_parked(&self, worker: usize, steal: bool) -> Option<PreemptedReq> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(p) = st.parked[worker].pop_front() {
+            return Some(p);
+        }
+        if !steal {
+            return None;
+        }
+        let victim = (0..st.parked.len())
+            .filter(|&w| w != worker && !st.parked[w].is_empty())
+            .max_by_key(|&w| st.parked[w].len())?;
+        st.parked[victim].pop_front()
+    }
+
     /// Return a claimed-but-inadmissible request to the *front* of
     /// `worker`'s shard (page-pool backpressure): the worker retries it
     /// first on its next admission pass, and an idle sibling can still
@@ -282,8 +417,10 @@ impl ShardedQueue {
         st.shards[worker].push_front(Queued { id, req, submitted, deadline });
     }
 
-    /// Remove and return every queued request (any shard) whose deadline
-    /// elapsed before admission, sorted by id.
+    /// Remove and return every waiting request (any shard, fresh or
+    /// parked) whose deadline elapsed before admission, sorted by id.
+    /// Parked coverage matters: a request preempted past its deadline
+    /// must be expired, not silently restored.
     pub fn expire_overdue(&self, now: Instant) -> Vec<(u64, GenRequest)> {
         let mut st = self.state.lock().unwrap();
         let mut expired = Vec::new();
@@ -298,6 +435,17 @@ impl ShardedQueue {
                     expired.push((q.id, q.req));
                 } else {
                     kept.push_back(q);
+                }
+            }
+            *shard = kept;
+        }
+        for shard in st.parked.iter_mut() {
+            let mut kept = VecDeque::with_capacity(shard.len());
+            for p in shard.drain(..) {
+                if p.overdue(now) {
+                    expired.push((p.id, p.req));
+                } else {
+                    kept.push_back(p);
                 }
             }
             *shard = kept;
@@ -510,6 +658,101 @@ mod tests {
         q.restore(0, id, r, submitted, deadline);
         assert_eq!(q.claim(0).unwrap().0, first, "restored head claims first");
         assert_eq!(q.claim(0).unwrap().0, second);
+    }
+
+    fn parked(id: u64, deadline: Option<Duration>) -> PreemptedReq {
+        let now = Instant::now();
+        PreemptedReq {
+            id,
+            req: req(id as usize),
+            seq: vec![1, 2, 3],
+            prompt_len: 2,
+            max_new: 4,
+            submitted: now,
+            admitted: now,
+            deadline,
+            last_token_at: None,
+        }
+    }
+
+    #[test]
+    fn parked_requests_restore_before_fresh_and_count_as_pending() {
+        let mut b = Batcher::new(2);
+        b.submit(req(1));
+        b.park(parked(7, None));
+        // parked work is pending (the run loop must not exit on it) and
+        // restores ahead of the fresh FIFO
+        assert_eq!(b.pending(), 2);
+        assert_eq!(b.parked(), 1);
+        assert_eq!(b.peek_parked().unwrap().id, 7);
+        assert_eq!(b.peek_parked().unwrap().id, 7, "peek does not dequeue");
+        assert_eq!(b.pop_parked().unwrap().id, 7);
+        assert!(b.pop_parked().is_none());
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn expire_overdue_covers_parked_requests() {
+        // regression: a request preempted past its deadline must be
+        // expired, not silently restored
+        let mut b = Batcher::new(2);
+        let fresh_overdue =
+            b.submit_with_deadline(req(1), Some(Duration::from_millis(5)));
+        let mut gone = parked(90, Some(Duration::from_millis(5)));
+        gone.submitted = Instant::now();
+        b.park(gone);
+        b.park(parked(91, None));
+        b.park(parked(92, Some(Duration::from_secs(3600))));
+        let expired = b.expire_overdue(Instant::now() + Duration::from_millis(10));
+        let ids: Vec<u64> = expired.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![fresh_overdue, 90], "parked overdue expires too");
+        assert_eq!(b.parked(), 2, "patient parked requests survive");
+        assert_eq!(b.pop_parked().unwrap().id, 91, "parked FIFO intact");
+    }
+
+    #[test]
+    fn sharded_parked_claims_local_first_then_steals() {
+        let q = ShardedQueue::new(3);
+        q.park(0, parked(10, None));
+        q.park(1, parked(20, None));
+        q.park(1, parked(21, None));
+        assert_eq!(q.parked(), 3);
+        assert_eq!(q.pending(), 3, "parked counts as pending");
+        // own shard first, FIFO
+        assert_eq!(q.claim_parked(1, false).unwrap().id, 20);
+        // no stealing unless asked (a busy worker leaves siblings' parked
+        // work to them — restore affinity keeps prefix pages local)
+        assert!(q.claim_parked(2, false).is_none());
+        // an idle worker adopts orphans from the most-loaded parked shard
+        assert_eq!(q.claim_parked(2, true).unwrap().id, 10);
+        assert_eq!(q.claim_parked(2, true).unwrap().id, 21);
+        assert!(q.claim_parked(2, true).is_none());
+    }
+
+    #[test]
+    fn sharded_park_front_keeps_restore_ordering() {
+        let q = ShardedQueue::new(2);
+        q.park(0, parked(30, None));
+        q.park(0, parked(31, None));
+        let head = q.claim_parked(0, false).unwrap();
+        assert_eq!(head.id, 30);
+        // backpressured restore goes back to the front, not the back
+        q.park_front(0, head);
+        assert_eq!(q.claim_parked(0, false).unwrap().id, 30);
+        assert_eq!(q.claim_parked(0, false).unwrap().id, 31);
+    }
+
+    #[test]
+    fn sharded_expire_overdue_covers_parked_shards() {
+        let q = ShardedQueue::new(2);
+        let fresh = q.submit_placed(req(1), Some(Duration::from_millis(5)), Some(0));
+        q.park(0, parked(80, Some(Duration::from_millis(5))));
+        q.park(1, parked(81, None));
+        let expired = q.expire_overdue(Instant::now() + Duration::from_millis(10));
+        let ids: Vec<u64> = expired.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![fresh, 80], "parked overdue expires across shards");
+        assert_eq!(q.parked(), 1);
+        assert_eq!(q.claim_parked(1, false).unwrap().id, 81);
     }
 
     #[test]

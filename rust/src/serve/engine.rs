@@ -66,13 +66,14 @@
 //! stolen by the survivors, and the process lives on.
 
 use std::collections::{BTreeMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, ShardedQueue};
+use super::batcher::{Batcher, PreemptedReq, ShardedQueue};
 use super::metrics::{MetricsRegistry, RequestMetric};
 use super::{GenRequest, GenResponse};
 use crate::coordinator::Pipeline;
@@ -100,10 +101,37 @@ pub struct EngineCfg {
     /// over, clamped to `[1, b_eval]` (each worker needs at least one
     /// lane). The in-process `run`/`run_drain` loops ignore it.
     pub workers: usize,
+    /// cap on prefill tokens computed per engine step (`--prefill-chunk`).
+    /// `None` prefills whole prompts in one step (the legacy behavior);
+    /// with a cap, a long prompt is spread over several steps and decode
+    /// lanes keep emitting between its chunks — the tail-latency lever
+    /// under overload. Token-identical either way: chained
+    /// `forward_h_incremental` calls over the same positions produce the
+    /// same K/V as one call.
+    pub prefill_chunk: Option<usize>,
+    /// preempt running lanes under page pressure (`--preempt`): when an
+    /// admissible request would backpressure, evict the lowest-progress
+    /// victim lanes, park them in the batcher's `Preempted` state, and
+    /// restore-by-recompute once pages free up. Off by default — the
+    /// no-preemption engine is the identity baseline the torture tests
+    /// compare against.
+    pub preempt: bool,
     /// fault-injection hook for the panic-containment tests: the worker
     /// that claims this request id panics at admission
     #[doc(hidden)]
     pub panic_on_request: Option<u64>,
+    /// torture-test hook: forcibly preempt the policy victim every N
+    /// decode steps regardless of page pressure (KV path only; skipped
+    /// when fewer than two lanes are active so a lone request cannot
+    /// livelock against itself)
+    #[doc(hidden)]
+    pub preempt_every: Option<usize>,
+    /// fault-injection hook (sharded): the worker holding this request
+    /// preempts it, parks it on its shard, and panics — exercising the
+    /// "panic while holding a preempted lane" window. Fires once per
+    /// deployment.
+    #[doc(hidden)]
+    pub panic_on_preempt_of: Option<u64>,
 }
 
 impl Default for EngineCfg {
@@ -113,7 +141,11 @@ impl Default for EngineCfg {
             use_kv_cache: true,
             backend: "dense",
             workers: 1,
+            prefill_chunk: None,
+            preempt: false,
             panic_on_request: None,
+            preempt_every: None,
+            panic_on_preempt_of: None,
         }
     }
 }
@@ -123,15 +155,31 @@ impl Default for EngineCfg {
 #[derive(Debug, Clone)]
 struct Lane {
     id: u64,
+    /// original request, kept so a preempted lane can be parked with the
+    /// full submission intact (deadline expiry reports through it)
+    req: GenRequest,
     seq: Vec<i32>,
     prompt_len: usize,
     max_new: usize,
     submitted: Instant,
     admitted: Instant,
+    deadline: Option<Duration>,
     /// paged-cache lane, reserved at admission (KV path only)
     slot: Option<usize>,
     /// prompt has been prefilled (first token emitted)
     prefilled: bool,
+    /// positions adopted from the shared-prefix index on first touch
+    /// (`None` until the first prefill step reaches this lane); doubles
+    /// as the adopt-once flag — `adopt_prefix` requires an empty lane, so
+    /// chunked prefill must only adopt on the first chunk
+    adopted: Option<usize>,
+    /// lane is a preemption restore: its "prompt" replay covers prompt +
+    /// already-generated tokens, and its recomputed positions are
+    /// reported as `restored_positions`, not a fresh prefill
+    restored: bool,
+    /// when this lane last emitted a token (inter-token latency); carried
+    /// across preemption so the parked gap lands in the p99
+    last_token_at: Option<Instant>,
 }
 
 /// Shared-state handles a sharded worker's engine carries: its worker
@@ -142,6 +190,10 @@ struct ShardCtx<'a> {
     worker: usize,
     router: &'a PrefixRouter,
     in_flight: &'a Mutex<Vec<HashSet<u64>>>,
+    /// one-shot arm for `panic_on_preempt_of` (deployment-wide, so the
+    /// injected panic fires exactly once even if the request is restored
+    /// onto another worker that also matches)
+    preempt_armed: &'a AtomicBool,
 }
 
 /// Continuous-batching decode loop over the lane pool (see module docs).
@@ -287,6 +339,7 @@ impl<'a> Engine<'a> {
         req: &GenRequest,
         submitted: Instant,
         admitted: Instant,
+        deadline: Option<Duration>,
     ) -> Lane {
         let t = self.pipe.cfg.seq;
         let tk = ByteTokenizer;
@@ -303,14 +356,134 @@ impl<'a> Engine<'a> {
         );
         Lane {
             id,
+            req: req.clone(),
             seq,
             prompt_len,
             max_new,
             submitted,
             admitted,
+            deadline,
             slot: None,
             prefilled: false,
+            adopted: None,
+            restored: false,
+            last_token_at: None,
         }
+    }
+
+    /// Rebuild a lane from a parked preemption victim. The already-
+    /// generated tokens ride along as part of the "prompt" replay, so the
+    /// restore recomputes `seq` positions (minus whatever the prefix
+    /// index re-adopts) and then continues decoding bit-identically —
+    /// greedy argmax over the same K/V is the same token.
+    fn lane_from_parked(p: PreemptedReq, slot: usize) -> Lane {
+        Lane {
+            id: p.id,
+            req: p.req,
+            seq: p.seq,
+            prompt_len: p.prompt_len,
+            max_new: p.max_new,
+            submitted: p.submitted,
+            admitted: p.admitted,
+            deadline: p.deadline,
+            slot: Some(slot),
+            prefilled: false,
+            adopted: None,
+            restored: true,
+            last_token_at: p.last_token_at,
+        }
+    }
+
+    /// Evict lane `li`: release its pages back to the pool and return the
+    /// parked form (caller decides which parked store it lands in).
+    /// Shared prefix pages survive the free inside the cache's index, so
+    /// a shared-prefix victim's restore re-adopts them for free.
+    fn preempt_lane(
+        &mut self,
+        li: usize,
+        metrics: &mut MetricsRegistry,
+    ) -> PreemptedReq {
+        let lane = self.lanes[li].take().expect("preempting an empty lane");
+        self.deregister_in_flight(lane.id);
+        let slot = lane.slot.expect("preemption is a KV-path operation");
+        self.cache.free(slot);
+        metrics.record_preemption();
+        PreemptedReq {
+            id: lane.id,
+            req: lane.req,
+            seq: lane.seq,
+            prompt_len: lane.prompt_len,
+            max_new: lane.max_new,
+            submitted: lane.submitted,
+            admitted: lane.admitted,
+            deadline: lane.deadline,
+            last_token_at: lane.last_token_at,
+        }
+    }
+
+    /// Active lanes in victim order: lowest progress first (fewest
+    /// generated tokens — the cheapest recompute), non-shared-prefix
+    /// lanes before prefix adopters (an adopter's pages mostly stay
+    /// resident in the index, so evicting it recovers less), newest
+    /// request last-admitted first on ties.
+    fn victim_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.lanes.len())
+            .filter(|&i| {
+                self.lanes[i].as_ref().is_some_and(|l| l.slot.is_some())
+            })
+            .collect();
+        order.sort_by_key(|&i| {
+            let l = self.lanes[i].as_ref().unwrap();
+            let progress = l.seq.len() - l.prompt_len;
+            let shared = usize::from(l.adopted.unwrap_or(0) > 0);
+            (progress, shared, std::cmp::Reverse(l.id))
+        });
+        order
+    }
+
+    /// Victims whose reserved budgets cover the pool deficit blocking a
+    /// `need_positions`-position admission, or `None` when either there
+    /// is no deficit or even evicting everything would not cover it
+    /// (e.g. the pages are pinned by shared refs outside this pool's
+    /// reservations — then backpressure is the only option).
+    fn pick_victims(&self, need_positions: usize) -> Option<Vec<usize>> {
+        let need = self.cache.pages_needed(need_positions);
+        let deficit = (self.cache.reserved_page_count() + need)
+            .checked_sub(self.cache.total_pages())?;
+        if deficit == 0 {
+            return None;
+        }
+        let mut victims = Vec::new();
+        let mut freed = 0usize;
+        for li in self.victim_order() {
+            if freed >= deficit {
+                break;
+            }
+            let l = self.lanes[li].as_ref().unwrap();
+            freed += self.cache.pages_needed(l.prompt_len + l.max_new);
+            victims.push(li);
+        }
+        (freed >= deficit).then_some(victims)
+    }
+
+    /// Forced-preemption tick target ([`EngineCfg::preempt_every`]): the
+    /// lowest-progress lane that has **completed prefill**, or `None`
+    /// with fewer than two active lanes (a lone request must be allowed
+    /// to finish or nothing ever completes). Unprefilled lanes are never
+    /// tick victims: such a lane restarts its replay from position zero
+    /// on every restore, so a tick cadence at or below its replay length
+    /// would evict it before it ever completes — with the step's chunk
+    /// budget spent on it each round, the whole scheduler livelocks.
+    /// (Page-pressure preemption may evict unprefilled lanes safely: the
+    /// parked head gates all fresh admissions there, so the admitted
+    /// lane always runs to completion and frees the victim's pages.)
+    fn forced_victim(&self) -> Option<usize> {
+        if self.active_lanes() < 2 {
+            return None;
+        }
+        self.victim_order()
+            .into_iter()
+            .find(|&li| self.lanes[li].as_ref().unwrap().prefilled)
     }
 
     fn finish(
@@ -392,6 +565,30 @@ impl<'a> Engine<'a> {
         metrics.record_expired(batcher.expire_overdue(now).len());
         for i in 0..self.lanes.len() {
             while self.lanes[i].is_none() {
+                // restore-to-front: parked preemption victims re-admit
+                // before anything in the fresh queue, and a restore never
+                // preempts (it caused the pressure — evicting for it
+                // would livelock the scheduler)
+                if self.cfg.use_kv_cache {
+                    if let Some(p) = batcher.peek_parked() {
+                        let need = p.prompt_len + p.max_new;
+                        match self.cache.alloc_with_budget(need) {
+                            Some(slot) => {
+                                let p = batcher
+                                    .pop_parked()
+                                    .expect("peeked parked vanished");
+                                self.register_in_flight(p.id);
+                                self.lanes[i] =
+                                    Some(Self::lane_from_parked(p, slot));
+                                continue;
+                            }
+                            None => {
+                                metrics.record_backpressure();
+                                return;
+                            }
+                        }
+                    }
+                }
                 // peek first (borrowed, no clone): the page budget comes
                 // from `lane_shape` without tokenizing, so a rejected
                 // admission leaves the request queued at zero cost
@@ -401,18 +598,38 @@ impl<'a> Engine<'a> {
                 let (prompt_len, max_new) = self.lane_shape(peeked);
                 let mut slot = None;
                 if max_new > 0 && self.cfg.use_kv_cache {
-                    match self.cache.alloc_with_budget(prompt_len + max_new) {
-                        Some(s) => slot = Some(s),
-                        None => {
-                            // pool exhausted: leave the request queued
-                            metrics.record_backpressure();
-                            return;
+                    loop {
+                        match self.cache.alloc_with_budget(prompt_len + max_new) {
+                            Some(s) => {
+                                slot = Some(s);
+                                break;
+                            }
+                            None if self.cfg.preempt => {
+                                // page pressure with an admissible head:
+                                // evict enough low-progress victims to
+                                // cover the deficit, park them, retry
+                                let Some(victims) =
+                                    self.pick_victims(prompt_len + max_new)
+                                else {
+                                    metrics.record_backpressure();
+                                    return;
+                                };
+                                for li in victims {
+                                    let p = self.preempt_lane(li, metrics);
+                                    batcher.park(p);
+                                }
+                            }
+                            None => {
+                                // pool exhausted: leave the request queued
+                                metrics.record_backpressure();
+                                return;
+                            }
                         }
                     }
                 }
-                let (id, req, submitted) =
+                let (id, req, submitted, deadline) =
                     batcher.pop_ready(now).expect("peeked head vanished");
-                let mut lane = self.make_lane(id, &req, submitted, now);
+                let mut lane = self.make_lane(id, &req, submitted, now, deadline);
                 if lane.max_new == 0 {
                     out.push(Self::finish(lane, 0, now, metrics));
                     continue;
@@ -477,6 +694,11 @@ impl<'a> Engine<'a> {
                 let base = (row * t + pos) * vocab;
                 let next = Self::argmax(&logits.data[base..base + vocab]);
                 lane.seq.push(next);
+                if let Some(prev) = lane.last_token_at {
+                    metrics
+                        .record_itl(now.duration_since(prev).as_secs_f64() * 1000.0);
+                }
+                lane.last_token_at = Some(now);
             }
             metrics.record_tokens(1);
             if self.lane_done(*li) {
@@ -490,10 +712,14 @@ impl<'a> Engine<'a> {
     /// whole-page prompt prefix from the cache's index, then prefill in
     /// *batched* buckets — lanes whose remaining (post-adoption) chunks
     /// are the same length run as one chunked forward instead of one
-    /// `b=1` forward each. Lanes already prefilled decode their single
-    /// newest token as one compacted batch. Either way every active lane
-    /// yields exactly one token per step, matching the full-window step's
-    /// accounting.
+    /// `b=1` forward each. With [`EngineCfg::prefill_chunk`] set, at most
+    /// that many prefill tokens are computed per step (chunks carry over
+    /// to later steps), so decode lanes keep emitting between a long
+    /// prompt's chunks instead of stalling behind it. Lanes already
+    /// prefilled decode their single newest token as one compacted batch;
+    /// every *decoding* lane yields exactly one token per step, and a
+    /// prefilling lane yields its first token on the step its last chunk
+    /// completes.
     fn decode_step_cached(
         &mut self,
         metrics: &mut MetricsRegistry,
@@ -513,21 +739,57 @@ impl<'a> Engine<'a> {
             .copied()
             .filter(|&li| self.lanes[li].as_ref().unwrap().prefilled)
             .collect();
-        // batched prefill: adopt shared prefixes, then bucket the lanes
-        // by remaining chunk length (BTreeMap for deterministic order)
+        // chunked batched prefill: adopt shared prefixes on a lane's
+        // FIRST touch (the cache requires an empty lane to adopt), then
+        // spend this step's prefill-token budget over unprefilled lanes
+        // in lane order — lanes the budget does not reach simply wait
+        // while decode lanes keep emitting, which is the whole point.
+        // Within the budget, lanes are bucketed by chunk length (BTreeMap
+        // for deterministic order) and each bucket runs as one chunked
+        // forward, exactly the PR 5 batched-prefill path per chunk.
+        let mut emitted = vec![false; self.lanes.len()];
+        // floor the chunk at 1: a zero budget would starve prefill forever
+        let mut budget = self.cfg.prefill_chunk.map_or(usize::MAX, |c| c.max(1));
         let mut buckets: BTreeMap<usize, Vec<(usize, Vec<i32>)>> = BTreeMap::new();
         for &li in &active {
             if self.lanes[li].as_ref().unwrap().prefilled {
                 continue;
             }
-            let (slot, prompt) = {
+            if budget == 0 {
+                break;
+            }
+            let (slot, seq, adopted, restored) = {
                 let lane = self.lanes[li].as_ref().unwrap();
-                (lane.slot.expect("cached lane without a slot"), lane.seq.clone())
+                (
+                    lane.slot.expect("cached lane without a slot"),
+                    lane.seq.clone(),
+                    lane.adopted,
+                    lane.restored,
+                )
             };
-            let reused = self.cache.adopt_prefix(slot, &prompt);
-            metrics.record_prefill(prompt.len(), reused);
-            let suffix = prompt[reused..].to_vec();
-            buckets.entry(suffix.len()).or_default().push((li, suffix));
+            if adopted.is_none() {
+                let reused = self.cache.adopt_prefix(slot, &seq);
+                if restored {
+                    // restore-by-recompute: only the suffix the index
+                    // could not re-adopt is actually recomputed — the
+                    // cheapness of shared-prefix victims shows up here
+                    metrics.record_restored(seq.len() - reused);
+                } else {
+                    metrics.record_prefill(seq.len(), reused);
+                }
+                self.lanes[li].as_mut().unwrap().adopted = Some(reused);
+            }
+            let done = self.cache.len(slot);
+            let remaining = seq.len() - done;
+            let take = remaining.min(budget);
+            budget -= take;
+            if take < remaining {
+                metrics.record_prefill_chunk();
+            }
+            buckets
+                .entry(take)
+                .or_default()
+                .push((li, seq[done..done + take].to_vec()));
         }
         for (&t_new, group) in &buckets {
             let slots: Vec<usize> = group
@@ -537,17 +799,33 @@ impl<'a> Engine<'a> {
             let tokens: Vec<i32> =
                 group.iter().flat_map(|(_, s)| s.iter().copied()).collect();
             let h = model.forward_h_incremental(pipe, &mut self.cache, &slots, &tokens)?;
+            // a chunk reaching its sequence's end emits the first token;
+            // a mid-prompt chunk only extends the cache, so the head runs
+            // only when some lane in the bucket completes
+            let completes: Vec<(usize, usize)> = group
+                .iter()
+                .enumerate()
+                .filter_map(|(row, (li, _))| {
+                    let lane = self.lanes[*li].as_ref().unwrap();
+                    (self.cache.len(lane.slot.unwrap()) == lane.seq.len())
+                        .then_some((row, *li))
+                })
+                .collect();
+            if completes.is_empty() {
+                continue;
+            }
             let logits = pipe.head_decode(model.params(), &h)?;
-            for (row, (li, _)) in group.iter().enumerate() {
+            for &(row, li) in &completes {
                 let base = (row * t_new + (t_new - 1)) * vocab;
                 let next = Self::argmax(&logits.data[base..base + vocab]);
-                let lane = self.lanes[*li].as_mut().unwrap();
+                let lane = self.lanes[li].as_mut().unwrap();
                 lane.seq.push(next);
                 lane.prefilled = true;
+                emitted[li] = true;
             }
             // register after the forward so the pages hold the prompt K/V
-            for (li, _) in group {
-                let lane = self.lanes[*li].as_ref().unwrap();
+            for &(_, li) in &completes {
+                let lane = self.lanes[li].as_ref().unwrap();
                 let (slot, plen) = (lane.slot.unwrap(), lane.prompt_len);
                 let prompt = lane.seq[..plen].to_vec();
                 self.cache.register_prefix(slot, &prompt);
@@ -572,12 +850,24 @@ impl<'a> Engine<'a> {
             for (row, &li) in decoding.iter().enumerate() {
                 let next = Self::argmax(&logits.data[row * vocab..(row + 1) * vocab]);
                 self.lanes[li].as_mut().unwrap().seq.push(next);
+                emitted[li] = true;
             }
         }
         metrics.record_step_from(step_started, n_active, self.lanes.len());
         let now = Instant::now();
         for &li in &active {
+            if !emitted[li] {
+                continue;
+            }
             metrics.record_tokens(1);
+            {
+                let lane = self.lanes[li].as_mut().unwrap();
+                if let Some(prev) = lane.last_token_at {
+                    metrics
+                        .record_itl(now.duration_since(prev).as_secs_f64() * 1000.0);
+                }
+                lane.last_token_at = Some(now);
+            }
             if self.lane_done(li) {
                 self.finish_lane(li, now, metrics, out);
             }
@@ -620,6 +910,7 @@ impl<'a> Engine<'a> {
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
         self.export_memory(metrics);
+        let mut step = 0usize;
         for _ in 0..self.cfg.max_steps {
             self.admit(batcher, metrics, &mut out);
             if self.active_lanes() == 0 {
@@ -633,6 +924,16 @@ impl<'a> Engine<'a> {
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
+            step += 1;
+            // torture-test hook: forced preemption every N steps
+            if let Some(n) = self.cfg.preempt_every {
+                if n > 0 && self.cfg.use_kv_cache && step % n == 0 {
+                    if let Some(li) = self.forced_victim() {
+                        let p = self.preempt_lane(li, metrics);
+                        batcher.park(p);
+                    }
+                }
+            }
         }
         self.export_memory(metrics);
         Ok(out)
@@ -684,12 +985,42 @@ impl<'a> Engine<'a> {
         Ok(out)
     }
 
-    /// Sharded admission: claim from the work-stealing queue (own shard
-    /// first, then the most-loaded sibling) into free lanes. Page budgets
-    /// come from this worker's **private** partition — on exhaustion the
+    /// Restore a parked preemption victim into free lane `i`. Returns
+    /// `false` (after re-parking it at our shard's head and recording
+    /// backpressure) when the partition cannot cover its budget yet —
+    /// the caller stops admitting; a restore never preempts.
+    fn try_restore_parked(
+        &mut self,
+        i: usize,
+        p: PreemptedReq,
+        queue: &ShardedQueue,
+        worker: usize,
+        metrics: &mut MetricsRegistry,
+    ) -> bool {
+        match self.cache.alloc_with_budget(p.prompt_len + p.max_new) {
+            Some(slot) => {
+                self.register_in_flight(p.id);
+                self.lanes[i] = Some(Self::lane_from_parked(p, slot));
+                true
+            }
+            None => {
+                queue.park_front(worker, p);
+                metrics.record_backpressure();
+                false
+            }
+        }
+    }
+
+    /// Sharded admission: restore our own parked preemption victims
+    /// first, then claim from the work-stealing queue (own shard first,
+    /// then the most-loaded sibling), and only when both are empty adopt
+    /// a sibling's parked victim (that steal is what lets survivors
+    /// finish a dead worker's preempted requests). Page budgets come
+    /// from this worker's **private** partition — on exhaustion the
     /// claimed request is restored to our shard's head (so FIFO order and
     /// the submit timestamp survive) and admission backpressures exactly
-    /// like the single-engine path.
+    /// like the single-engine path, unless `cfg.preempt` can cover the
+    /// deficit by evicting low-progress victims.
     fn admit_sharded(
         &mut self,
         queue: &ShardedQueue,
@@ -702,8 +1033,30 @@ impl<'a> Engine<'a> {
         metrics.record_expired(queue.expire_overdue(now).len());
         for i in 0..self.lanes.len() {
             while self.lanes[i].is_none() {
+                if self.cfg.use_kv_cache {
+                    if let Some(p) = queue.claim_parked(worker, false) {
+                        if !self.try_restore_parked(i, p, queue, worker, metrics)
+                        {
+                            return;
+                        }
+                        continue;
+                    }
+                }
                 let Some((id, req, submitted, deadline)) = queue.claim(worker)
                 else {
+                    // fresh queue drained: adopt an orphaned parked
+                    // victim (a busy — or dead — sibling's) rather than
+                    // idle with a free lane
+                    if self.cfg.use_kv_cache {
+                        if let Some(p) = queue.claim_parked(worker, true) {
+                            if !self
+                                .try_restore_parked(i, p, queue, worker, metrics)
+                            {
+                                return;
+                            }
+                            continue;
+                        }
+                    }
                     return;
                 };
                 self.register_in_flight(id);
@@ -713,19 +1066,40 @@ impl<'a> Engine<'a> {
                 let (prompt_len, max_new) = self.lane_shape(&req);
                 let mut slot = None;
                 if max_new > 0 && self.cfg.use_kv_cache {
-                    match self.cache.alloc_with_budget(prompt_len + max_new) {
-                        Some(s) => slot = Some(s),
-                        None => {
-                            // partition exhausted: hand the request back
-                            // and wait for our own lanes to free pages
-                            self.deregister_in_flight(id);
-                            queue.restore(worker, id, req, submitted, deadline);
-                            metrics.record_backpressure();
-                            return;
+                    loop {
+                        match self.cache.alloc_with_budget(prompt_len + max_new) {
+                            Some(s) => {
+                                slot = Some(s);
+                                break;
+                            }
+                            None if self.cfg.preempt => {
+                                let Some(victims) =
+                                    self.pick_victims(prompt_len + max_new)
+                                else {
+                                    self.deregister_in_flight(id);
+                                    queue.restore(
+                                        worker, id, req, submitted, deadline,
+                                    );
+                                    metrics.record_backpressure();
+                                    return;
+                                };
+                                for li in victims {
+                                    let p = self.preempt_lane(li, metrics);
+                                    queue.park(worker, p);
+                                }
+                            }
+                            None => {
+                                // partition exhausted: hand the request back
+                                // and wait for our own lanes to free pages
+                                self.deregister_in_flight(id);
+                                queue.restore(worker, id, req, submitted, deadline);
+                                metrics.record_backpressure();
+                                return;
+                            }
                         }
                     }
                 }
-                let mut lane = self.make_lane(id, &req, submitted, now);
+                let mut lane = self.make_lane(id, &req, submitted, now, deadline);
                 if lane.max_new == 0 {
                     self.deregister_in_flight(id);
                     out.push(Self::finish(lane, 0, now, metrics));
@@ -750,6 +1124,7 @@ impl<'a> Engine<'a> {
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
         self.export_memory(metrics);
+        let mut step = 0usize;
         for _ in 0..self.cfg.max_steps {
             self.admit_sharded(queue, metrics, &mut out);
             if self.active_lanes() == 0 {
@@ -768,9 +1143,54 @@ impl<'a> Engine<'a> {
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
+            step += 1;
+            if self.cfg.use_kv_cache {
+                self.forced_preempt_sharded(step, queue, metrics);
+            }
         }
         self.export_memory(metrics);
         Ok(out)
+    }
+
+    /// Test hooks on the sharded step loop: the `panic_on_preempt_of`
+    /// fault injection (preempt the target, park it on our shard, die —
+    /// the "panic while holding a preempted lane" window the containment
+    /// test exercises) and the `preempt_every` forced-preemption tick.
+    fn forced_preempt_sharded(
+        &mut self,
+        step: usize,
+        queue: &ShardedQueue,
+        metrics: &mut MetricsRegistry,
+    ) {
+        let worker = self.shard.as_ref().unwrap().worker;
+        if let Some(tid) = self.cfg.panic_on_preempt_of {
+            let held = (0..self.lanes.len()).find(|&i| {
+                self.lanes[i]
+                    .as_ref()
+                    .is_some_and(|l| l.id == tid && l.slot.is_some())
+            });
+            if let Some(li) = held {
+                let armed = self
+                    .shard
+                    .as_ref()
+                    .is_some_and(|c| c.preempt_armed.swap(false, Ordering::SeqCst));
+                if armed {
+                    let p = self.preempt_lane(li, metrics);
+                    queue.park(worker, p);
+                    panic!(
+                        "injected worker panic after preempting request {tid}"
+                    );
+                }
+            }
+        }
+        if let Some(n) = self.cfg.preempt_every {
+            if n > 0 && step % n == 0 {
+                if let Some(li) = self.forced_victim() {
+                    let p = self.preempt_lane(li, metrics);
+                    queue.park(worker, p);
+                }
+            }
+        }
     }
 }
 
@@ -860,9 +1280,11 @@ pub fn run_sharded(
         .map(|w| b_eval / workers + usize::from(w < b_eval % workers))
         .collect();
     let in_flight = Mutex::new(vec![HashSet::new(); workers]);
+    let preempt_armed = AtomicBool::new(true);
     type WorkerOutput = (Vec<GenResponse>, MetricsRegistry);
     let joined: Vec<thread::Result<Result<WorkerOutput>>> = thread::scope(|s| {
         let in_flight = &in_flight;
+        let preempt_armed = &preempt_armed;
         let handles: Vec<_> = (0..workers)
             .map(|w| {
                 let (lanes, pages) = (lane_split[w], page_split[w]);
@@ -871,7 +1293,12 @@ pub fn run_sharded(
                         Engine::with_shard_geometry(pipe, model, lanes, ps, pages);
                     engine.cfg =
                         EngineCfg { backend: engine.cfg.backend, ..cfg.clone() };
-                    engine.shard = Some(ShardCtx { worker: w, router, in_flight });
+                    engine.shard = Some(ShardCtx {
+                        worker: w,
+                        router,
+                        in_flight,
+                        preempt_armed,
+                    });
                     let mut metrics = MetricsRegistry::new(&format!("worker{w}"));
                     let out = engine.run_worker(queue, &mut metrics)?;
                     Ok((out, metrics))

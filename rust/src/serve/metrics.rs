@@ -134,6 +134,20 @@ pub struct MetricsRegistry {
     /// the queue head's reservation (one per engine step spent waiting,
     /// so the count also measures how long backpressure lasted)
     pub kv_backpressure_events: usize,
+    /// running lanes evicted by the scheduler (page pressure or a forced
+    /// preemption tick); each one parks its request for later restore
+    pub preemptions: usize,
+    /// prefill chunks that were *split* by the per-step chunk budget —
+    /// steps where a lane advanced its prompt without reaching the end
+    /// (an unchunked prefill contributes 0)
+    pub prefill_chunks: usize,
+    /// positions recomputed while restoring preempted requests (the
+    /// recompute-from-prompt cost; prefix re-adoption shrinks it)
+    pub restored_positions: usize,
+    /// per-token inter-token gaps (ms), the tail-latency series chunked
+    /// prefill exists to flatten; a restored victim's first token
+    /// honestly includes its parked time
+    pub itl_ms: Vec<f64>,
     /// quantization method the packed containers encode (packed backend
     /// only — "ptq161", "billm", "rtn2", ... as labeled by the
     /// [`crate::quant::PackedModel`])
@@ -180,6 +194,10 @@ impl MetricsRegistry {
             prefill_positions: 0,
             prefix_reused_positions: 0,
             kv_backpressure_events: 0,
+            preemptions: 0,
+            prefill_chunks: 0,
+            restored_positions: 0,
+            itl_ms: Vec::new(),
             packed_method: None,
             packed_model_bytes: None,
             packed_bits_per_weight: None,
@@ -228,6 +246,31 @@ impl MetricsRegistry {
     /// Count one admission deferred by page-pool backpressure.
     pub fn record_backpressure(&mut self) {
         self.kv_backpressure_events += 1;
+    }
+
+    /// Count one lane eviction (the victim's request parks for restore).
+    pub fn record_preemption(&mut self) {
+        self.preemptions += 1;
+    }
+
+    /// Count one prefill chunk cut short by the per-step chunk budget.
+    pub fn record_prefill_chunk(&mut self) {
+        self.prefill_chunks += 1;
+    }
+
+    /// Count `positions` recomputed while restoring a preempted request.
+    pub fn record_restored(&mut self, positions: usize) {
+        self.restored_positions += positions;
+    }
+
+    /// Record one inter-token gap (ms since the lane's previous token).
+    pub fn record_itl(&mut self, ms: f64) {
+        self.itl_ms.push(ms);
+    }
+
+    /// 99th-percentile inter-token latency (ms), 0 before any gap.
+    pub fn p99_itl_ms(&self) -> f64 {
+        percentile(&self.itl_ms, 0.99)
     }
 
     /// Fraction of prompt positions served from shared prefix pages
@@ -385,6 +428,10 @@ impl MetricsRegistry {
             out.prefill_positions += m.prefill_positions;
             out.prefix_reused_positions += m.prefix_reused_positions;
             out.kv_backpressure_events += m.kv_backpressure_events;
+            out.preemptions += m.preemptions;
+            out.prefill_chunks += m.prefill_chunks;
+            out.restored_positions += m.restored_positions;
+            out.itl_ms.extend(m.itl_ms.iter().copied());
             // memory: partition pools sum to the deployment's resident
             // footprint; live peaks sum as an upper bound on the
             // simultaneous peak (partitions peak independently)
@@ -482,6 +529,10 @@ impl MetricsRegistry {
                 "kv_backpressure_events",
                 num(self.kv_backpressure_events as f64),
             ),
+            ("preemptions", num(self.preemptions as f64)),
+            ("prefill_chunks", num(self.prefill_chunks as f64)),
+            ("restored_positions", num(self.restored_positions as f64)),
+            ("p99_itl_ms", num(self.p99_itl_ms())),
         ];
         if let Some(b) = &self.backend {
             fields.push(("backend", s(b)));
@@ -770,6 +821,40 @@ mod tests {
         let legacy = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
         assert!(legacy.get("workers").is_none());
         assert!(legacy.get("per_worker").is_none());
+    }
+
+    #[test]
+    fn scheduler_counters_merge_and_export() {
+        let mut a = worker_part(2, 1, &[(0, 10.0)]);
+        a.record_preemption();
+        a.record_prefill_chunk();
+        a.record_prefill_chunk();
+        a.record_restored(24);
+        a.record_itl(1.0);
+        a.record_itl(9.0);
+        let mut b = worker_part(2, 1, &[(1, 20.0)]);
+        b.record_preemption();
+        b.record_itl(5.0);
+        let m = MetricsRegistry::merge_workers("sched", vec![(a, false), (b, false)]);
+        assert_eq!(m.preemptions, 2);
+        assert_eq!(m.prefill_chunks, 2);
+        assert_eq!(m.restored_positions, 24);
+        // ITL samples concatenate: the merged p99 is exact over the union
+        assert_eq!(m.itl_ms.len(), 3);
+        assert_eq!(m.p99_itl_ms(), 9.0);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("preemptions").and_then(Json::as_usize), Some(2));
+        assert_eq!(back.get("prefill_chunks").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            back.get("restored_positions").and_then(Json::as_usize),
+            Some(24)
+        );
+        assert_eq!(back.get("p99_itl_ms").and_then(Json::as_f64), Some(9.0));
+        // the keys are always present — a run without preemption exports
+        // zeros, so downstream assertions never branch on absence
+        let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
+        assert_eq!(empty.get("preemptions").and_then(Json::as_usize), Some(0));
+        assert_eq!(empty.get("p99_itl_ms").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

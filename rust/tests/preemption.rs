@@ -1,0 +1,309 @@
+//! Scheduler torture tests (tier-1, no artifacts needed): chunked
+//! prefill and lane preemption must never change a single token. The
+//! oracle is always the plain single-loop engine with neither feature
+//! enabled — greedy decode is per-lane deterministic, so any divergence
+//! under chunking, page-pressure eviction, forced preemption ticks,
+//! sharding, or their seeded-RNG combinations is a scheduler bug, not
+//! model noise. Satellite coverage rides along: deadline expiry must
+//! reach parked requests, and restores must account their recomputed
+//! positions.
+
+use std::time::Duration;
+
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::model::{Params, LINEARS};
+use ptq161::quant::ptq161::{initial_parts, PackedModel};
+use ptq161::quant::Ptq161Parts;
+use ptq161::runtime::kv::PrefixRouter;
+use ptq161::runtime::Runtime;
+use ptq161::serve::batcher::{Batcher, ShardedQueue};
+use ptq161::serve::{
+    run_sharded, Engine, EngineCfg, GenRequest, MetricsRegistry, ShardRun,
+    ShardSpec,
+};
+use ptq161::util::rng::Rng;
+
+/// PTQ1.61 parts for every linear with a fixed structured mask.
+fn fused_parts(params: &Params, pipe: &Pipeline) -> Vec<Vec<Ptq161Parts>> {
+    (0..pipe.cfg.n_layers)
+        .map(|l| {
+            LINEARS
+                .iter()
+                .map(|lin| {
+                    let w = params.get(&format!("l{l}.{lin}"));
+                    let mask: Vec<bool> =
+                        (0..w.cols()).map(|j| j % 4 == 0).collect();
+                    initial_parts(w, &mask)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Mixed long/short workload: every third prompt is long enough (after
+/// window truncation) to span several pages and several prefill chunks,
+/// and some prompts share a prefix so preemption interacts with the
+/// prefix index. Sized for debug-mode CI.
+fn overload_requests(n: usize) -> Vec<GenRequest> {
+    (0..n)
+        .map(|i| {
+            if i % 3 == 2 {
+                GenRequest {
+                    prompt: format!(
+                        "SYSTEM: long context {i} of the valley desk rolls on"
+                    ),
+                    max_new_tokens: 3,
+                }
+            } else {
+                GenRequest {
+                    prompt: format!("q{i}"),
+                    max_new_tokens: 6,
+                }
+            }
+        })
+        .collect()
+}
+
+/// Plain single-loop run — the identity oracle (no chunking, no
+/// preemption, fully provisioned pool). Texts indexed by request id.
+fn oracle(pipe: &Pipeline, me: &ModelEval, reqs: &[GenRequest]) -> Vec<String> {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new("oracle");
+    let mut engine = Engine::new(pipe, me);
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), reqs.len());
+    resps.into_iter().map(|r| r.text).collect()
+}
+
+/// Single-loop run under a scheduler configuration: explicit cache
+/// geometry plus the chunk/preempt levers. Returns texts by id and the
+/// run's metrics.
+fn tortured(
+    pipe: &Pipeline,
+    me: &ModelEval,
+    reqs: &[GenRequest],
+    kv_pages: Option<usize>,
+    cfg: EngineCfg,
+) -> (Vec<String>, MetricsRegistry) {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new("torture");
+    let mut engine = Engine::with_cache_geometry(pipe, me, 16, kv_pages);
+    engine.cfg = EngineCfg { backend: engine.cfg.backend, ..cfg };
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    assert_eq!(resps.len(), reqs.len(), "scheduler lost or duplicated requests");
+    (resps.into_iter().map(|r| r.text).collect(), metrics)
+}
+
+#[test]
+fn chunked_prefill_is_token_identical_across_chunk_sizes() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(201);
+    let me = ModelEval::Dense(&params);
+    let reqs = overload_requests(6);
+    let base = oracle(&pipe, &me, &reqs);
+    for chunk in [1usize, 2, 3, 5, 64] {
+        let cfg = EngineCfg {
+            prefill_chunk: Some(chunk),
+            ..EngineCfg::default()
+        };
+        let (texts, m) = tortured(&pipe, &me, &reqs, None, cfg);
+        assert_eq!(texts, base, "chunk={chunk}: tokens diverge");
+        if chunk <= 5 {
+            // long prompts (30+ tokens after truncation) cannot fit one
+            // small chunk, so the budget must actually have split them
+            assert!(m.prefill_chunks > 0, "chunk={chunk}: nothing was split");
+        }
+    }
+}
+
+#[test]
+fn page_pressure_preemption_restores_token_identically() {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(202);
+    let me = ModelEval::Dense(&params);
+    let reqs = overload_requests(8);
+    let base = oracle(&pipe, &me, &reqs);
+    // micro: seq 32, page_size 16 → 2 pages per window, 4-page default
+    // pool. A 3-page pool admits two short requests (1 page each) and
+    // then a long one (2 pages) only by evicting — preemption must fire
+    // and every token must still match the oracle.
+    let cfg = EngineCfg { preempt: true, ..EngineCfg::default() };
+    let (texts, m) = tortured(&pipe, &me, &reqs, Some(3), cfg);
+    assert_eq!(texts, base, "preemption changed tokens");
+    assert!(m.preemptions >= 1, "undersized pool never preempted");
+    assert!(
+        m.restored_positions > 0,
+        "restores must account their recomputed positions"
+    );
+    // control: same pool without --preempt only ever backpressures
+    let off = EngineCfg::default();
+    let (texts_off, m_off) = tortured(&pipe, &me, &reqs, Some(3), off);
+    assert_eq!(texts_off, base);
+    assert_eq!(m_off.preemptions, 0);
+}
+
+#[test]
+fn forced_preemption_randomized_schedules_stay_identical() {
+    // Seeded-RNG torture: random page budgets, chunk sizes, forced
+    // preemption cadences, and submission orders. Every schedule must
+    // reproduce the oracle byte-for-byte. Seeds are fixed so a failure
+    // is replayable.
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(203);
+    let me = ModelEval::Dense(&params);
+    let per_window = pipe.cfg.seq.div_ceil(16);
+    let full_pool = pipe.cfg.b_eval * per_window;
+    let mut rng = Rng::new(0xC0FFEE);
+    for trial in 0..6 {
+        let mut reqs = overload_requests(7);
+        rng.shuffle(&mut reqs);
+        let base = oracle(&pipe, &me, &reqs);
+        let kv_pages = per_window + rng.below(full_pool - per_window + 1);
+        let chunk = 1 + rng.below(8);
+        let every = 2 + rng.below(5);
+        let cfg = EngineCfg {
+            prefill_chunk: Some(chunk),
+            preempt: true,
+            preempt_every: Some(every),
+            ..EngineCfg::default()
+        };
+        let (texts, m) = tortured(&pipe, &me, &reqs, Some(kv_pages), cfg);
+        assert_eq!(
+            texts, base,
+            "trial {trial}: pages={kv_pages} chunk={chunk} every={every}"
+        );
+        assert!(
+            m.preemptions >= 1,
+            "trial {trial}: the forced tick must preempt at least once"
+        );
+    }
+}
+
+/// Sharded torture run over an explicit scheduler config.
+fn sharded_tortured(
+    pipe: &Pipeline,
+    me: &ModelEval,
+    reqs: &[GenRequest],
+    workers: usize,
+    kv_pages: Option<usize>,
+    cfg: EngineCfg,
+) -> ShardRun {
+    let queue = ShardedQueue::new(workers);
+    for r in reqs {
+        queue.submit(r.clone());
+    }
+    let router = PrefixRouter::new(16);
+    let cfg = EngineCfg { workers, ..cfg };
+    let spec = ShardSpec { label: "sharded-torture", page_size: 16, kv_pages };
+    run_sharded(pipe, me, &cfg, &queue, &router, &spec).unwrap()
+}
+
+#[test]
+fn torture_matrix_worker_counts_by_backends() {
+    // The headline matrix: 1/2/4 workers × dense/packed under forced
+    // preemption, chunked prefill, and an undersized aggregate pool —
+    // all byte-identical to the no-preemption single-loop oracle.
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "tiny").unwrap();
+    let params = pipe.init_params(204);
+    let parts = fused_parts(&params, &pipe);
+    let packed = PackedModel::pack(&parts);
+    // tiny: seq 128, b_eval 4 → 8 pages per window, 32-page full pool.
+    // 26 aggregate pages undersizes every multi-lane partition.
+    let reqs: Vec<GenRequest> = (0..6)
+        .map(|i| {
+            if i % 3 == 2 {
+                GenRequest {
+                    prompt: format!(
+                        "SYSTEM: the long valley ledger {i} continues \
+                         in exhaustive detail across the whole window"
+                    ),
+                    max_new_tokens: 3,
+                }
+            } else {
+                GenRequest { prompt: format!("q{i}"), max_new_tokens: 4 }
+            }
+        })
+        .collect();
+    let backends: Vec<(&str, ModelEval)> = vec![
+        ("dense", ModelEval::Dense(&params)),
+        ("packed", ModelEval::Packed { params: &params, packed: &packed }),
+    ];
+    for (name, me) in &backends {
+        let base = oracle(&pipe, me, &reqs);
+        for workers in [1usize, 2, 4] {
+            let cfg = EngineCfg {
+                prefill_chunk: Some(8),
+                preempt: true,
+                preempt_every: Some(3),
+                ..EngineCfg::default()
+            };
+            let run =
+                sharded_tortured(&pipe, me, &reqs, workers, Some(26), cfg);
+            assert_eq!(run.worker_panics, 0, "{name}/w{workers}: panicked");
+            assert!(run.failed_requests.is_empty());
+            assert_eq!(run.responses.len(), reqs.len());
+            let texts: Vec<String> =
+                run.responses.into_iter().map(|r| r.text).collect();
+            assert_eq!(
+                texts, base,
+                "{name}/w{workers}: preempted shards diverge from oracle"
+            );
+        }
+    }
+}
+
+#[test]
+fn preempted_request_past_deadline_expires_instead_of_restoring() {
+    // Regression for the expire_overdue bugfix: a request preempted past
+    // its deadline must be dropped by expiry, not silently restored.
+    // Deterministic setup: park an already-overdue victim directly (the
+    // exact state a preemption past its deadline leaves behind) next to
+    // a live request, and run the engine.
+    use std::time::Instant;
+
+    use ptq161::serve::batcher::PreemptedReq;
+
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(205);
+    let me = ModelEval::Dense(&params);
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    let live = batcher.submit(GenRequest {
+        prompt: "healthy request".into(),
+        max_new_tokens: 3,
+    });
+    let now = Instant::now();
+    batcher.park(PreemptedReq {
+        id: 999,
+        req: GenRequest { prompt: "doomed".into(), max_new_tokens: 8 },
+        seq: vec![100, 111, 112],
+        prompt_len: 2,
+        max_new: 8,
+        submitted: now,
+        admitted: now,
+        deadline: Some(Duration::ZERO),
+        last_token_at: None,
+    });
+    let mut metrics = MetricsRegistry::new("deadline");
+    let mut engine = Engine::new(&pipe, &me);
+    let resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    // before the fix, expire_overdue never looked at the parked store:
+    // the doomed request restored (and finished) instead of expiring
+    assert_eq!(metrics.expired, 1, "the parked overdue request must expire");
+    assert_eq!(resps.len(), 1, "only the healthy request completes");
+    assert_eq!(resps[0].id, live);
+    assert_eq!(batcher.pending(), 0, "nothing may stay parked forever");
+}
