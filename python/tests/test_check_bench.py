@@ -30,6 +30,12 @@ BASELINE = {
         "billm": {"bits_per_weight": 3.4286},
     },
     "p99_itl_overload_ratio": 0.75,
+    "bench_packing": {
+        "simd": "avx2",
+        "parallelism": 4,
+        "simd_speedup": 1.5,
+        "intra_parallel_speedup": 1.5,
+    },
 }
 
 
@@ -121,6 +127,52 @@ def test_overload_itl_ratio_band():
     failures = check_bench.run_check(BASELINE, fresh)
     assert len(failures) == 1
     assert "p99_itl_overload_ratio" in failures[0]
+
+
+def test_simd_slowdown_fails():
+    # the acceptance scenario for the kernel-dispatch stack: the SIMD
+    # tier losing its win over the blocked kernel (speedup collapsing to
+    # ~1.0 against a 1.5 baseline) must trip the gate
+    fresh = fresh_like_baseline()
+    fresh["bench_packing"]["simd_speedup"] = 1.0
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "bench_packing.simd_speedup" in failures[0]
+
+
+def test_intra_parallel_slowdown_fails():
+    fresh = fresh_like_baseline()
+    fresh["bench_packing"]["intra_parallel_speedup"] = 0.9
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "bench_packing.intra_parallel_speedup" in failures[0]
+
+
+def test_simd_speedup_skipped_without_simd_tier():
+    # a runner without AVX2/NEON (or one pinned to scalar/blocked via
+    # env) measures no SIMD ratio — hardware, not a regression.  The
+    # intra-parallel check still applies on its own core-count guard.
+    for tier in ("none", "blocked", "scalar", None):
+        fresh = fresh_like_baseline()
+        fresh["bench_packing"]["simd_speedup"] = 0.5
+        if tier is None:
+            del fresh["bench_packing"]["simd"]
+        else:
+            fresh["bench_packing"]["simd"] = tier
+        assert check_bench.run_check(BASELINE, fresh) == []
+
+
+def test_intra_parallel_skipped_below_min_parallelism():
+    # a 2-core runner cannot show a 4-way kernel split win; skip the
+    # intra-parallel ratio but keep gating the SIMD one
+    fresh = fresh_like_baseline()
+    fresh["bench_packing"]["parallelism"] = 2
+    fresh["bench_packing"]["intra_parallel_speedup"] = 0.8
+    assert check_bench.run_check(BASELINE, fresh) == []
+    fresh["bench_packing"]["simd_speedup"] = 1.0
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "bench_packing.simd_speedup" in failures[0]
 
 
 def test_missing_key_fails():

@@ -28,6 +28,15 @@ metric regresses beyond the tolerance band:
   work, so the ratio sits well below 1.0; a scheduler change that lets
   monolithic stalls (or long preemption park times) back into the tail
   moves it up immediately.
+* ``bench_packing.simd_speedup`` — deployed (SIMD) over blocked
+  single-thread mean on the wide packed matvec, higher is better.
+  Compared only when the fresh run actually dispatched a SIMD tier
+  (``bench_packing.simd`` is ``avx2``/``neon``); a runner without the
+  ISA, or one pinned to the scalar/blocked tiers, must not fail for it.
+* ``bench_packing.intra_parallel_speedup`` — full-pool-budget over
+  single-thread mean of the deployed kernel on the same matvec, higher
+  is better.  Like ``worker_scaling``, skipped when the fresh run had
+  fewer than ``MIN_PARALLELISM`` cores (``bench_packing.parallelism``).
 
 Only ratios, rates and storage accounting are gated — absolute step
 times depend on the runner and would make the gate flaky (the per-method
@@ -54,6 +63,8 @@ CHECKS = [
     ("cross_method.billm.bits_per_weight", "lower"),
     ("cross_method.identity", "higher"),
     ("p99_itl_overload_ratio", "lower"),
+    ("bench_packing.simd_speedup", "higher"),
+    ("bench_packing.intra_parallel_speedup", "higher"),
 ]
 
 # below this core count the scaling factor is hardware-bound, not a
@@ -75,12 +86,27 @@ def run_check(baseline, fresh, tolerance=0.2):
     """Compare fresh vs baseline; return a list of failure strings."""
     failures = []
     parallelism = get_path(fresh, "worker_scaling.parallelism")
+    kernel_parallelism = get_path(fresh, "bench_packing.parallelism")
+    simd = get_path(fresh, "bench_packing.simd")
     for key, direction in CHECKS:
         if key.startswith("worker_scaling."):
             if parallelism is None or parallelism < MIN_PARALLELISM:
                 print(
                     f"skip {key}: fresh run had parallelism="
                     f"{parallelism} (< {MIN_PARALLELISM} cores)"
+                )
+                continue
+        if key == "bench_packing.simd_speedup":
+            if simd not in ("avx2", "neon"):
+                # no SIMD tier dispatched (missing ISA, or pinned to
+                # scalar/blocked): the ratio measures nothing — skip
+                print(f"skip {key}: fresh run dispatched simd={simd}")
+                continue
+        if key == "bench_packing.intra_parallel_speedup":
+            if kernel_parallelism is None or kernel_parallelism < MIN_PARALLELISM:
+                print(
+                    f"skip {key}: fresh run had bench_packing.parallelism="
+                    f"{kernel_parallelism} (< {MIN_PARALLELISM} cores)"
                 )
                 continue
         base = get_path(baseline, key)

@@ -3,16 +3,49 @@
 //! 1.61-bit checkpoint, and the prepared-container matvec is the packed
 //! serve path's per-token inner loop (vs the fused path's rebuild-Wq'
 //! matmul).
+//!
+//! The wide-matvec section measures the kernel-dispatch stack on decode's
+//! actual shape (one batch row against a ≥2048-row layer): the blocked
+//! single-thread tier vs the deployed tier (SIMD when detected) at one
+//! intra-op thread and at the full pool budget. The three speedup ratios
+//! (`simd_speedup`, `intra_parallel_speedup`, `combined_speedup`) are
+//! merged into `runs/BENCH_serve.json` under `bench_packing` for CI's
+//! bench-regression gate — merged, not overwritten: `bench_serve` owns
+//! the rest of that file and runs first.
+//!
+//! Correctness gates here mirror the dispatch contracts: the blocked tier
+//! must stay *bit-identical* to the scalar oracle, while the deployed
+//! tier (possibly SIMD, re-associated adds) gets a magnitude-scaled
+//! epsilon gate against the same oracle.
 
 use ptq161::packing::bitpack::BitVec;
 use ptq161::packing::nibble::{quantize_column, NibbleVec};
 use ptq161::quant::ptq161::{initial_parts, PackedLinear};
 use ptq161::runtime::autodiff::{
-    packed_qlinear_fwd, packed_qlinear_fwd_scalar, qlinear_fwd,
+    kernel_tier, packed_decode_fwd, packed_qlinear_fwd,
+    packed_qlinear_fwd_scalar, qlinear_fwd,
 };
+use ptq161::runtime::pool;
 use ptq161::tensor::Tensor;
 use ptq161::util::bench::Bencher;
+use ptq161::util::json::{num, obj, s, Json};
 use ptq161::util::rng::Rng;
+
+/// Assert `got` matches the scalar oracle within the re-association
+/// bound: each output is a length-`inn` chain of products of `x` against
+/// bounded container values, so the worst-case tier-to-tier drift scales
+/// with `inn · Σ|x|` ulps.
+fn assert_close_to_oracle(got: &Tensor, want: &Tensor, x: &Tensor, inn: usize) {
+    let sum_abs: f32 = x.data.iter().map(|v| v.abs()).sum();
+    let tol = 8.0 * f32::EPSILON * inn as f32 * (1.0 + sum_abs);
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (a - b).abs() <= tol,
+            "deployed kernel drifted from the scalar oracle at {i}: \
+             {a} vs {b} (tol {tol})"
+        );
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(3);
@@ -48,16 +81,23 @@ fn main() {
     // scalar set-bit walk vs the 4-row-tiled whole-word kernel the serve
     // path runs: same containers, bit-identical outputs, the delta is the
     // blocked accumulation's win
-    let scalar =
-        b.run("packing/packed_matvec_512_scalar", || {
-            packed_qlinear_fwd_scalar(&x, &pl)
-        });
+    let scalar = b.run("packing/packed_matvec_512_scalar", || {
+        packed_qlinear_fwd_scalar(&x, &pl)
+    });
     let blocked =
         b.run("packing/packed_matvec_512_blocked", || packed_qlinear_fwd(&x, &pl));
     assert_eq!(
         packed_qlinear_fwd(&x, &pl).data,
         packed_qlinear_fwd_scalar(&x, &pl).data,
         "blocked kernel must stay bit-identical to the scalar walk"
+    );
+    // the deployed dispatch (SIMD where detected) re-associates the adds:
+    // epsilon gate, never bit-compared
+    assert_close_to_oracle(
+        &packed_decode_fwd(&x, &pl),
+        &packed_qlinear_fwd_scalar(&x, &pl),
+        &x,
+        inn,
     );
     println!(
         "blocked/scalar packed matvec mean: {:.2}x (below 1.0 = blocked wins)",
@@ -68,4 +108,77 @@ fn main() {
         pl.resident_bytes(),
         pl.effective_bits()
     );
+
+    // ---- kernel-dispatch stack on decode's shape ------------------------
+    // one batch row against a wide layer: the case the output-row split
+    // and the SIMD tiers exist for
+    let (wout, winn) = (2048, 1024);
+    let ww = Tensor::randn(&[wout, winn], 0.1, &mut rng);
+    let wmask: Vec<bool> = (0..winn).map(|j| j % 5 == 0).collect();
+    let wparts = initial_parts(&ww, &wmask);
+    let wpl = PackedLinear::pack(&wparts);
+    let wx = Tensor::randn(&[1, winn], 1.0, &mut rng);
+    assert_close_to_oracle(
+        &packed_decode_fwd(&wx, &wpl),
+        &packed_qlinear_fwd_scalar(&wx, &wpl),
+        &wx,
+        winn,
+    );
+    let budget = pool::thread_budget();
+    let tier = kernel_tier();
+    pool::set_local_intra(1);
+    let blocked_1t = b.run("packing/packed_matvec_2048_blocked_1t", || {
+        packed_qlinear_fwd(&wx, &wpl)
+    });
+    let deployed_1t = b.run("packing/packed_matvec_2048_deployed_1t", || {
+        packed_decode_fwd(&wx, &wpl)
+    });
+    pool::set_local_intra(budget);
+    let deployed_nt = b.run("packing/packed_matvec_2048_deployed_nt", || {
+        packed_decode_fwd(&wx, &wpl)
+    });
+    let simd_speedup = blocked_1t.mean_ns / deployed_1t.mean_ns.max(1e-9);
+    let intra_speedup = deployed_1t.mean_ns / deployed_nt.mean_ns.max(1e-9);
+    let combined = blocked_1t.mean_ns / deployed_nt.mean_ns.max(1e-9);
+    println!(
+        "kernel dispatch 2048x1024 (tier {tier}, {budget} intra threads): \
+         simd {simd_speedup:.2}x, intra-parallel {intra_speedup:.2}x, \
+         combined {combined:.2}x over blocked single-thread"
+    );
+    let simd_available = tier == "avx2" || tier == "neon";
+    if budget >= 4 && simd_available {
+        assert!(
+            combined >= 2.0,
+            "SIMD + intra-parallel must be >= 2x over the blocked \
+             single-thread tier on a >= 4-core host, got {combined:.2}x"
+        );
+    }
+
+    // merge (not overwrite) into the serve-bench summary: bench_serve
+    // writes the rest of this file and runs first in CI
+    let path = ptq161::runs_dir().join("BENCH_serve.json");
+    let mut fields: Vec<(String, Json)> = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| match j {
+            Json::Obj(kv) => Some(kv),
+            _ => None,
+        })
+        .unwrap_or_default();
+    fields.retain(|(k, _)| k != "bench_packing");
+    fields.push((
+        "bench_packing".to_string(),
+        obj(vec![
+            ("simd", s(tier)),
+            ("parallelism", num(budget as f64)),
+            ("simd_speedup", num(simd_speedup)),
+            ("intra_parallel_speedup", num(intra_speedup)),
+            ("combined_speedup", num(combined)),
+            ("blocked_1t_mean_ns", num(blocked_1t.mean_ns)),
+            ("deployed_1t_mean_ns", num(deployed_1t.mean_ns)),
+            ("deployed_nt_mean_ns", num(deployed_nt.mean_ns)),
+        ]),
+    ));
+    std::fs::write(&path, Json::Obj(fields).dump()).unwrap();
+    println!("kernel-dispatch summary merged into {}", path.display());
 }

@@ -7,8 +7,9 @@
 //!   eval        --model tiny --method ptq161 [--preprocessed] [--fused]
 //!   serve       --model tiny --method ptq161 --requests 16 [--drain]
 //!               [--no-kv] [--backend dense|fused|packed] [--workers N]
-//!               [--page-size 16] [--kv-pages N] [--prefill-chunk N]
-//!               [--preempt] [--overload] [--verify-identity]
+//!               [--intra-threads N] [--page-size 16] [--kv-pages N]
+//!               [--prefill-chunk N] [--preempt] [--overload]
+//!               [--verify-identity]
 //!               (quick-scale by default; --full for the full pipeline;
 //!               paged KV-cached incremental decode unless --no-kv;
 //!               ptq161 defaults to the prepared packed-container
@@ -16,6 +17,9 @@
 //!               admission backpressure; --workers N shards lanes and
 //!               the page pool across N OS threads over a work-stealing
 //!               queue (clamped to b_eval; incompatible with --drain);
+//!               --intra-threads caps the global intra-op kernel thread
+//!               budget the pool splits across workers (defaults to the
+//!               host's cores; PTQ161_INTRA_THREADS env equivalent);
 //!               --prefill-chunk caps prefill tokens per step so decode
 //!               lanes keep emitting between a long prompt's chunks;
 //!               --preempt evicts low-progress lanes under page pressure
@@ -205,6 +209,13 @@ fn main() -> Result<()> {
                 c => Some(c),
             };
             let preempt = args.flag("preempt");
+            // --intra-threads N pins the global intra-op kernel thread
+            // budget (sharded workers split it; 0/absent keeps the
+            // PTQ161_INTRA_THREADS / host-core default)
+            let intra = args.usize_opt("intra-threads", 0);
+            if intra > 0 {
+                ptq161::runtime::pool::set_thread_budget(intra);
+            }
             // --workers N shards lanes + page pool across N OS threads
             // (clamped so every worker owns at least one lane); the drain
             // baseline is a single static-batching loop by definition

@@ -49,6 +49,14 @@ impl NibbleVec {
         (0..self.len).map(|i| self.get(i)).collect()
     }
 
+    /// Raw packed bytes (nibble `i` is the low half of byte `i / 2` for
+    /// even `i`, the high half for odd `i`) — the SIMD kernels unpack
+    /// whole 8-byte blocks instead of calling [`NibbleVec::get`] per code.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
     pub fn storage_bits(&self) -> usize {
         self.len * 4
     }

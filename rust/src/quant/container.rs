@@ -23,6 +23,14 @@
 //! `quant/ptq161/packed.rs`); its packed-vs-dense token identity is gated
 //! empirically in `tests/multi_worker.rs` and `tests/packed_serve.rs`.
 //!
+//! Every `decode_fwd` here runs through the shared [`decode_matvec`]
+//! driver, which joins the kernel-dispatch stack of ARCHITECTURE.md: it
+//! is timed into the per-thread kernel counter, honors the
+//! `PTQ161_FORCE_SCALAR=1` oracle lane, and splits work across the
+//! intra-op pool. Unlike PTQ1.61's sign-word kernel these containers get
+//! the *parallel* tier only — no re-associated SIMD variant — because the
+//! bit-identity invariant above is their contract.
+//!
 //! Extension checklist for the next quantizer (see ARCHITECTURE.md):
 //! carry codes from quantization time, assert bit-exact decode in the
 //! constructor, accumulate ascending-j in `decode_fwd`, report both
@@ -33,7 +41,7 @@ use std::sync::Arc;
 
 use crate::packing::{BitVec, CodeVec};
 use crate::quant::Ptq161Parts;
-use crate::runtime::autodiff::par_rows;
+use crate::runtime::autodiff::{force_scalar, par_matvec, time_kernel};
 use crate::tensor::Tensor;
 
 /// One block linear in prepared packed form — the serve engine's weight
@@ -90,6 +98,13 @@ fn assert_bit_exact(deq: &Tensor, decode: impl Fn(usize, usize) -> f32, what: &s
 /// batch row, for each output row, accumulate `x[j] * w(o, j)` from 0.0
 /// in ascending `j` — the exact association of `linear_fwd`, so the
 /// packed product is bit-identical to the dense backend's.
+///
+/// The intra-op split ([`par_matvec`]) chunks batch rows, or the output
+/// rows of a single wide matvec (decode's actual shape); either way each
+/// `y[r][o]` is one complete `row_dot` call inside exactly one chunk, so
+/// the ascending-j association — and with it `--verify-identity` — is
+/// preserved for any chunk count. `PTQ161_FORCE_SCALAR=1` pins the plain
+/// serial loop for the oracle lane.
 fn decode_matvec(
     x: &Tensor,
     out: usize,
@@ -102,11 +117,29 @@ fn decode_matvec(
     *yshape.last_mut().unwrap() = out;
     let mut y = Tensor::zeros(&yshape);
     let xd = &x.data;
-    par_rows(&mut y.data, out, &|r, yr| {
-        let xr = &xd[r * inn..(r + 1) * inn];
-        for (o, yo) in yr.iter_mut().enumerate() {
-            *yo = row_dot(o, xr);
+    time_kernel(|| {
+        if force_scalar() {
+            for (r, yr) in y.data.chunks_mut(out.max(1)).enumerate() {
+                let xr = &xd[r * inn..(r + 1) * inn];
+                for (o, yo) in yr.iter_mut().enumerate() {
+                    *yo = row_dot(o, xr);
+                }
+            }
+            return;
         }
+        // bits-per-input-channel varies by plane layout; inn / 4 is a
+        // fair cross-container byte estimate for the split threshold
+        par_matvec(
+            &mut y.data,
+            out,
+            inn / 4 + 16,
+            |r| &xd[r * inn..(r + 1) * inn],
+            |xr, _r, o0, ys| {
+                for (k, yo) in ys.iter_mut().enumerate() {
+                    *yo = row_dot(o0 + k, xr);
+                }
+            },
+        );
     });
     y
 }

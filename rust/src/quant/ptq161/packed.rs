@@ -11,10 +11,11 @@
 //! scaling vectors; the method-agnostic
 //! [`crate::quant::container::PackedModel`] holds one such container per
 //! block linear and is built **once** at engine construction. The
-//! decode-time contraction (`runtime::autodiff::packed_qlinear_fwd`) then
-//! runs directly on these containers — ±1 accumulation over sign words,
-//! nibble decode fused into the salient dot product — with zero per-step
-//! weight reconstruction. [`PackedLinear`] implements
+//! decode-time contraction (`runtime::autodiff::packed_decode_fwd`, which
+//! dispatches between the scalar oracle, the blocked kernel and the SIMD
+//! tiers) then runs directly on these containers — ±1 accumulation over
+//! sign words, nibble decode fused into the salient dot product — with
+//! zero per-step weight reconstruction. [`PackedLinear`] implements
 //! [`crate::quant::PackedContainer`], the trait the serve engine
 //! dispatches on; note its kernel re-associates the float accumulation
 //! (sign words first, salient nibbles second), so unlike the baseline
@@ -236,6 +237,13 @@ impl PackedLinear {
         self.codes.get(i)
     }
 
+    /// Raw packed nibble bytes of the row-major code plane — the SIMD
+    /// tiers decode 16 codes per 8-byte load instead of per-nibble gets.
+    #[inline]
+    pub(crate) fn code_bytes(&self) -> &[u8] {
+        self.codes.bytes()
+    }
+
     #[inline]
     pub(crate) fn col_scale(&self) -> &[f32] {
         &self.col_scale
@@ -359,7 +367,7 @@ impl crate::quant::PackedContainer for PackedLinear {
     }
 
     fn decode_fwd(&self, x: &Tensor) -> Tensor {
-        crate::runtime::autodiff::packed_qlinear_fwd(x, self)
+        crate::runtime::autodiff::packed_decode_fwd(x, self)
     }
 
     fn dequantize(&self) -> Tensor {

@@ -15,9 +15,12 @@
 //! with (or bit-identical to) the corresponding tape ops, which is what
 //! makes cached decode token-identical to the full-window path.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 use crate::quant::ptq161::PackedLinear;
+use crate::runtime::{pool, simd};
 use crate::tensor::Tensor;
 
 /// RMSNorm variance epsilon (matches python/compile/model.py).
@@ -37,6 +40,57 @@ pub fn qlinear_weight_reconstructions() -> u64 {
     QLINEAR_RECONSTRUCTIONS.load(Ordering::Relaxed)
 }
 
+thread_local! {
+    /// Nanoseconds this thread has spent inside the decode-path matvec
+    /// kernels (dense, fused and packed), measured around the whole
+    /// dispatch — pool chunk time is covered because the submitting
+    /// thread blocks until every chunk finishes. Thread-local so each
+    /// sharded engine worker attributes only its own kernel time; the
+    /// engine diffs two reads around a run and exports the per-step
+    /// kernel share in the metrics JSON.
+    static KERNEL_NANOS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's cumulative decode-kernel time (monotone; diff two
+/// reads to measure an interval).
+pub fn kernel_nanos() -> u64 {
+    KERNEL_NANOS.with(|c| c.get())
+}
+
+/// Run `f`, charging its wall time to this thread's kernel counter.
+pub(crate) fn time_kernel<T>(f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let y = f();
+    KERNEL_NANOS.with(|c| c.set(c.get() + t0.elapsed().as_nanos() as u64));
+    y
+}
+
+/// Read `PTQ161_FORCE_SCALAR` dynamically — per dispatch call, not
+/// cached — so in-process tests can toggle the fallback path.
+pub(crate) fn force_scalar() -> bool {
+    std::env::var("PTQ161_FORCE_SCALAR").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The kernel tier [`packed_decode_fwd`] will run right now: `"scalar"`,
+/// `"blocked"`, `"avx2"` or `"neon"`. Resolution order:
+/// `PTQ161_FORCE_SCALAR=1` forces the scalar oracle, then
+/// `PTQ161_KERNEL=scalar|blocked|simd` overrides, then runtime ISA
+/// detection picks the SIMD tier with the blocked kernel as fallback.
+pub fn kernel_tier() -> &'static str {
+    if force_scalar() {
+        return "scalar";
+    }
+    match std::env::var("PTQ161_KERNEL").ok().as_deref() {
+        Some("scalar") => return "scalar",
+        Some("blocked") => return "blocked",
+        _ => {}
+    }
+    match simd::detected() {
+        "none" => "blocked",
+        tier => tier,
+    }
+}
+
 pub type NodeId = usize;
 
 type BackFn = Box<dyn Fn(&Tensor) -> Vec<(NodeId, Tensor)>>;
@@ -54,8 +108,18 @@ fn add_into(acc: &mut Tensor, x: &Tensor) {
     }
 }
 
-/// Run `f(row_index, row_slice)` over the rows of a flat buffer, splitting
-/// the rows across threads when the buffer is big enough to pay for it.
+/// A raw `*mut f32` the parallel drivers move across threads: each pool
+/// chunk receives a *disjoint* sub-slice of one output buffer, so the
+/// aliasing the pointer smuggles past the borrow checker never occurs.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Run `f(row_index, row_slice)` over the rows of a flat buffer, chunking
+/// row ranges across the persistent intra-op pool when the work is big
+/// enough to pay for it ([`pool::plan_chunks`] owns the heuristics — the
+/// old per-call scoped threads, `min(8)` cap and `rows / 128` threshold
+/// are gone).
 pub(crate) fn par_rows(
     out: &mut [f32],
     row_len: usize,
@@ -65,30 +129,104 @@ pub(crate) fn par_rows(
         return;
     }
     let rows = out.len() / row_len;
-    // scoped threads are spawned per call, so only split work that is
-    // comfortably larger than the ~tens-of-microseconds spawn cost, and
-    // keep the thread count proportional to the row count
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min((rows / 128).max(1))
-        .min(8);
-    if threads <= 1 || out.len() < (1 << 16) {
+    let chunks = pool::plan_chunks(rows, row_len * 4, pool::local_intra());
+    if chunks <= 1 {
         for (r, chunk) in out.chunks_mut(row_len).enumerate() {
             f(r, chunk);
         }
         return;
     }
-    let per = rows.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (ti, block) in out.chunks_mut(per * row_len).enumerate() {
-            s.spawn(move || {
-                for (r, chunk) in block.chunks_mut(row_len).enumerate() {
-                    f(ti * per + r, chunk);
-                }
-            });
+    let per = rows.div_ceil(chunks);
+    let base = SendPtr(out.as_mut_ptr());
+    pool::run_chunked(rows.div_ceil(per), &|ci| {
+        let r0 = ci * per;
+        let r1 = ((ci + 1) * per).min(rows);
+        for r in r0..r1 {
+            // SAFETY: row ranges [r0, r1) are disjoint across chunks, so
+            // each row slice is exclusively owned by exactly one chunk,
+            // and `out` outlives run_chunked (the caller blocks in it)
+            let chunk = unsafe {
+                std::slice::from_raw_parts_mut(base.0.add(r * row_len), row_len)
+            };
+            f(r, chunk);
         }
     });
+}
+
+/// Parallel driver for the decode-path matvecs: `y` is `(rows, out)`
+/// row-major, `prep(r)` builds batch row `r`'s shared operands once, and
+/// `fill(ctx, r, o0, ys)` computes outputs `[o0, o0 + ys.len())` of that
+/// row. Two split regimes, chosen by shape: with at least as many batch
+/// rows as intra-op threads the *batch* rows are chunked (prefill /
+/// training shape); otherwise each matvec's *output* rows are chunked —
+/// decode's actual shape (a handful of lanes against a wide layer), which
+/// the old batch-only split left serial on any host. `bytes_per_out`
+/// approximates the weight bytes one output row touches and feeds the
+/// bytes-of-work split threshold.
+///
+/// Every `y[r][o]` is computed whole inside exactly one chunk, so any
+/// chunk count is bit-identical to the serial loop.
+pub(crate) fn par_matvec<T, P, F>(
+    y: &mut [f32],
+    out: usize,
+    bytes_per_out: usize,
+    prep: P,
+    fill: F,
+) where
+    T: Sync,
+    P: Fn(usize) -> T + Sync,
+    F: Fn(&T, usize, usize, &mut [f32]) + Sync,
+{
+    if out == 0 || y.is_empty() {
+        return;
+    }
+    let rows = y.len() / out;
+    let threads = pool::local_intra();
+    if rows >= threads {
+        let row_bytes = out.saturating_mul(bytes_per_out);
+        let chunks = pool::plan_chunks(rows, row_bytes, threads);
+        if chunks > 1 {
+            let per = rows.div_ceil(chunks);
+            let base = SendPtr(y.as_mut_ptr());
+            pool::run_chunked(rows.div_ceil(per), &|ci| {
+                let r0 = ci * per;
+                let r1 = ((ci + 1) * per).min(rows);
+                for r in r0..r1 {
+                    let ctx = prep(r);
+                    // SAFETY: batch-row ranges are disjoint across chunks
+                    let ys = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(r * out), out)
+                    };
+                    fill(&ctx, r, 0, ys);
+                }
+            });
+            return;
+        }
+    } else {
+        let chunks = pool::plan_chunks(out, bytes_per_out, threads);
+        if chunks > 1 {
+            let per = out.div_ceil(chunks);
+            for r in 0..rows {
+                let ctx = prep(r);
+                let base = SendPtr(y[r * out..(r + 1) * out].as_mut_ptr());
+                pool::run_chunked(out.div_ceil(per), &|ci| {
+                    let o0 = ci * per;
+                    let o1 = ((ci + 1) * per).min(out);
+                    // SAFETY: output ranges [o0, o1) are disjoint across
+                    // chunks within this batch row
+                    let ys = unsafe {
+                        std::slice::from_raw_parts_mut(base.0.add(o0), o1 - o0)
+                    };
+                    fill(&ctx, r, o0, ys);
+                });
+            }
+            return;
+        }
+    }
+    for r in 0..rows {
+        let ctx = prep(r);
+        fill(&ctx, r, 0, &mut y[r * out..(r + 1) * out]);
+    }
 }
 
 impl Tape {
@@ -773,12 +911,21 @@ pub fn linear_fwd(x: &Tensor, w: &Tensor) -> Tensor {
     let mut y = Tensor::zeros(&yshape);
     let xd = &x.data;
     let wd = &w.data;
-    par_rows(&mut y.data, out, &|r, yr| {
-        let xr = &xd[r * inn..(r + 1) * inn];
-        for (o, yo) in yr.iter_mut().enumerate() {
-            let wr = &wd[o * inn..(o + 1) * inn];
-            *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
-        }
+    time_kernel(|| {
+        par_matvec(
+            &mut y.data,
+            out,
+            inn * 4,
+            |_r| (),
+            |_, r, o0, ys| {
+                let xr = &xd[r * inn..(r + 1) * inn];
+                for (k, yo) in ys.iter_mut().enumerate() {
+                    let o = o0 + k;
+                    let wr = &wd[o * inn..(o + 1) * inn];
+                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum();
+                }
+            },
+        )
     });
     y
 }
@@ -856,12 +1003,22 @@ pub(crate) fn qlinear_matmul(x: &Tensor, wq: &Tensor, xs: &[f32], mu: &Tensor) -
     let xd = &x.data;
     let wd = &wq.data;
     let mud = &mu.data;
-    par_rows(&mut y.data, out, &|r, yr| {
-        let xr = &xd[r * inn..(r + 1) * inn];
-        for (o, yo) in yr.iter_mut().enumerate() {
-            let wr = &wd[o * inn..(o + 1) * inn];
-            *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>() + xs[r] * mud[o];
-        }
+    time_kernel(|| {
+        par_matvec(
+            &mut y.data,
+            out,
+            inn * 4,
+            |_r| (),
+            |_, r, o0, ys| {
+                let xr = &xd[r * inn..(r + 1) * inn];
+                for (k, yo) in ys.iter_mut().enumerate() {
+                    let o = o0 + k;
+                    let wr = &wd[o * inn..(o + 1) * inn];
+                    *yo = xr.iter().zip(wr).map(|(a, b)| a * b).sum::<f32>()
+                        + xs[r] * mud[o];
+                }
+            },
+        )
     });
     y
 }
@@ -892,7 +1049,11 @@ fn packed_row_operands(
     xr: &[f32],
     pl: &PackedLinear,
 ) -> (Vec<f32>, f32, f32, Vec<f32>, f32) {
-    let mut z = vec![0.0f32; pl.ns_cols().len()];
+    // `z` is padded to whole 64-lane sign words so the SIMD tiers can
+    // issue full-width loads; tail lanes stay 0.0 and their sign bits are
+    // never set, so every tier ignores them
+    let n_ns = pl.ns_cols().len();
+    let mut z = vec![0.0f32; n_ns.div_ceil(64) * 64];
     let mut ztot = 0.0f32;
     let mut xs = 0.0f32;
     for (c, &j) in pl.ns_cols().iter().enumerate() {
@@ -970,14 +1131,26 @@ pub fn packed_qlinear_fwd_scalar(x: &Tensor, pl: &PackedLinear) -> Tensor {
     *yshape.last_mut().unwrap() = out;
     let mut y = Tensor::zeros(&yshape);
     let xd = &x.data;
-    par_rows(&mut y.data, out, &|r, yr| {
-        let xr = &xd[r * inn..(r + 1) * inn];
-        let (z, ztot, xs, xq, xmin) = packed_row_operands(xr, pl);
-        for (o, yo) in yr.iter_mut().enumerate() {
-            *yo = packed_row_scalar(pl, o, &z, ztot, xs, &xq, xmin);
-        }
-    });
+    par_matvec(
+        &mut y.data,
+        out,
+        packed_bytes_per_out(pl),
+        |r| packed_row_operands(&xd[r * inn..(r + 1) * inn], pl),
+        |ops, _r, o0, ys| {
+            let (z, ztot, xs, xq, xmin) = ops;
+            for (k, yo) in ys.iter_mut().enumerate() {
+                *yo = packed_row_scalar(pl, o0 + k, z, *ztot, *xs, xq, *xmin);
+            }
+        },
+    );
     y
+}
+
+/// Approximate container bytes one packed output row touches (sign words
+/// + nibble codes + per-row floats) — the bytes-of-work hint the split
+/// heuristics run on.
+fn packed_bytes_per_out(pl: &PackedLinear) -> usize {
+    pl.ns_cols().len() / 8 + pl.sal_cols().len() / 2 + 16
 }
 
 /// Blocked packed contraction: the serve-path kernel. Outputs are
@@ -995,7 +1168,10 @@ pub fn packed_qlinear_fwd_scalar(x: &Tensor, pl: &PackedLinear) -> Tensor {
 /// `z * ((w >> j) & 1)` contributes exactly `±0.0` for unset bits, which
 /// is an exact no-op on the accumulator (the partial sums can never be
 /// `-0.0`: they start at `+0.0` and IEEE-754 round-to-nearest addition
-/// only yields `-0.0` from two negative-zero operands).
+/// only yields `-0.0` from two negative-zero operands). The same no-op
+/// argument makes each row's value independent of which rows share its
+/// tile, so the output split [`par_matvec`] applies may start a tile at
+/// any offset without changing a single bit.
 pub fn packed_qlinear_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
     let (out, inn) = (pl.out(), pl.inn());
     assert_eq!(*x.shape.last().unwrap(), inn, "packed qlinear contraction");
@@ -1003,55 +1179,116 @@ pub fn packed_qlinear_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
     *yshape.last_mut().unwrap() = out;
     let mut y = Tensor::zeros(&yshape);
     let xd = &x.data;
-    let n_sal = pl.sal_cols().len();
-    par_rows(&mut y.data, out, &|r, yr| {
-        let xr = &xd[r * inn..(r + 1) * inn];
-        let (z, ztot, xs, xq, xmin) = packed_row_operands(xr, pl);
-        let mut o = 0;
-        while o + 4 <= out {
-            let w0 = pl.sign_words(o);
-            let w1 = pl.sign_words(o + 1);
-            let w2 = pl.sign_words(o + 2);
-            let w3 = pl.sign_words(o + 3);
-            let (mut p0, mut p1, mut p2, mut p3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for wi in 0..w0.len() {
-                let (a, b, c, d) = (w0[wi], w1[wi], w2[wi], w3[wi]);
-                let mut any = a | b | c | d;
-                let base = wi * 64;
-                while any != 0 {
-                    let j = any.trailing_zeros() as usize;
-                    let zv = z[base + j];
-                    p0 += zv * ((a >> j) & 1) as f32;
-                    p1 += zv * ((b >> j) & 1) as f32;
-                    p2 += zv * ((c >> j) & 1) as f32;
-                    p3 += zv * ((d >> j) & 1) as f32;
-                    any &= any - 1;
-                }
-            }
-            let (mut s0, mut s1, mut s2, mut s3) = (xmin, xmin, xmin, xmin);
-            let cb = o * n_sal;
-            for (c, &xv) in xq.iter().enumerate() {
-                s0 += pl.code(cb + c) as f32 * xv;
-                s1 += pl.code(cb + n_sal + c) as f32 * xv;
-                s2 += pl.code(cb + 2 * n_sal + c) as f32 * xv;
-                s3 += pl.code(cb + 3 * n_sal + c) as f32 * xv;
-            }
-            yr[o] = s0 + pl.row_scale()[o] * (2.0 * p0 - ztot) + xs * pl.mu()[o];
-            yr[o + 1] =
-                s1 + pl.row_scale()[o + 1] * (2.0 * p1 - ztot) + xs * pl.mu()[o + 1];
-            yr[o + 2] =
-                s2 + pl.row_scale()[o + 2] * (2.0 * p2 - ztot) + xs * pl.mu()[o + 2];
-            yr[o + 3] =
-                s3 + pl.row_scale()[o + 3] * (2.0 * p3 - ztot) + xs * pl.mu()[o + 3];
-            o += 4;
-        }
-        // remainder rows (out % 4): the scalar walk, same order
-        while o < out {
-            yr[o] = packed_row_scalar(pl, o, &z, ztot, xs, &xq, xmin);
-            o += 1;
-        }
-    });
+    par_matvec(
+        &mut y.data,
+        out,
+        packed_bytes_per_out(pl),
+        |r| packed_row_operands(&xd[r * inn..(r + 1) * inn], pl),
+        |ops, _r, o0, ys| {
+            let (z, ztot, xs, xq, xmin) = ops;
+            packed_fill_blocked(pl, z, *ztot, *xs, xq, *xmin, o0, ys);
+        },
+    );
     y
+}
+
+/// The blocked 4-row tile over one chunk `[o0, o0 + ys.len())` of output
+/// rows; `ys[k]` receives output row `o0 + k`.
+fn packed_fill_blocked(
+    pl: &PackedLinear,
+    z: &[f32],
+    ztot: f32,
+    xs: f32,
+    xq: &[f32],
+    xmin: f32,
+    o0: usize,
+    ys: &mut [f32],
+) {
+    let n_sal = pl.sal_cols().len();
+    let out_hi = o0 + ys.len();
+    let mut o = o0;
+    while o + 4 <= out_hi {
+        let w0 = pl.sign_words(o);
+        let w1 = pl.sign_words(o + 1);
+        let w2 = pl.sign_words(o + 2);
+        let w3 = pl.sign_words(o + 3);
+        let (mut p0, mut p1, mut p2, mut p3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for wi in 0..w0.len() {
+            let (a, b, c, d) = (w0[wi], w1[wi], w2[wi], w3[wi]);
+            let mut any = a | b | c | d;
+            let base = wi * 64;
+            while any != 0 {
+                let j = any.trailing_zeros() as usize;
+                let zv = z[base + j];
+                p0 += zv * ((a >> j) & 1) as f32;
+                p1 += zv * ((b >> j) & 1) as f32;
+                p2 += zv * ((c >> j) & 1) as f32;
+                p3 += zv * ((d >> j) & 1) as f32;
+                any &= any - 1;
+            }
+        }
+        let (mut s0, mut s1, mut s2, mut s3) = (xmin, xmin, xmin, xmin);
+        let cb = o * n_sal;
+        for (c, &xv) in xq.iter().enumerate() {
+            s0 += pl.code(cb + c) as f32 * xv;
+            s1 += pl.code(cb + n_sal + c) as f32 * xv;
+            s2 += pl.code(cb + 2 * n_sal + c) as f32 * xv;
+            s3 += pl.code(cb + 3 * n_sal + c) as f32 * xv;
+        }
+        ys[o - o0] = s0 + pl.row_scale()[o] * (2.0 * p0 - ztot) + xs * pl.mu()[o];
+        ys[o - o0 + 1] =
+            s1 + pl.row_scale()[o + 1] * (2.0 * p1 - ztot) + xs * pl.mu()[o + 1];
+        ys[o - o0 + 2] =
+            s2 + pl.row_scale()[o + 2] * (2.0 * p2 - ztot) + xs * pl.mu()[o + 2];
+        ys[o - o0 + 3] =
+            s3 + pl.row_scale()[o + 3] * (2.0 * p3 - ztot) + xs * pl.mu()[o + 3];
+        o += 4;
+    }
+    // remainder rows (chunk length % 4): the scalar walk, same order
+    while o < out_hi {
+        ys[o - o0] = packed_row_scalar(pl, o, z, ztot, xs, xq, xmin);
+        o += 1;
+    }
+}
+
+/// The SIMD deployment tier: same [`par_matvec`] split as the blocked
+/// kernel, but each chunk runs the detected ISA's vector kernel
+/// ([`simd::packed_fill`]); chunks fall back to the blocked tile when no
+/// tier is compiled in or detected at runtime. Lane reduction order is
+/// fixed, so results are deterministic run-to-run, but the wider adds
+/// re-associate the scalar chain — this tier is epsilon-gated against
+/// [`packed_qlinear_fwd_scalar`], never bit-compared.
+fn packed_qlinear_fwd_simd(x: &Tensor, pl: &PackedLinear) -> Tensor {
+    let (out, inn) = (pl.out(), pl.inn());
+    assert_eq!(*x.shape.last().unwrap(), inn, "packed qlinear contraction");
+    let mut yshape = x.shape.clone();
+    *yshape.last_mut().unwrap() = out;
+    let mut y = Tensor::zeros(&yshape);
+    let xd = &x.data;
+    par_matvec(
+        &mut y.data,
+        out,
+        packed_bytes_per_out(pl),
+        |r| packed_row_operands(&xd[r * inn..(r + 1) * inn], pl),
+        |ops, _r, o0, ys| {
+            let (z, ztot, xs, xq, xmin) = ops;
+            if !simd::packed_fill(pl, z, *ztot, *xs, xq, *xmin, o0, ys) {
+                packed_fill_blocked(pl, z, *ztot, *xs, xq, *xmin, o0, ys);
+            }
+        },
+    );
+    y
+}
+
+/// The packed decode entry point the serve path calls: dispatches to the
+/// tier [`kernel_tier`] selects (scalar oracle, blocked, or SIMD) and
+/// charges the wall time to the per-thread kernel counter.
+pub fn packed_decode_fwd(x: &Tensor, pl: &PackedLinear) -> Tensor {
+    time_kernel(|| match kernel_tier() {
+        "scalar" => packed_qlinear_fwd_scalar(x, pl),
+        "blocked" => packed_qlinear_fwd(x, pl),
+        _ => packed_qlinear_fwd_simd(x, pl),
+    })
 }
 
 /// The per-lane rotary frequencies `1 / theta^(i/half)` — hoisted out of

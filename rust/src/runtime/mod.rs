@@ -24,6 +24,8 @@ pub mod autodiff;
 pub mod kv;
 pub mod manifest;
 pub mod native;
+pub mod pool;
+pub mod simd;
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,0 +1,375 @@
+//! Persistent intra-op worker pool for the decode kernels.
+//!
+//! `par_rows`' original scoped-thread split paid a thread-spawn per layer
+//! call and hard-coded its heuristics (a `min(8)` thread cap and a
+//! `rows / 128` threshold), which left a wide single-row decode matvec
+//! serial on any host. This module replaces that with:
+//!
+//! - a process-wide pool of detached worker threads, spawned once and
+//!   reused by every chunked kernel call ([`run_chunked`]);
+//! - one bytes-of-work split policy ([`plan_chunks`]): split only when the
+//!   total work clears [`MIN_SPLIT_BYTES`], and size chunks so each claims
+//!   at least [`MIN_CHUNK_BYTES`] of it;
+//! - a global thread budget that composes with `--workers N` sharding: the
+//!   budget defaults to `available_parallelism` (overridable via
+//!   `serve --intra-threads` / `PTQ161_INTRA_THREADS`), and each engine
+//!   worker thread pins its own per-thread share with [`set_local_intra`]
+//!   so N shards × intra-op chunks never oversubscribe the machine.
+//!
+//! Scheduling protocol: a caller publishes a [`Job`] (a chunk counter plus
+//! a `Fn(usize)` task), then claims and runs chunks itself alongside the
+//! pool workers and blocks until every claimed chunk has *finished*. The
+//! caller always participating means a 1-thread budget degrades to a plain
+//! serial loop and the pool can never deadlock waiting for a free worker.
+//! Worker panics are caught and re-raised on the submitting caller.
+//!
+//! Chunk assignment is dynamic (an atomic claim counter), but kernels
+//! built on this stay bit-identical to their serial form because every
+//! output element is computed *whole* inside exactly one chunk — the split
+//! changes which thread runs an output row, never the accumulation order
+//! within it.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Work below this many bytes runs serially: it would not amortize the
+/// pool's wake-up/notify cost. (Matches the old `par_rows` threshold of
+/// 2^16 f32 elements.)
+pub const MIN_SPLIT_BYTES: usize = 1 << 18;
+/// Each chunk must claim at least this much work, so tiny tails never
+/// outnumber the useful chunks.
+pub const MIN_CHUNK_BYTES: usize = 1 << 16;
+
+/// Resolved global thread budget; 0 = not yet resolved.
+static BUDGET: AtomicUsize = AtomicUsize::new(0);
+/// Split threshold, lowered by tests to force chunking on tiny shapes.
+static SPLIT_BYTES: AtomicUsize = AtomicUsize::new(MIN_SPLIT_BYTES);
+
+thread_local! {
+    /// Per-thread intra-op thread allowance; 0 = unset (use the budget).
+    /// Sharded engine workers set this to `budget / workers`.
+    static LOCAL_INTRA: Cell<usize> = const { Cell::new(0) };
+}
+
+/// The process-wide intra-op thread budget: an explicit
+/// [`set_thread_budget`] wins, then `PTQ161_INTRA_THREADS`, then
+/// `available_parallelism`. Resolved once and cached.
+pub fn thread_budget() -> usize {
+    let b = BUDGET.load(Ordering::Relaxed);
+    if b != 0 {
+        return b;
+    }
+    let n = std::env::var("PTQ161_INTRA_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        });
+    BUDGET.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Override the global budget (the `serve --intra-threads` knob). Takes
+/// effect for every subsequent split decision; already-idle pool workers
+/// beyond a shrunk budget simply stay idle.
+pub fn set_thread_budget(n: usize) {
+    BUDGET.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Pin this thread's intra-op allowance (sharded engine workers use
+/// `budget / workers` so the shards compose instead of oversubscribing).
+pub fn set_local_intra(n: usize) {
+    LOCAL_INTRA.with(|c| c.set(n.max(1)));
+}
+
+/// The split width the current thread may use: its pinned allowance if
+/// set (clamped to the budget), else the whole budget.
+pub fn local_intra() -> usize {
+    let b = thread_budget();
+    let l = LOCAL_INTRA.with(|c| c.get());
+    if l == 0 {
+        b
+    } else {
+        l.min(b)
+    }
+}
+
+/// Lower the serial/parallel threshold so tests can force splits on
+/// shapes far below the production cutoff.
+#[doc(hidden)]
+pub fn set_split_threshold_for_tests(bytes: usize) {
+    SPLIT_BYTES.store(bytes.max(1), Ordering::Relaxed);
+}
+
+/// How many chunks to split `units` work items of `bytes_per_unit` across
+/// `threads`: 1 (serial) unless the total clears the split threshold,
+/// then enough chunks that each claims [`MIN_CHUNK_BYTES`], capped by the
+/// thread count and the unit count.
+pub fn plan_chunks(units: usize, bytes_per_unit: usize, threads: usize) -> usize {
+    plan_chunks_with(units, bytes_per_unit, threads, SPLIT_BYTES.load(Ordering::Relaxed))
+}
+
+fn plan_chunks_with(
+    units: usize,
+    bytes_per_unit: usize,
+    threads: usize,
+    min_split: usize,
+) -> usize {
+    if threads <= 1 || units <= 1 {
+        return 1;
+    }
+    let total = units.saturating_mul(bytes_per_unit);
+    if total < min_split {
+        return 1;
+    }
+    (total / MIN_CHUNK_BYTES).max(1).min(threads).min(units)
+}
+
+type Task = dyn Fn(usize) + Sync;
+
+struct JobState {
+    done: usize,
+    panicked: bool,
+}
+
+/// One chunked call in flight: workers and the submitting caller claim
+/// chunk indices from `next` and report completion through `state`.
+///
+/// `task` is a raw (lifetime-erased) view of the caller's closure. It is
+/// only ever dereferenced for a chunk index claimed while `next` was
+/// below `chunks`, and the caller blocks in [`run_chunked`] until
+/// `done == chunks` — i.e. until every such dereference has finished —
+/// so the pointee outlives every use. The `state` mutex hand-off also
+/// gives the caller a happens-before edge over the chunks' writes.
+struct Job {
+    task: *const Task,
+    chunks: usize,
+    next: AtomicUsize,
+    state: Mutex<JobState>,
+    finished: Condvar,
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run chunks until the claim counter is exhausted. Panics
+    /// are caught and recorded; the first payload is returned so the
+    /// submitting caller can re-raise its own.
+    fn claim_and_run(&self) -> Option<Box<dyn std::any::Any + Send + 'static>> {
+        let mut first = None;
+        loop {
+            let idx = self.next.fetch_add(1, Ordering::Relaxed);
+            if idx >= self.chunks {
+                return first;
+            }
+            let res =
+                catch_unwind(AssertUnwindSafe(|| unsafe { (*self.task)(idx) }));
+            let mut st = self.state.lock().unwrap();
+            st.done += 1;
+            if res.is_err() {
+                st.panicked = true;
+            }
+            if st.done == self.chunks {
+                self.finished.notify_all();
+            }
+            drop(st);
+            if let Err(e) = res {
+                if first.is_none() {
+                    first = Some(e);
+                }
+            }
+        }
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.chunks
+    }
+}
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    available: Condvar,
+    spawned: Mutex<usize>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        available: Condvar::new(),
+        spawned: Mutex::new(0),
+    })
+}
+
+/// Lazily top the pool up to `budget - 1` detached workers (the caller
+/// of every job is the remaining thread of the budget).
+fn ensure_workers() {
+    let want = thread_budget().saturating_sub(1);
+    let p = pool();
+    let mut n = p.spawned.lock().unwrap();
+    while *n < want {
+        *n += 1;
+        std::thread::Builder::new()
+            .name(format!("ptq161-intra-{n}"))
+            .spawn(worker_loop)
+            .expect("spawn intra-op pool worker");
+    }
+}
+
+fn worker_loop() {
+    let p = pool();
+    loop {
+        let job = {
+            let mut q = p.queue.lock().unwrap();
+            loop {
+                // drop fully-claimed jobs so their closures can retire
+                while q.front().is_some_and(|j| j.exhausted()) {
+                    q.pop_front();
+                }
+                if let Some(front) = q.front() {
+                    break Arc::clone(front);
+                }
+                q = p.available.wait(q).unwrap();
+            }
+        };
+        // worker panics are swallowed here; the submitting caller sees
+        // `state.panicked` and re-raises
+        let _ = job.claim_and_run();
+    }
+}
+
+/// Run `f(0), f(1), …, f(chunks - 1)` across the pool plus the calling
+/// thread, returning when **all** chunks have finished. `chunks <= 1`
+/// runs inline. If any chunk panics, the panic is re-raised here (the
+/// caller's own payload when it was the caller's chunk).
+pub fn run_chunked(chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if chunks <= 1 {
+        if chunks == 1 {
+            f(0);
+        }
+        return;
+    }
+    ensure_workers();
+    let job = Arc::new(Job {
+        // lifetime-erasing cast (`dyn + '_` -> `dyn + 'static` behind a
+        // raw pointer); see the Job safety comment for why this is sound
+        task: unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const Task>(f)
+        },
+        chunks,
+        next: AtomicUsize::new(0),
+        state: Mutex::new(JobState { done: 0, panicked: false }),
+        finished: Condvar::new(),
+    });
+    {
+        let p = pool();
+        let mut q = p.queue.lock().unwrap();
+        q.push_back(Arc::clone(&job));
+        // wake enough workers for the chunks beyond the caller's own
+        p.available.notify_all();
+    }
+    // the caller works too — even on a panic it keeps claiming, so every
+    // chunk is guaranteed an executor whether or not workers are free
+    let caller_panic = job.claim_and_run();
+    let mut st = job.state.lock().unwrap();
+    while st.done < job.chunks {
+        st = job.finished.wait(st).unwrap();
+    }
+    let worker_panicked = st.panicked;
+    drop(st);
+    if let Some(e) = caller_panic {
+        resume_unwind(e);
+    }
+    if worker_panicked {
+        panic!("intra-op pool worker panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    const MB: usize = 1 << 20;
+
+    #[test]
+    fn plan_chunks_decision_table() {
+        let plan = |u, b, t| plan_chunks_with(u, b, t, MIN_SPLIT_BYTES);
+        // a single unit or a single thread can never split
+        assert_eq!(plan(1, MB, 8), 1);
+        assert_eq!(plan(4096, 4096, 1), 1);
+        // below the bytes-of-work threshold: serial, no matter the host
+        assert_eq!(plan(4096, 4, 8), 1); // 16 KiB total
+        assert_eq!(plan(2048, 64, 16), 1); // 128 KiB total
+        // past the threshold: one chunk per MIN_CHUNK_BYTES, thread-capped
+        assert_eq!(plan(4096, 256, 8), 8); // 1 MiB -> 16, capped at 8
+        assert_eq!(plan(1 << 20, 4, 2), 2);
+        // the old par_rows blind spots: a wide single matvec now splits
+        // across all threads (old: rows/128 + min(8) forced 1), and an
+        // 8-unit giant is capped by units, not the old 8-thread ceiling
+        assert_eq!(plan(4096, 4096, 16), 16);
+        assert_eq!(plan(8, MB, 16), 8);
+        // threshold boundary is inclusive
+        assert_eq!(plan(2, MIN_SPLIT_BYTES / 2, 4), 2);
+        assert_eq!(plan(2, MIN_SPLIT_BYTES / 2 - 1, 4), 1);
+    }
+
+    #[test]
+    fn run_chunked_covers_every_chunk_exactly_once() {
+        for chunks in [0usize, 1, 2, 7, 33] {
+            let hits: Vec<AtomicUsize> =
+                (0..chunks.max(1)).map(|_| AtomicUsize::new(0)).collect();
+            run_chunked(chunks, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate().take(chunks) {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_chunked_sums_match_serial() {
+        let acc = AtomicU64::new(0);
+        run_chunked(16, &|i| {
+            acc.fetch_add((i as u64 + 1) * (i as u64 + 1), Ordering::Relaxed);
+        });
+        let want: u64 = (1..=16u64).map(|v| v * v).sum();
+        assert_eq!(acc.load(Ordering::Relaxed), want);
+    }
+
+    #[test]
+    fn run_chunked_propagates_panics() {
+        let done = AtomicUsize::new(0);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            run_chunked(8, &|i| {
+                if i == 3 {
+                    panic!("chunk 3 exploded");
+                }
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        assert!(res.is_err(), "panic must cross run_chunked");
+        // every non-panicking chunk still ran before the re-raise
+        assert_eq!(done.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn local_intra_clamps_to_budget() {
+        let b = thread_budget();
+        assert!(b >= 1);
+        set_local_intra(1);
+        assert_eq!(local_intra(), 1);
+        set_local_intra(usize::MAX);
+        assert_eq!(local_intra(), b);
+        // restore "unset" semantics for other tests on this thread
+        LOCAL_INTRA.with(|c| c.set(0));
+        assert_eq!(local_intra(), b);
+    }
+}

@@ -1,0 +1,366 @@
+//! Explicit SIMD tiers of the packed PTQ1.61 decode contraction.
+//!
+//! The blocked kernel (`autodiff::packed_qlinear_fwd`) is bound by scalar
+//! `u64` bit scans: one `trailing_zeros` + masked add per set sign bit.
+//! The tiers here instead execute the sign plane as wide bitwise ops —
+//! broadcast a sign *byte*, compare it against the per-lane bit masks
+//! `[1, 2, 4, 8, …]`, and mask-accumulate eight (AVX2) or four (NEON)
+//! `z` lanes per instruction — and decode the salient nibble plane 16
+//! codes per 8-byte load. Both passes reduce their vector accumulator in
+//! a fixed ascending lane order, so a given ISA tier is deterministic
+//! run-to-run; across tiers the accumulation is *re-associated*, which is
+//! why the SIMD tiers are gated against the scalar oracle with an epsilon
+//! bound (`tests/packed_serve.rs`) instead of the bit-identity gate the
+//! blocked tier keeps.
+//!
+//! Dispatch lives in `autodiff::packed_decode_fwd`: runtime detection via
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!`, with
+//! `PTQ161_FORCE_SCALAR=1` (or `PTQ161_KERNEL=scalar|blocked`) forcing
+//! the fallback tiers so they stay exercised in CI.
+//!
+//! Safety note shared by both ISA modules: callers pass `z` padded to a
+//! whole number of 64-lane sign words (`autodiff::packed_row_operands`
+//! guarantees this), so every 8-float load inside a word is in bounds,
+//! and the nibble loop only issues an 8-byte load when 16 codes remain.
+
+/// The SIMD tier this build can actually run on this machine:
+/// `"avx2"`, `"neon"`, or `"none"`.
+pub fn detected() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return "avx2";
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return "neon";
+        }
+    }
+    "none"
+}
+
+use crate::quant::ptq161::PackedLinear;
+
+/// Fill `yr[k] = y[o0 + k]` of one packed matvec with the best available
+/// SIMD tier. Returns `false` (computing nothing) when no tier is
+/// available, in which case the caller must run the blocked kernel.
+///
+/// Operands are the per-input-row values of
+/// `autodiff::packed_row_operands` (with `z` word-padded).
+pub(crate) fn packed_fill(
+    pl: &PackedLinear,
+    z: &[f32],
+    ztot: f32,
+    xs: f32,
+    xq: &[f32],
+    xmin: f32,
+    o0: usize,
+    yr: &mut [f32],
+) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability just checked; operand layout per
+            // the module docs.
+            unsafe { x86::packed_fill(pl, z, ztot, xs, xq, xmin, o0, yr) };
+            return true;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            // SAFETY: NEON availability just checked; operand layout per
+            // the module docs.
+            unsafe { arm::packed_fill(pl, z, ztot, xs, xq, xmin, o0, yr) };
+            return true;
+        }
+    }
+    let _ = (pl, z, ztot, xs, xq, xmin, o0, yr);
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use crate::quant::ptq161::PackedLinear;
+
+    /// Sum the 8 lanes in ascending lane order (deterministic reduction).
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        let mut s = 0.0f32;
+        for l in lanes {
+            s += l;
+        }
+        s
+    }
+
+    /// ±1 accumulation of one row's sign words: per nonzero sign byte,
+    /// broadcast it, compare against the lane bit masks and accumulate
+    /// the masked `z` lanes. Unset lanes contribute an exact `+0.0`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_pos(z: &[f32], words: &[u64], bits: __m256i) -> f32 {
+        let mut acc = _mm256_setzero_ps();
+        for (wi, &w) in words.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            for k in 0..8 {
+                let byte = ((w >> (8 * k)) & 0xff) as i32;
+                if byte == 0 {
+                    continue;
+                }
+                let zv = _mm256_loadu_ps(z.as_ptr().add(base + k * 8));
+                let m = _mm256_cmpeq_epi32(
+                    _mm256_and_si256(_mm256_set1_epi32(byte), bits),
+                    bits,
+                );
+                acc = _mm256_add_ps(acc, _mm256_and_ps(zv, _mm256_castsi256_ps(m)));
+            }
+        }
+        hsum(acc)
+    }
+
+    /// Salient contraction of one code row starting at nibble `cbase`:
+    /// 16 codes per 8-byte load (low/high nibble split re-interleaved to
+    /// source order), scalar prologue/epilogue for odd offsets and tails.
+    #[target_feature(enable = "avx2")]
+    unsafe fn row_sal(pl: &PackedLinear, xq: &[f32], cbase: usize) -> f32 {
+        let n_sal = xq.len();
+        let mut sum = 0.0f32;
+        let mut c = 0usize;
+        if n_sal > 0 && (cbase & 1) == 1 {
+            sum += pl.code(cbase) as f32 * xq[0];
+            c = 1;
+        }
+        let bytes = pl.code_bytes();
+        let mut acc = _mm256_setzero_ps();
+        while c + 16 <= n_sal {
+            let p = bytes.as_ptr().add((cbase + c) / 2) as *const __m128i;
+            let b8 = _mm_loadl_epi64(p);
+            let lo = _mm_and_si128(b8, _mm_set1_epi8(0x0f));
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(b8), _mm_set1_epi8(0x0f));
+            let nib = _mm_unpacklo_epi8(lo, hi);
+            let c0 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(nib));
+            let c1 = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(_mm_srli_si128::<8>(
+                nib,
+            )));
+            let x0 = _mm256_loadu_ps(xq.as_ptr().add(c));
+            let x1 = _mm256_loadu_ps(xq.as_ptr().add(c + 8));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(c0, x0));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(c1, x1));
+            c += 16;
+        }
+        sum += hsum(acc);
+        while c < n_sal {
+            sum += pl.code(cbase + c) as f32 * xq[c];
+            c += 1;
+        }
+        sum
+    }
+
+    /// AVX2 fill of `yr[k] = y[o0 + k]`. 4-row tiles share each `z` load
+    /// across the tile's sign rows; remainder rows run the same passes
+    /// one row at a time.
+    ///
+    /// # Safety
+    /// AVX2 must be available, `z` must be padded to `words * 64` floats,
+    /// and `o0 + yr.len() <= pl.out()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn packed_fill(
+        pl: &PackedLinear,
+        z: &[f32],
+        ztot: f32,
+        xs: f32,
+        xq: &[f32],
+        xmin: f32,
+        o0: usize,
+        yr: &mut [f32],
+    ) {
+        let bits = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+        let n_sal = pl.sal_cols().len();
+        let out_hi = o0 + yr.len();
+        let mut o = o0;
+        while o + 4 <= out_hi {
+            let ws = [
+                pl.sign_words(o),
+                pl.sign_words(o + 1),
+                pl.sign_words(o + 2),
+                pl.sign_words(o + 3),
+            ];
+            let mut acc = [_mm256_setzero_ps(); 4];
+            for wi in 0..ws[0].len() {
+                let w4 = [ws[0][wi], ws[1][wi], ws[2][wi], ws[3][wi]];
+                let any = w4[0] | w4[1] | w4[2] | w4[3];
+                if any == 0 {
+                    continue;
+                }
+                let base = wi * 64;
+                for k in 0..8 {
+                    if (any >> (8 * k)) & 0xff == 0 {
+                        continue;
+                    }
+                    let zv = _mm256_loadu_ps(z.as_ptr().add(base + k * 8));
+                    for r in 0..4 {
+                        let byte = ((w4[r] >> (8 * k)) & 0xff) as i32;
+                        if byte == 0 {
+                            continue;
+                        }
+                        let m = _mm256_cmpeq_epi32(
+                            _mm256_and_si256(_mm256_set1_epi32(byte), bits),
+                            bits,
+                        );
+                        acc[r] = _mm256_add_ps(
+                            acc[r],
+                            _mm256_and_ps(zv, _mm256_castsi256_ps(m)),
+                        );
+                    }
+                }
+            }
+            for r in 0..4 {
+                let oo = o + r;
+                let pos = hsum(acc[r]);
+                let sal = row_sal(pl, xq, oo * n_sal);
+                yr[oo - o0] = xmin
+                    + sal
+                    + pl.row_scale()[oo] * (2.0 * pos - ztot)
+                    + xs * pl.mu()[oo];
+            }
+            o += 4;
+        }
+        while o < out_hi {
+            let pos = row_pos(z, pl.sign_words(o), bits);
+            let sal = row_sal(pl, xq, o * n_sal);
+            yr[o - o0] = xmin
+                + sal
+                + pl.row_scale()[o] * (2.0 * pos - ztot)
+                + xs * pl.mu()[o];
+            o += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use core::arch::aarch64::*;
+
+    use crate::quant::ptq161::PackedLinear;
+
+    /// Sum the 4 lanes in ascending lane order (deterministic reduction).
+    #[target_feature(enable = "neon")]
+    unsafe fn hsum(v: float32x4_t) -> f32 {
+        let mut lanes = [0.0f32; 4];
+        vst1q_f32(lanes.as_mut_ptr(), v);
+        ((lanes[0] + lanes[1]) + lanes[2]) + lanes[3]
+    }
+
+    /// ±1 accumulation of one row's sign words, two 4-lane masked adds
+    /// per nonzero sign byte.
+    #[target_feature(enable = "neon")]
+    unsafe fn row_pos(z: &[f32], words: &[u64]) -> f32 {
+        let bits_lo: [u32; 4] = [1, 2, 4, 8];
+        let bits_hi: [u32; 4] = [16, 32, 64, 128];
+        let blo = vld1q_u32(bits_lo.as_ptr());
+        let bhi = vld1q_u32(bits_hi.as_ptr());
+        let mut acc = vdupq_n_f32(0.0);
+        for (wi, &w) in words.iter().enumerate() {
+            if w == 0 {
+                continue;
+            }
+            let base = wi * 64;
+            for k in 0..8 {
+                let byte = ((w >> (8 * k)) & 0xff) as u32;
+                if byte == 0 {
+                    continue;
+                }
+                let bv = vdupq_n_u32(byte);
+                let z0 = vld1q_f32(z.as_ptr().add(base + k * 8));
+                let z1 = vld1q_f32(z.as_ptr().add(base + k * 8 + 4));
+                let m0 = vceqq_u32(vandq_u32(bv, blo), blo);
+                let m1 = vceqq_u32(vandq_u32(bv, bhi), bhi);
+                acc = vaddq_f32(
+                    acc,
+                    vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(z0), m0)),
+                );
+                acc = vaddq_f32(
+                    acc,
+                    vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(z1), m1)),
+                );
+            }
+        }
+        hsum(acc)
+    }
+
+    /// Salient contraction of one code row: 16 codes per 8-byte load,
+    /// nibbles re-interleaved to source order with `vzip1/vzip2`.
+    #[target_feature(enable = "neon")]
+    unsafe fn row_sal(pl: &PackedLinear, xq: &[f32], cbase: usize) -> f32 {
+        let n_sal = xq.len();
+        let mut sum = 0.0f32;
+        let mut c = 0usize;
+        if n_sal > 0 && (cbase & 1) == 1 {
+            sum += pl.code(cbase) as f32 * xq[0];
+            c = 1;
+        }
+        let bytes = pl.code_bytes();
+        let mut acc = vdupq_n_f32(0.0);
+        while c + 16 <= n_sal {
+            let b8 = vld1_u8(bytes.as_ptr().add((cbase + c) / 2));
+            let lo = vand_u8(b8, vdup_n_u8(0x0f));
+            let hi = vshr_n_u8::<4>(b8);
+            let n01 = vmovl_u8(vzip1_u8(lo, hi));
+            let n23 = vmovl_u8(vzip2_u8(lo, hi));
+            let a0 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(n01)));
+            let a1 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(n01)));
+            let a2 = vcvtq_f32_u32(vmovl_u16(vget_low_u16(n23)));
+            let a3 = vcvtq_f32_u32(vmovl_u16(vget_high_u16(n23)));
+            acc = vaddq_f32(acc, vmulq_f32(a0, vld1q_f32(xq.as_ptr().add(c))));
+            acc =
+                vaddq_f32(acc, vmulq_f32(a1, vld1q_f32(xq.as_ptr().add(c + 4))));
+            acc =
+                vaddq_f32(acc, vmulq_f32(a2, vld1q_f32(xq.as_ptr().add(c + 8))));
+            acc =
+                vaddq_f32(acc, vmulq_f32(a3, vld1q_f32(xq.as_ptr().add(c + 12))));
+            c += 16;
+        }
+        sum += hsum(acc);
+        while c < n_sal {
+            sum += pl.code(cbase + c) as f32 * xq[c];
+            c += 1;
+        }
+        sum
+    }
+
+    /// NEON fill of `yr[k] = y[o0 + k]`, one row at a time.
+    ///
+    /// # Safety
+    /// NEON must be available, `z` must be padded to `words * 64` floats,
+    /// and `o0 + yr.len() <= pl.out()`.
+    #[target_feature(enable = "neon")]
+    pub unsafe fn packed_fill(
+        pl: &PackedLinear,
+        z: &[f32],
+        ztot: f32,
+        xs: f32,
+        xq: &[f32],
+        xmin: f32,
+        o0: usize,
+        yr: &mut [f32],
+    ) {
+        let n_sal = pl.sal_cols().len();
+        for (k, yo) in yr.iter_mut().enumerate() {
+            let o = o0 + k;
+            let pos = row_pos(z, pl.sign_words(o));
+            let sal = row_sal(pl, xq, o * n_sal);
+            *yo = xmin
+                + sal
+                + pl.row_scale()[o] * (2.0 * pos - ztot)
+                + xs * pl.mu()[o];
+        }
+    }
+}

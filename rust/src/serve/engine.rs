@@ -79,7 +79,9 @@ use super::{GenRequest, GenResponse};
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
 use crate::model::tokenizer::ByteTokenizer;
+use crate::runtime::autodiff::{kernel_nanos, kernel_tier};
 use crate::runtime::kv::{partition_pages, KvCache, PrefixRouter};
+use crate::runtime::pool;
 
 pub use crate::runtime::kv::DEFAULT_PAGE_SIZE;
 
@@ -277,6 +279,7 @@ impl<'a> Engine<'a> {
     /// carries the final live high-water mark and CoW count.
     fn export_memory(&self, metrics: &mut MetricsRegistry) {
         metrics.set_backend(self.cfg.backend);
+        metrics.set_kernel_dispatch(kernel_tier(), pool::local_intra());
         if self.cfg.use_kv_cache {
             metrics.set_kv_paging(
                 self.cache.bytes(),
@@ -910,6 +913,7 @@ impl<'a> Engine<'a> {
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
         self.export_memory(metrics);
+        let k0 = kernel_nanos();
         let mut step = 0usize;
         for _ in 0..self.cfg.max_steps {
             self.admit(batcher, metrics, &mut out);
@@ -935,6 +939,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        metrics.record_kernel_ns(kernel_nanos() - k0);
         self.export_memory(metrics);
         Ok(out)
     }
@@ -953,6 +958,7 @@ impl<'a> Engine<'a> {
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
         self.export_memory(metrics);
+        let k0 = kernel_nanos();
         let mut total_steps = 0;
         while total_steps < self.cfg.max_steps {
             self.admit(batcher, metrics, &mut out);
@@ -964,6 +970,7 @@ impl<'a> Engine<'a> {
                 total_steps += 1;
             }
         }
+        metrics.record_kernel_ns(kernel_nanos() - k0);
         self.export_memory(metrics);
         Ok(out)
     }
@@ -1124,6 +1131,7 @@ impl<'a> Engine<'a> {
     ) -> Result<Vec<GenResponse>> {
         let mut out = Vec::new();
         self.export_memory(metrics);
+        let k0 = kernel_nanos();
         let mut step = 0usize;
         for _ in 0..self.cfg.max_steps {
             self.admit_sharded(queue, metrics, &mut out);
@@ -1148,6 +1156,7 @@ impl<'a> Engine<'a> {
                 self.forced_preempt_sharded(step, queue, metrics);
             }
         }
+        metrics.record_kernel_ns(kernel_nanos() - k0);
         self.export_memory(metrics);
         Ok(out)
     }
@@ -1289,6 +1298,12 @@ pub fn run_sharded(
             .map(|w| {
                 let (lanes, pages) = (lane_split[w], page_split[w]);
                 s.spawn(move || -> Result<WorkerOutput> {
+                    // split the global intra-op thread budget across the
+                    // sharded workers so total threads stay ~constant as
+                    // `--workers` scales (each worker keeps at least 1)
+                    pool::set_local_intra(
+                        (pool::thread_budget() / workers.max(1)).max(1),
+                    );
                     let mut engine =
                         Engine::with_shard_geometry(pipe, model, lanes, ps, pages);
                     engine.cfg =

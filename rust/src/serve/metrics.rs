@@ -156,6 +156,15 @@ pub struct MetricsRegistry {
     pub packed_model_bytes: Option<usize>,
     /// measured effective bits/weight of the packed containers
     pub packed_bits_per_weight: Option<f64>,
+    /// kernel tier the decode matvecs dispatched to ("scalar", "blocked",
+    /// "avx2", "neon" — see `runtime::autodiff::kernel_tier`)
+    pub simd: Option<String>,
+    /// intra-op pool threads each worker's matvecs may fan out over
+    pub intra_threads: Option<usize>,
+    /// nanoseconds spent inside the decode-path matvec kernels, summed
+    /// over the run's worker threads (`runtime::autodiff::kernel_nanos`
+    /// window deltas)
+    pub kernel_ns: Option<u64>,
     /// worker threads the run was sharded over (`None` until tagged by
     /// [`Self::merge_workers`] or [`Self::set_single_worker`])
     pub workers: Option<usize>,
@@ -201,6 +210,9 @@ impl MetricsRegistry {
             packed_method: None,
             packed_model_bytes: None,
             packed_bits_per_weight: None,
+            simd: None,
+            intra_threads: None,
+            kernel_ns: None,
             workers: None,
             worker_stats: Vec::new(),
             worker_panics: 0,
@@ -293,6 +305,31 @@ impl MetricsRegistry {
         self.packed_method = Some(method.to_string());
         self.packed_model_bytes = Some(bytes);
         self.packed_bits_per_weight = Some(bits_per_weight);
+    }
+
+    /// Record which kernel tier the decode matvecs dispatch to and how
+    /// many intra-op pool threads each of them may fan out over.
+    pub fn set_kernel_dispatch(&mut self, simd: &str, intra_threads: usize) {
+        self.simd = Some(simd.to_string());
+        self.intra_threads = Some(intra_threads);
+    }
+
+    /// Add `ns` nanoseconds of measured in-kernel time (one worker
+    /// thread's `kernel_nanos` window delta).
+    pub fn record_kernel_ns(&mut self, ns: u64) {
+        self.kernel_ns = Some(self.kernel_ns.unwrap_or(0) + ns);
+    }
+
+    /// Fraction of the recorded step wall time spent inside the matvec
+    /// kernels (0 until both series exist).
+    pub fn kernel_step_share(&self) -> f64 {
+        let step_ms: f64 = self.step_ms.iter().sum();
+        match self.kernel_ns {
+            Some(ns) if step_ms > 0.0 => {
+                (ns as f64 / 1e6 / step_ms).min(1.0)
+            }
+            _ => 0.0,
+        }
     }
 
     /// Largest per-request cached-position high-water mark seen (0 when
@@ -452,6 +489,15 @@ impl MetricsRegistry {
                 out.packed_model_bytes = m.packed_model_bytes;
                 out.packed_bits_per_weight = m.packed_bits_per_weight;
             }
+            // kernel time sums across workers; the dispatch tier and
+            // per-worker intra-op budget are uniform, so first-some wins
+            out.kernel_ns = sum_opt_u64(out.kernel_ns, m.kernel_ns);
+            if out.simd.is_none() {
+                out.simd = m.simd.clone();
+            }
+            if out.intra_threads.is_none() {
+                out.intra_threads = m.intra_threads;
+            }
             // decode window: earliest first step to latest last step
             out.first_step = match (out.first_step, m.first_step) {
                 (Some(a), Some(b)) => Some(a.min(b)),
@@ -563,6 +609,16 @@ impl MetricsRegistry {
         }
         if let Some(b) = self.packed_bits_per_weight {
             fields.push(("packed_bits_per_weight", num(b)));
+        }
+        if let Some(t) = &self.simd {
+            fields.push(("simd", s(t)));
+        }
+        if let Some(n) = self.intra_threads {
+            fields.push(("intra_threads", num(n as f64)));
+        }
+        if let Some(ns) = self.kernel_ns {
+            fields.push(("kernel_ms", num(ns as f64 / 1e6)));
+            fields.push(("kernel_step_share", num(self.kernel_step_share())));
         }
         if let Some(w) = self.workers {
             fields.push(("workers", num(w as f64)));
@@ -855,6 +911,34 @@ mod tests {
         let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
         assert_eq!(empty.get("preemptions").and_then(Json::as_usize), Some(0));
         assert_eq!(empty.get("p99_itl_ms").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn kernel_dispatch_merges_and_exports() {
+        let mut a = worker_part(2, 1, &[(0, 10.0)]);
+        a.set_kernel_dispatch("avx2", 2);
+        a.record_kernel_ns(3_000_000);
+        let mut b = worker_part(2, 1, &[(1, 20.0)]);
+        b.set_kernel_dispatch("avx2", 2);
+        b.record_kernel_ns(1_000_000);
+        let m = MetricsRegistry::merge_workers("k", vec![(a, false), (b, false)]);
+        assert_eq!(m.simd.as_deref(), Some("avx2"));
+        assert_eq!(m.intra_threads, Some(2));
+        assert_eq!(m.kernel_ns, Some(4_000_000));
+        let step_ms: f64 = m.step_ms.iter().sum();
+        assert!((m.kernel_step_share() - (4.0 / step_ms).min(1.0)).abs() < 1e-9);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("simd").and_then(Json::as_str), Some("avx2"));
+        assert_eq!(back.get("intra_threads").and_then(Json::as_usize), Some(2));
+        let ms = back.get("kernel_ms").and_then(Json::as_f64).unwrap();
+        assert!((ms - 4.0).abs() < 1e-9);
+        assert!(back.get("kernel_step_share").and_then(Json::as_f64).is_some());
+        // absent until the engine records them
+        let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
+        assert!(empty.get("simd").is_none());
+        assert!(empty.get("intra_threads").is_none());
+        assert!(empty.get("kernel_ms").is_none());
+        assert_eq!(MetricsRegistry::new("x").kernel_step_share(), 0.0);
     }
 
     #[test]

@@ -119,6 +119,46 @@ fn prop_billm_container_round_trips() {
 }
 
 #[test]
+fn forced_split_decode_fwd_stays_bit_identical() {
+    // the container matvec now runs through the intra-op pool's split
+    // driver; with the threshold floored and a raised thread budget the
+    // split genuinely engages even on tiny shapes and 1-core hosts, and
+    // the decode must STILL be bit-identical to the dense kernel — the
+    // identity invariant is the containers' contract, chunked or not.
+    // Shapes cover the split-regime edges: one wide matvec row (output
+    // split), several batch rows (batch split), out of 1, inn % 64 != 0.
+    use ptq161::runtime::pool;
+    let b0 = pool::thread_budget();
+    pool::set_split_threshold_for_tests(1);
+    pool::set_thread_budget(4);
+    pool::set_local_intra(4);
+    let shapes = [(1usize, 129usize), (33, 70), (8, 64), (40, 96)];
+    for method in ["rtn2", "gptq2", "pbllm", "billm"] {
+        for (i, &(out, inn)) in shapes.iter().enumerate() {
+            let (deq, c) = quantize(method, out, inn, 7000 + i as u64);
+            for batch in [1usize, 5] {
+                let mut rng = Rng::new(900 + i as u64 + batch as u64);
+                let x = Tensor::randn(&[batch, inn], 1.0, &mut rng);
+                let want = linear_fwd(&x, &deq);
+                let got = c.decode_fwd(&x);
+                assert_eq!(got.shape, want.shape, "{method} ({out},{inn})");
+                for (k, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{method} ({out},{inn}) batch {batch}: split \
+                         decode differs from dense at flat {k}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+    pool::set_split_threshold_for_tests(pool::MIN_SPLIT_BYTES);
+    pool::set_thread_budget(b0);
+    pool::set_local_intra(1);
+}
+
+#[test]
 fn prop_ptq161_packed_linear_round_trips() {
     // PTQ1.61's container packs from structured parts: random structured
     // masks and learned-looking scales must round-trip losslessly through

@@ -15,9 +15,10 @@ use ptq161::model::{Params, LINEARS};
 use ptq161::quant::ptq161::{initial_parts, PackedLinear, PackedModel};
 use ptq161::quant::{by_name, LinearCalib, Ptq161Parts};
 use ptq161::runtime::autodiff::{
-    packed_qlinear_fwd, packed_qlinear_fwd_scalar, qlinear_fwd,
-    qlinear_weight_reconstructions,
+    kernel_tier, packed_decode_fwd, packed_qlinear_fwd,
+    packed_qlinear_fwd_scalar, qlinear_fwd, qlinear_weight_reconstructions,
 };
+use ptq161::runtime::pool;
 use ptq161::runtime::Runtime;
 use ptq161::serve::batcher::Batcher;
 use ptq161::serve::{Engine, GenRequest, GenResponse, MetricsRegistry};
@@ -28,6 +29,54 @@ use ptq161::util::rng::Rng;
 /// or call qlinear paths serialize on this so parallel test threads can't
 /// perturb each other's counts.
 static QLINEAR_LOCK: Mutex<()> = Mutex::new(());
+
+/// Tests that mutate process-global dispatch state (the
+/// `PTQ161_FORCE_SCALAR` env var, the pool's split threshold or thread
+/// budget) serialize here so concurrent tests see a stable tier.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// A [`PackedLinear`] over a seeded random weight with an arbitrary
+/// salient-column mask (the shape-edge suites sweep `out % 4`,
+/// `inn % 64`, zero-salient and all-salient layouts).
+fn random_packed(
+    out: usize,
+    inn: usize,
+    mask: &dyn Fn(usize) -> bool,
+    rng: &mut Rng,
+) -> PackedLinear {
+    let w = Tensor::randn(&[out, inn], 0.2, rng);
+    let mask: Vec<bool> = (0..inn).map(mask).collect();
+    let mut parts = initial_parts(&w, &mask);
+    for v in parts.alpha_r2.iter_mut() {
+        *v = 1.0 + 0.1 * rng.normal();
+    }
+    for v in parts.mu.iter_mut() {
+        *v = 0.05 * rng.normal();
+    }
+    PackedLinear::pack(&parts)
+}
+
+/// Epsilon gate for the re-associating tiers: each output is a
+/// length-`inn` product chain against bounded container values, so drift
+/// between association orders scales with `inn · Σ|x|` ulps.
+fn assert_close_to_oracle(got: &Tensor, want: &Tensor, x: &Tensor, tag: &str) {
+    assert_eq!(got.shape, want.shape, "{tag} shape");
+    let inn = *x.shape.last().unwrap();
+    let rows = x.data.len() / inn.max(1);
+    let mut tol = 0.0f32;
+    for r in 0..rows {
+        let sum_abs: f32 =
+            x.data[r * inn..(r + 1) * inn].iter().map(|v| v.abs()).sum();
+        tol = tol.max(8.0 * f32::EPSILON * inn as f32 * (1.0 + sum_abs));
+    }
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (a - b).abs() <= tol,
+            "{tag}: deployed kernel drifted from the scalar oracle at \
+             {i}: {a} vs {b} (tol {tol})"
+        );
+    }
+}
 
 /// PTQ1.61 parts for every linear of every layer, with blockopt-like
 /// learned (non-identity) scaling factors so the packed kernel's r2/mu
@@ -158,6 +207,134 @@ fn blocked_matvec_bit_identical_to_scalar_kernel() {
         assert_eq!(
             blocked.data, scalar.data,
             "blocked kernel deviates from scalar at ({out},{inn})"
+        );
+    }
+}
+
+#[test]
+fn deployed_dispatch_matches_scalar_oracle_on_shape_edges() {
+    // the deployed tier (SIMD where the host supports it, blocked
+    // otherwise) is epsilon-gated against the scalar oracle across the
+    // layouts that exercise every kernel edge: out % 4 tails, inn % 64
+    // sign-word tails, a zero-salient row set (empty nibble stream) and
+    // an all-salient one (empty sign words)
+    let _g = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(90);
+    let cases: Vec<(usize, usize, Box<dyn Fn(usize) -> bool>)> = vec![
+        (5, 70, Box::new(|j| j % 5 == 0)),
+        (8, 64, Box::new(|j| j % 3 == 0)),
+        (3, 129, Box::new(|j| j % 7 == 1)),
+        (33, 100, Box::new(|j| j % 4 == 2)),
+        (9, 80, Box::new(|_| false)), // zero salient: pure sign kernel
+        (9, 80, Box::new(|_| true)),  // all salient: empty sign words
+    ];
+    for (i, (out, inn, mask)) in cases.iter().enumerate() {
+        let pl = random_packed(*out, *inn, mask.as_ref(), &mut rng);
+        for batch in [1usize, 3] {
+            let x = Tensor::randn(&[batch, *inn], 1.0, &mut rng);
+            let got = packed_decode_fwd(&x, &pl);
+            let want = packed_qlinear_fwd_scalar(&x, &pl);
+            assert_close_to_oracle(
+                &got,
+                &want,
+                &x,
+                &format!("case {i} ({out}x{inn}) batch {batch}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_dispatch_is_bit_identical_to_oracle() {
+    let _g = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(91);
+    let pl = random_packed(21, 75, &|j| j % 5 == 0, &mut rng);
+    let x = Tensor::randn(&[2, 75], 1.0, &mut rng);
+    // restore the prior value afterwards: the CI simd-matrix lane runs
+    // this whole binary with the variable pinned
+    let prev = std::env::var("PTQ161_FORCE_SCALAR").ok();
+    std::env::set_var("PTQ161_FORCE_SCALAR", "1");
+    assert_eq!(kernel_tier(), "scalar");
+    let forced = packed_decode_fwd(&x, &pl);
+    match &prev {
+        Some(v) => std::env::set_var("PTQ161_FORCE_SCALAR", v),
+        None => std::env::remove_var("PTQ161_FORCE_SCALAR"),
+    }
+    let oracle = packed_qlinear_fwd_scalar(&x, &pl);
+    assert_eq!(
+        forced.data, oracle.data,
+        "PTQ161_FORCE_SCALAR=1 must pin the scalar oracle bit-for-bit"
+    );
+}
+
+#[test]
+fn forced_scalar_engine_run_token_identical() {
+    // the whole serve loop under PTQ161_FORCE_SCALAR=1 must decode the
+    // same tokens as the deployed dispatch — the CI simd-matrix lane's
+    // in-process equivalent
+    let _eg = ENV_LOCK.lock().unwrap();
+    let _g = QLINEAR_LOCK.lock().unwrap();
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(92);
+    let parts = learned_parts(&params, &pipe, 93, false);
+    let packed = PackedModel::pack(&parts);
+    let me = ModelEval::Packed { params: &params, packed: &packed };
+    let deployed = run_workload(&pipe, &me);
+    let prev = std::env::var("PTQ161_FORCE_SCALAR").ok();
+    std::env::set_var("PTQ161_FORCE_SCALAR", "1");
+    let forced = run_workload(&pipe, &me);
+    match &prev {
+        Some(v) => std::env::set_var("PTQ161_FORCE_SCALAR", v),
+        None => std::env::remove_var("PTQ161_FORCE_SCALAR"),
+    }
+    assert_eq!(deployed.len(), forced.len());
+    for (d, f) in deployed.iter().zip(&forced) {
+        assert_eq!(d.id, f.id);
+        assert_eq!(
+            d.text, f.text,
+            "request {} tokens diverge between scalar and deployed tiers",
+            d.id
+        );
+    }
+}
+
+#[test]
+fn parallel_split_bit_identical_to_serial() {
+    // force real multi-chunk splits (threshold floored, budget raised
+    // past the host's core count) and require bit-identity with the
+    // serial walk for both the scalar and blocked kernels, in both split
+    // regimes: many batch rows (batch split) and one wide matvec row
+    // (output split)
+    let _g = ENV_LOCK.lock().unwrap();
+    let mut rng = Rng::new(94);
+    let pl = random_packed(37, 96, &|j| j % 5 == 0, &mut rng);
+    let xs = [
+        Tensor::randn(&[6, 96], 1.0, &mut rng),
+        Tensor::randn(&[1, 96], 1.0, &mut rng),
+    ];
+    let b0 = pool::thread_budget();
+    for x in &xs {
+        pool::set_local_intra(1);
+        let serial_scalar = packed_qlinear_fwd_scalar(x, &pl);
+        let serial_blocked = packed_qlinear_fwd(x, &pl);
+        pool::set_split_threshold_for_tests(1);
+        pool::set_thread_budget(4);
+        pool::set_local_intra(4);
+        let split_scalar = packed_qlinear_fwd_scalar(x, &pl);
+        let split_blocked = packed_qlinear_fwd(x, &pl);
+        pool::set_split_threshold_for_tests(pool::MIN_SPLIT_BYTES);
+        pool::set_thread_budget(b0);
+        pool::set_local_intra(1);
+        assert_eq!(
+            split_scalar.data, serial_scalar.data,
+            "scalar kernel must be split-invariant (batch {})",
+            x.shape[0]
+        );
+        assert_eq!(
+            split_blocked.data, serial_blocked.data,
+            "blocked kernel must be split-invariant (batch {})",
+            x.shape[0]
         );
     }
 }
@@ -313,6 +490,20 @@ fn packed_engine_exports_memory_accounting() {
     // micro's tiny layers inflate the fp16 vector share well above the
     // paper's 4096^2 figure; the claim here is plumbing, not the 1.61
     assert!(bits < 16.0, "bits {bits}");
+    // kernel-dispatch accounting: the run exports its tier, intra-op
+    // thread allowance, and a nonzero in-kernel time window
+    let tier = metrics.simd.as_deref().unwrap();
+    assert!(
+        ["scalar", "blocked", "avx2", "neon"].contains(&tier),
+        "unknown kernel tier {tier}"
+    );
+    assert!(metrics.intra_threads.unwrap() >= 1);
+    assert!(
+        metrics.kernel_ns.unwrap() > 0,
+        "decode steps must charge the kernel counter"
+    );
+    let share = metrics.kernel_step_share();
+    assert!((0.0..=1.0).contains(&share), "share {share}");
     // per-request cached-position high-water marks: prefill caches the
     // prompt, then one position per extra decoded token
     for r in &metrics.requests {
