@@ -36,6 +36,7 @@ BASELINE = {
         "simd_speedup": 1.5,
         "intra_parallel_speedup": 1.5,
     },
+    "open_loop": {"identity": 1.0, "completion": 1.0},
 }
 
 
@@ -173,6 +174,49 @@ def test_intra_parallel_skipped_below_min_parallelism():
     failures = check_bench.run_check(BASELINE, fresh)
     assert len(failures) == 1
     assert "bench_packing.simd_speedup" in failures[0]
+
+
+def test_open_loop_identity_or_completion_drop_fails():
+    # a stream reassembling to different bytes than its terminal response,
+    # or the front door dropping offered requests on the floor, must trip
+    # the gate (both sit at exactly 1.0, so any drop clears the 20% band)
+    fresh = fresh_like_baseline()
+    fresh["open_loop"]["identity"] = 0.75
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "open_loop.identity" in failures[0]
+    fresh = fresh_like_baseline()
+    fresh["open_loop"]["completion"] = 0.5
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert len(failures) == 1
+    assert "open_loop.completion" in failures[0]
+    del fresh["open_loop"]
+    failures = check_bench.run_check(BASELINE, fresh)
+    assert any("missing from fresh" in f for f in failures)
+
+
+def test_resolve_fresh_prefers_newest_run_suffix(tmp_path):
+    # run-id-suffixed summaries: a directory (or missing stable file)
+    # resolves to the newest BENCH_serve*.json by mtime
+    import os
+
+    old = tmp_path / "BENCH_serve_aaa-1.json"
+    new = tmp_path / "BENCH_serve_bbb-2.json"
+    old.write_text("{}")
+    new.write_text("{}")
+    past = old.stat().st_mtime - 100
+    os.utime(old, (past, past))
+    assert check_bench.resolve_fresh(str(tmp_path)) == str(new)
+    missing_stable = tmp_path / "BENCH_serve.json"
+    assert check_bench.resolve_fresh(str(missing_stable)) == str(new)
+    # an existing file is returned untouched
+    missing_stable.write_text("{}")
+    assert check_bench.resolve_fresh(str(missing_stable)) == str(missing_stable)
+    # nothing to resolve -> loud failure, not a silent no-op gate
+    import pytest
+
+    with pytest.raises(FileNotFoundError):
+        check_bench.resolve_fresh(str(tmp_path / "empty" / "BENCH_serve.json"))
 
 
 def test_missing_key_fails():

@@ -37,18 +37,33 @@ metric regresses beyond the tolerance band:
   single-thread mean of the deployed kernel on the same matvec, higher
   is better.  Like ``worker_scaling``, skipped when the fresh run had
   fewer than ``MIN_PARALLELISM`` cores (``bench_packing.parallelism``).
+* ``open_loop.identity`` — 1.0 when every request streamed over the
+  HTTP front door during the open-loop sweep reassembled byte-identical
+  to its own terminal response (token-id SSE events vs the done text);
+  higher is better.
+* ``open_loop.completion`` — fraction of offered open-loop requests
+  that reached a terminal outcome (streamed or explicitly shed with
+  429); higher is better — below 1.0 means the front door dropped
+  requests on the floor.
 
 Only ratios, rates and storage accounting are gated — absolute step
 times depend on the runner and would make the gate flaky (the per-method
-``packed_dense_step_ratio`` is recorded for tracking, not gated, since
-its baseline varies with the decode kernels' host).  Tolerance is
-+/-20% by default.
+``packed_dense_step_ratio`` and the open-loop sweep's per-rate
+``ttft_p99_ms`` / ``saturation_knee_req_s`` series are recorded for
+tracking, not gated, since their baselines vary with the host).
+Tolerance is +/-20% by default.
+
+Because `bench_serve` also writes run-id-suffixed copies
+(``BENCH_serve_<rid>.json``), ``--fresh`` may point at a directory (or a
+missing stable file): the newest ``BENCH_serve*.json`` by mtime is
+resolved automatically.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 # (dotted key, direction): "lower" = fresh must not exceed baseline by
@@ -65,11 +80,37 @@ CHECKS = [
     ("p99_itl_overload_ratio", "lower"),
     ("bench_packing.simd_speedup", "higher"),
     ("bench_packing.intra_parallel_speedup", "higher"),
+    ("open_loop.identity", "higher"),
+    ("open_loop.completion", "higher"),
 ]
 
 # below this core count the scaling factor is hardware-bound, not a
 # code property: skip the worker_scaling comparison entirely
 MIN_PARALLELISM = 4
+
+
+def resolve_fresh(path):
+    """Resolve ``--fresh`` to a concrete summary file.
+
+    A plain existing file is returned as-is.  A directory — or a missing
+    file whose directory holds run-id-suffixed copies — resolves to the
+    newest ``BENCH_serve*.json`` by mtime, so the gate keeps working when
+    only suffixed run artifacts survive.
+    """
+    if os.path.isfile(path):
+        return path
+    directory = path if os.path.isdir(path) else os.path.dirname(path) or "."
+    candidates = [
+        os.path.join(directory, name)
+        for name in os.listdir(directory)
+        if name.startswith("BENCH_serve") and name.endswith(".json")
+    ] if os.path.isdir(directory) else []
+    if not candidates:
+        raise FileNotFoundError(
+            f"no fresh summary at {path!r} and no BENCH_serve*.json "
+            f"candidates in {directory!r}"
+        )
+    return max(candidates, key=os.path.getmtime)
 
 
 def get_path(d, dotted):
@@ -138,7 +179,12 @@ def run_check(baseline, fresh, tolerance=0.2):
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True, help="committed baseline JSON")
-    ap.add_argument("--fresh", required=True, help="freshly benched summary JSON")
+    ap.add_argument(
+        "--fresh",
+        required=True,
+        help="freshly benched summary JSON (a directory, or a missing "
+        "file, resolves to the newest BENCH_serve*.json beside it)",
+    )
     ap.add_argument(
         "--tolerance",
         type=float,
@@ -148,7 +194,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
-    with open(args.fresh) as f:
+    fresh_path = resolve_fresh(args.fresh)
+    if fresh_path != args.fresh:
+        print(f"resolved fresh summary: {fresh_path}")
+    with open(fresh_path) as f:
         fresh = json.load(f)
     failures = run_check(baseline, fresh, args.tolerance)
     if failures:

@@ -47,11 +47,24 @@
 //! lane preemption actually fires, restores recompute their positions,
 //! and the tokens still match.
 //!
+//! Part 8 sweeps open-loop arrival rates over the streaming HTTP front
+//! door: per rate leg a front door is self-hosted on an ephemeral
+//! loopback port and driven with seeded-Poisson arrivals by independent
+//! client threads, measuring client-observed wall-clock TTFT tails
+//! end-to-end (HTTP parse -> queue -> lane -> SSE write). Every streamed
+//! request must reassemble byte-identically from its token-id events
+//! (the `open_loop.identity` gate) and every offered request must reach
+//! a terminal outcome (`open_loop.completion`); the per-rate
+//! `ttft_p99_ms` series and the saturation-knee throughput are exported
+//! ungated (machine-speed dependent).
+//!
 //! The whole run's summary is also written as machine-readable JSON to
 //! `runs/BENCH_serve.json` (mean step ms per backend, packed/fused step
 //! ratio, KV live/reserved bytes, prefix-hit rate, worker-scaling
 //! factors) for CI's bench-regression gate (`python/tools/check_bench.py`
-//! against `runs/BENCH_baseline.json`) and tooling.
+//! against `runs/BENCH_baseline.json`) and tooling. Written as a merge:
+//! foreign sections (`bench_packing`) are preserved, and a
+//! run-id-suffixed copy keeps every run's artifact from being clobbered.
 //!
 //! Runs on FP-initialized weights (scheduling/caching cost is independent
 //! of training) and needs no artifacts directory.
@@ -70,9 +83,12 @@ use ptq161::runtime::Runtime;
 use ptq161::runtime::kv::PrefixRouter;
 use ptq161::serve::batcher::{Batcher, ShardedQueue};
 use ptq161::serve::{
-    run_sharded, Engine, EngineCfg, GenRequest, GenResponse, MetricsRegistry, ShardSpec,
+    percentile, run_open_loop, run_sharded, schedule, serve_http, Engine,
+    EngineCfg, GenRequest, GenResponse, HttpServerCfg, LoadCfg,
+    MetricsRegistry, ShardSpec,
 };
-use ptq161::util::json::{arr, num, obj, s};
+use ptq161::util::json::{arr, num, obj, s, Json};
+use ptq161::util::runid;
 
 fn run_mode(
     pipe: &Pipeline,
@@ -599,6 +615,82 @@ fn main() {
         press_m.p99_itl_ms()
     );
 
+    // ---- part 8: open-loop arrival sweep over the HTTP front door -------
+    // per rate leg: self-host the streaming front door (ephemeral
+    // loopback port, retires after the leg's requests), drive
+    // seeded-Poisson arrivals open-loop — offered rate never waits on
+    // completions, so rising client-observed TTFT tails expose the
+    // saturation knee end-to-end
+    let rates = [4.0f64, 16.0, 64.0];
+    let leg_requests = 16usize;
+    println!(
+        "\n# open-loop HTTP sweep: {leg_requests} requests per leg at \
+         {rates:?} req/s"
+    );
+    let mut leg_ttft_p99: Vec<f64> = Vec::new();
+    let mut leg_achieved_req_s: Vec<f64> = Vec::new();
+    let mut open_identity = 1.0f64;
+    let mut open_completion = 1.0f64;
+    for (leg, &rate) in rates.iter().enumerate() {
+        let lcfg = LoadCfg {
+            rate_hz: rate,
+            requests: leg_requests,
+            seed: 1000 + leg as u64,
+            seq: pipe.cfg.seq,
+        };
+        let arrivals = schedule(&lcfg);
+        let ecfg = EngineCfg { workers: 2, ..EngineCfg::default() };
+        let spec =
+            ShardSpec { label: "open-loop", page_size: 16, kv_pages: None };
+        let hcfg = HttpServerCfg {
+            max_requests: Some(leg_requests),
+            ..HttpServerCfg::default()
+        };
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let (report, run) = std::thread::scope(|scope| {
+            let (p, m, e, sp, h) =
+                (&pipe, &packed_me, &ecfg, &spec, &hcfg);
+            let server = scope
+                .spawn(move || serve_http(p, m, e, sp, h, listener).unwrap());
+            let report = run_open_loop(&addr, &arrivals, rate, pipe.cfg.seq);
+            (report, server.join().expect("front door panicked"))
+        });
+        assert_eq!(run.worker_panics, 0, "leg {leg}: worker panicked");
+        assert_eq!(
+            report.errors, 0,
+            "leg {leg}: open-loop client saw errors"
+        );
+        // the identity gate: every streamed request's token-id events
+        // must reassemble byte-identically to its own done text
+        assert_eq!(
+            report.identity_ok, report.ok,
+            "leg {leg}: streamed tokens failed byte-identity"
+        );
+        open_identity = open_identity.min(report.identity());
+        open_completion = open_completion.min(report.completion());
+        let ttft_p99 = percentile(&report.ttft_ms, 0.99);
+        let achieved = 1000.0 * report.ok as f64 / report.wall_ms.max(1e-6);
+        println!(
+            "rate {rate:>5.1} req/s  ok {:>2} / 429 {:>2}  \
+             ttft p99 {ttft_p99:>7.1} ms  achieved {achieved:>5.1} req/s  \
+             {:>6.1} tok/s",
+            report.ok,
+            report.rejected,
+            report.achieved_tok_s()
+        );
+        leg_ttft_p99.push(ttft_p99);
+        leg_achieved_req_s.push(achieved);
+    }
+    // the observed request-throughput ceiling: past the knee, offering a
+    // higher rate stops raising the achieved rate
+    let knee_req_s =
+        leg_achieved_req_s.iter().cloned().fold(0.0f64, f64::max);
+    println!(
+        "streamed byte-identity across all legs: ok \
+         (saturation knee ~{knee_req_s:.1} req/s)"
+    );
+
     // ---- machine-readable summary ---------------------------------------
     let backends = arr(q_results.iter().map(|(label, step_ms, _, recon)| {
         obj(vec![
@@ -651,9 +743,50 @@ fn main() {
                 ),
             ]),
         ),
+        (
+            "open_loop",
+            obj(vec![
+                ("identity", num(open_identity)),
+                ("completion", num(open_completion)),
+                ("rates_req_s", arr(rates.iter().map(|&r| num(r)))),
+                (
+                    "ttft_p99_ms",
+                    arr(leg_ttft_p99.iter().map(|&t| num(t))),
+                ),
+                (
+                    "achieved_req_s",
+                    arr(leg_achieved_req_s.iter().map(|&t| num(t))),
+                ),
+                ("saturation_knee_req_s", num(knee_req_s)),
+            ]),
+        ),
         ("token_identity", s("ok")),
     ]);
-    let path = ptq161::runs_dir().join("BENCH_serve.json");
-    std::fs::write(&path, summary.dump()).unwrap();
-    println!("summary written to {}", path.display());
+    // merge, don't overwrite: other benches (bench_packing) own their own
+    // sections of this file — refresh our keys, preserve foreign ones
+    let dir = ptq161::runs_dir();
+    let path = dir.join("BENCH_serve.json");
+    let Json::Obj(mut fields) = summary else { unreachable!() };
+    if let Some(Json::Obj(existing)) = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+    {
+        for (k, v) in existing {
+            if !fields.iter().any(|(ours, _)| ours == &k) {
+                fields.push((k, v));
+            }
+        }
+    }
+    let merged = Json::Obj(fields);
+    std::fs::write(&path, merged.dump()).unwrap();
+    // run-id-suffixed copy: repeated or concurrent bench runs each keep
+    // their own artifact while the stable name stays the merged summary
+    let unique =
+        dir.join(runid::suffixed("BENCH_serve.json", &runid::run_id()));
+    std::fs::write(&unique, merged.dump()).unwrap();
+    println!(
+        "summary written to {} (run copy {})",
+        path.display(),
+        unique.display()
+    );
 }

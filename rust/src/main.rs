@@ -30,7 +30,23 @@
 //!               the workload on the full-window dense baseline and
 //!               asserts token-identical output — gating the paged KV
 //!               cache, the packed decode backend, chunking, and
-//!               preemption in one pass; writes runs/serve_metrics.json)
+//!               preemption in one pass; writes runs/serve_metrics.json
+//!               plus a run-id-suffixed copy so concurrent runs never
+//!               clobber each other's artifact)
+//!               [--http ADDR] swaps the synthetic workload for the
+//!               streaming HTTP front door: POST /generate submits into
+//!               the live engine and streams tokens per decode step as
+//!               SSE, GET /stats exposes live gauges, and a full queue
+//!               answers 429 + Retry-After
+//!               ([--http-queue-cap N] [--http-max-requests N])
+//!   load        --requests 32 --rate 20 --seed 7 [--model tiny]
+//!               [--method ptq161] [--workers N] [--addr HOST:PORT [--seq N]]
+//!               (open-loop load harness: seeded-Poisson arrivals over a
+//!               chat/summarize/classify prompt mix against the HTTP
+//!               edge — self-hosts a front door on an ephemeral loopback
+//!               port unless --addr points at a running one; records
+//!               client-observed wall-clock TTFT/ITL percentiles to
+//!               runs/load_metrics.json)
 //!   experiment  <t1..t13|f1|f3..f7|appA|all> [--full]
 //!   all         run every experiment (EXPERIMENTS.md regeneration)
 
@@ -42,10 +58,12 @@ use ptq161::quant::PackedModel;
 use ptq161::runtime::kv::PrefixRouter;
 use ptq161::serve::batcher::{Batcher, ShardedQueue};
 use ptq161::serve::{
-    effective_workers, place_request, run_sharded, Engine, EngineCfg, GenRequest,
-    MetricsRegistry, ShardSpec,
+    effective_workers, place_request, run_open_loop, run_sharded, schedule,
+    serve_http, Engine, EngineCfg, GenRequest, HttpServerCfg, LoadCfg,
+    LoadReport, MetricsRegistry, ShardRun, ShardSpec,
 };
 use ptq161::util::cli::Args;
+use ptq161::util::runid::{run_id, suffixed};
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -226,6 +244,52 @@ fn main() -> Result<()> {
                 "--drain is the single-loop static baseline; it cannot be \
                  combined with --workers > 1"
             );
+            // --http ADDR: instead of the synthetic request list, run the
+            // streaming front door over the live sharded deployment —
+            // requests arrive over HTTP mid-flight and tokens stream back
+            // per decode step as SSE. Blocks until shutdown (or until
+            // --http-max-requests terminal requests, how CI bounds it).
+            let http_addr = args.str_opt("http", "");
+            if !http_addr.is_empty() {
+                anyhow::ensure!(
+                    !args.flag("drain"),
+                    "--http serves the live continuous engine; --drain has \
+                     no incremental-submission path"
+                );
+                let ecfg = EngineCfg {
+                    use_kv_cache: !args.flag("no-kv"),
+                    workers,
+                    prefill_chunk,
+                    preempt,
+                    ..EngineCfg::default()
+                };
+                let spec = ShardSpec { label: "http", page_size, kv_pages };
+                let hcfg = HttpServerCfg {
+                    queue_cap: args.usize_opt("http-queue-cap", 64),
+                    retry_after_s: 1,
+                    max_requests: match args.usize_opt("http-max-requests", 0)
+                    {
+                        0 => None,
+                        k => Some(k),
+                    },
+                };
+                let listener = std::net::TcpListener::bind(http_addr.as_str())?;
+                println!(
+                    "http front door on {} ({workers} worker{})",
+                    listener.local_addr()?,
+                    if workers == 1 { "" } else { "s" }
+                );
+                let run = serve_http(&pipe, &me, &ecfg, &spec, &hcfg, listener)?;
+                anyhow::ensure!(
+                    run.worker_panics == 0,
+                    "{} worker(s) panicked; failed requests {:?}",
+                    run.worker_panics,
+                    run.failed_requests
+                );
+                run.metrics.print_summary();
+                write_serve_metrics(&run.metrics)?;
+                return Ok(());
+            }
             let resps = if workers > 1 {
                 let queue = ShardedQueue::new(workers);
                 let router = PrefixRouter::new(page_size.clamp(1, pipe.cfg.seq));
@@ -311,9 +375,7 @@ fn main() -> Result<()> {
                 metrics.restored_positions,
                 metrics.p99_itl_ms(),
             );
-            let path = ptq161::runs_dir().join("serve_metrics.json");
-            metrics.write_json(&path)?;
-            println!("metrics written to {}", path.display());
+            write_serve_metrics(&metrics)?;
             if args.flag("verify-identity") {
                 // token-identity gate: the same workload on the legacy
                 // full-window *dense* path must decode byte-identical
@@ -366,6 +428,103 @@ fn main() -> Result<()> {
                 );
             }
         }
+        "load" => {
+            // open-loop load harness: seeded-Poisson arrivals over a
+            // chat/summarize/classify mix against the HTTP edge, with
+            // wall-clock TTFT/ITL percentiles measured at the client.
+            // Open-loop means arrivals never wait on completions, so
+            // saturation shows up as a TTFT knee instead of silently
+            // throttling the offered rate.
+            let n = args.usize_opt("requests", 32);
+            let rate = args.f32_opt("rate", 20.0) as f64;
+            let seed = args.u64_opt("seed", 7);
+            let addr = args.str_opt("addr", "");
+            if !addr.is_empty() {
+                // drive an already-running front door; --seq must match
+                // the served model's window (it sizes long-context
+                // prompts and the identity reconstruction)
+                let seq = args.usize_opt("seq", 64);
+                let lcfg = LoadCfg { rate_hz: rate, requests: n, seed, seq };
+                let report = run_open_loop(&addr, &schedule(&lcfg), rate, seq);
+                finish_load(&report)?;
+                return Ok(());
+            }
+            // self-host: quantize at quick scale, spawn the front door on
+            // an ephemeral loopback port, drive it, retire after n
+            // terminal requests (every offered request ends terminal:
+            // streamed, failed, or shed with 429)
+            let mut ctx = if args.flag("full") {
+                ExperimentCtx::new(true)?
+            } else {
+                ExperimentCtx::quick()?
+            };
+            let model = args.str_opt("model", "tiny");
+            let method = args.str_opt("method", "ptq161");
+            let qm = ctx.quantized(&model, &method, method == "ptq161")?;
+            let pipe = Pipeline::new(&ctx.rt, &model)?;
+            // production backend when the quantizer emitted serve-ready
+            // containers, dense reconstruction otherwise
+            let packed = if let Some(parts) = qm.parts.as_ref() {
+                Some(PackedModel::pack(parts))
+            } else if let Some(layers) = qm.containers.as_ref() {
+                Some(PackedModel::from_containers(&method, layers))
+            } else {
+                None
+            };
+            let me = match packed.as_ref() {
+                Some(pm) => {
+                    ModelEval::Packed { params: &qm.params, packed: pm }
+                }
+                None => ModelEval::Dense(&qm.params),
+            };
+            let workers =
+                effective_workers(args.usize_opt("workers", 1), pipe.cfg.b_eval);
+            let ecfg = EngineCfg { workers, ..EngineCfg::default() };
+            let spec = ShardSpec {
+                label: "load",
+                page_size: ptq161::serve::engine::DEFAULT_PAGE_SIZE,
+                kv_pages: None,
+            };
+            let hcfg = HttpServerCfg {
+                queue_cap: args.usize_opt("http-queue-cap", 64),
+                retry_after_s: 1,
+                max_requests: Some(n),
+            };
+            let lcfg = LoadCfg {
+                rate_hz: rate,
+                requests: n,
+                seed,
+                seq: pipe.cfg.seq,
+            };
+            let arrivals = schedule(&lcfg);
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let bound = listener.local_addr()?.to_string();
+            println!(
+                "self-hosted front door on {bound} ({workers} worker{}), \
+                 offering {n} requests at {rate:.1} req/s (seed {seed})",
+                if workers == 1 { "" } else { "s" }
+            );
+            let (report, run) = std::thread::scope(
+                |scope| -> Result<(LoadReport, ShardRun)> {
+                    let (p, m, e, sp, h) =
+                        (&pipe, &me, &ecfg, &spec, &hcfg);
+                    let server = scope
+                        .spawn(move || serve_http(p, m, e, sp, h, listener));
+                    let report =
+                        run_open_loop(&bound, &arrivals, rate, pipe.cfg.seq);
+                    let run = server.join().expect("server thread panicked")?;
+                    Ok((report, run))
+                },
+            )?;
+            anyhow::ensure!(
+                run.worker_panics == 0,
+                "{} worker(s) panicked; failed requests {:?}",
+                run.worker_panics,
+                run.failed_requests
+            );
+            finish_load(&report)?;
+            write_serve_metrics(&run.metrics)?;
+        }
         "experiment" | "all" => {
             let mut ctx = ctx_from(&args)?;
             let ids: Vec<String> = if sub == "all"
@@ -388,7 +547,7 @@ fn main() -> Result<()> {
         }
         _ => {
             println!(
-                "usage: ptq161 <pretrain|preprocess|quantize|eval|serve|experiment|all> \
+                "usage: ptq161 <pretrain|preprocess|quantize|eval|serve|load|experiment|all> \
                  [--model tiny|small] [--method NAME] [--quick] [--full] ..."
             );
         }
@@ -402,4 +561,65 @@ fn ctx_from(args: &Args) -> Result<ExperimentCtx> {
     } else {
         ExperimentCtx::new(args.flag("full"))
     }
+}
+
+/// Export serve metrics twice: a run-id-suffixed file (concurrent or
+/// repeated runs never clobber each other's artifact) plus the stable
+/// `serve_metrics.json` name tooling hardcodes (CI smoke lanes, docs).
+fn write_serve_metrics(metrics: &MetricsRegistry) -> Result<()> {
+    let dir = ptq161::runs_dir();
+    let unique = dir.join(suffixed("serve_metrics.json", &run_id()));
+    metrics.write_json(&unique)?;
+    let stable = dir.join("serve_metrics.json");
+    metrics.write_json(&stable)?;
+    println!(
+        "metrics written to {} (stable copy {})",
+        unique.display(),
+        stable.display()
+    );
+    Ok(())
+}
+
+/// Print the open-loop report and export it (run-id-suffixed + stable
+/// `load_metrics.json`, same convention as the serve metrics).
+fn finish_load(report: &LoadReport) -> Result<()> {
+    println!(
+        "open-loop: offered {} -> ok {}, 429 {}, errors {} \
+         (completion {:.2}, identity {:.2})",
+        report.offered,
+        report.ok,
+        report.rejected,
+        report.errors,
+        report.completion(),
+        report.identity(),
+    );
+    for (class, count) in &report.class_counts {
+        println!("  mix {class}: {count}");
+    }
+    let json = report.to_json();
+    let ttft = |k: &str| json.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!(
+        "ttft p50/p95/p99 {:.1}/{:.1}/{:.1} ms, itl p50/p99 {:.1}/{:.1} ms, \
+         {:.1} tok/s over {:.0} ms",
+        ttft("ttft_p50_ms"),
+        ttft("ttft_p95_ms"),
+        ttft("ttft_p99_ms"),
+        ttft("itl_p50_ms"),
+        ttft("itl_p99_ms"),
+        report.achieved_tok_s(),
+        report.wall_ms,
+    );
+    let dir = ptq161::runs_dir();
+    std::fs::create_dir_all(&dir)?;
+    let payload = json.dump();
+    let unique = dir.join(suffixed("load_metrics.json", &run_id()));
+    std::fs::write(&unique, &payload)?;
+    let stable = dir.join("load_metrics.json");
+    std::fs::write(&stable, &payload)?;
+    println!(
+        "load metrics written to {} (stable copy {})",
+        unique.display(),
+        stable.display()
+    );
+    Ok(())
 }

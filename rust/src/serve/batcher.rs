@@ -59,6 +59,10 @@ pub struct PreemptedReq {
     /// when the lane last emitted a token, so the restore's first token
     /// honestly records the parked gap as inter-token latency
     pub last_token_at: Option<Instant>,
+    /// admission→first-token wall time if the lane emitted before it was
+    /// preempted — a victim's TTFT is its *first* first-token time, so
+    /// the restore must not restart the clock
+    pub ttft_ms: Option<f64>,
 }
 
 impl PreemptedReq {
@@ -672,6 +676,7 @@ mod tests {
             admitted: now,
             deadline,
             last_token_at: None,
+            ttft_ms: None,
         }
     }
 

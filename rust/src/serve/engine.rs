@@ -75,6 +75,7 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, PreemptedReq, ShardedQueue};
 use super::metrics::{MetricsRegistry, RequestMetric};
+use super::stream::EmitHub;
 use super::{GenRequest, GenResponse};
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;
@@ -182,6 +183,10 @@ struct Lane {
     /// when this lane last emitted a token (inter-token latency); carried
     /// across preemption so the parked gap lands in the p99
     last_token_at: Option<Instant>,
+    /// admission→first-token wall time, stamped once at the first emit
+    /// and carried across preemption (a victim's TTFT is its *first*
+    /// first-token time)
+    ttft_ms: Option<f64>,
 }
 
 /// Shared-state handles a sharded worker's engine carries: its worker
@@ -208,6 +213,11 @@ pub struct Engine<'a> {
     cache: KvCache,
     /// present only on engines spawned by [`run_sharded`]
     shard: Option<ShardCtx<'a>>,
+    /// live-streaming hub ([`run_sharded_live`] / the HTTP front door):
+    /// tokens are pushed per decode step, client cancels are swept each
+    /// loop iteration, and the worker loop runs until shutdown instead
+    /// of until the queue drains
+    hub: Option<&'a EmitHub>,
 }
 
 impl<'a> Engine<'a> {
@@ -269,7 +279,16 @@ impl<'a> Engine<'a> {
             lanes: (0..lanes).map(|_| None).collect(),
             cache,
             shard: None,
+            hub: None,
         }
+    }
+
+    /// Attach a live-streaming [`EmitHub`]: every emitted token is pushed
+    /// to the request's channel, cancelled requests are torn down
+    /// mid-flight, and [`Engine::run_worker`] switches to its
+    /// long-running (shutdown-latched) mode.
+    pub fn set_hub(&mut self, hub: &'a EmitHub) {
+        self.hub = Some(hub);
     }
 
     /// Record the run's resident-memory accounting (KV reserved/live
@@ -371,6 +390,7 @@ impl<'a> Engine<'a> {
             adopted: None,
             restored: false,
             last_token_at: None,
+            ttft_ms: None,
         }
     }
 
@@ -394,6 +414,7 @@ impl<'a> Engine<'a> {
             adopted: None,
             restored: true,
             last_token_at: p.last_token_at,
+            ttft_ms: p.ttft_ms,
         }
     }
 
@@ -421,6 +442,7 @@ impl<'a> Engine<'a> {
             admitted: lane.admitted,
             deadline: lane.deadline,
             last_token_at: lane.last_token_at,
+            ttft_ms: lane.ttft_ms,
         }
     }
 
@@ -505,6 +527,7 @@ impl<'a> Engine<'a> {
             queue_ms,
             decode_ms,
             total_ms: queue_ms + decode_ms,
+            ttft_ms: lane.ttft_ms.unwrap_or(0.0),
             new_tokens,
             cached_positions,
         });
@@ -535,7 +558,78 @@ impl<'a> Engine<'a> {
         if let Some(slot) = lane.slot {
             self.cache.free(slot);
         }
-        out.push(Self::finish(lane, cached_positions, now, metrics));
+        let resp = Self::finish(lane, cached_positions, now, metrics);
+        self.notify_finish(&resp);
+        out.push(resp);
+    }
+
+    /// Live mode: deliver the terminal `Done` event (no-op without a hub).
+    fn notify_finish(&self, resp: &GenResponse) {
+        if let Some(hub) = self.hub {
+            hub.finish(resp.clone());
+        }
+    }
+
+    /// Live mode: push one decoded token to the request's consumer.
+    /// `true` means keep going; `false` means the consumer is gone and
+    /// the lane should be cancelled. Without a hub, always `true`.
+    fn emit_live(&self, id: u64, index: usize, token: i32) -> bool {
+        match self.hub {
+            Some(hub) => hub.emit_token(id, index, token),
+            None => true,
+        }
+    }
+
+    /// Live mode: deliver terminal `Failed` events for expired requests.
+    fn notify_expired(&self, expired: &[(u64, GenRequest)]) {
+        if let Some(hub) = self.hub {
+            for (id, _) in expired {
+                hub.fail(*id, "expired");
+            }
+        }
+    }
+
+    /// Tear down lane `li` without a response: free its slot's pages,
+    /// drop it from the in-flight registry, and count the cancel. Used
+    /// when the lane's client disconnected (its emit channel is gone).
+    fn cancel_lane(&mut self, li: usize, metrics: &mut MetricsRegistry) {
+        let lane = self.lanes[li].take().expect("cancelling an empty lane");
+        self.deregister_in_flight(lane.id);
+        if let Some(slot) = lane.slot {
+            self.cache.free(slot);
+        }
+        metrics.record_cancelled();
+        if let Some(hub) = self.hub {
+            // idempotent: covers the engine-detected (emit-failure) path
+            // as well as an explicit consumer cancel
+            hub.cancel(lane.id);
+        }
+    }
+
+    /// Live mode: tear down any active lane whose consumer cancelled
+    /// (client disconnect noticed by the connection handler). Swept once
+    /// per loop iteration, before admission, so freed pages are
+    /// immediately reusable.
+    fn sweep_cancelled(&mut self, metrics: &mut MetricsRegistry) {
+        let Some(hub) = self.hub else { return };
+        for li in 0..self.lanes.len() {
+            let gone = self.lanes[li]
+                .as_ref()
+                .is_some_and(|l| hub.is_cancelled(l.id));
+            if gone {
+                self.cancel_lane(li, metrics);
+            }
+        }
+    }
+
+    /// Live mode: publish this worker's occupancy gauges (active lanes,
+    /// KV live bytes) so `/stats` observes admission and teardown.
+    fn publish_gauges(&self) {
+        if let Some(hub) = self.hub {
+            let w = self.shard.as_ref().map_or(0, |c| c.worker);
+            let live = if self.cfg.use_kv_cache { self.cache.live_bytes() } else { 0 };
+            hub.publish(w, self.active_lanes(), live);
+        }
     }
 
     /// Sharded runs track which requests each worker holds so a panic can
@@ -565,7 +659,9 @@ impl<'a> Engine<'a> {
         out: &mut Vec<GenResponse>,
     ) {
         let now = Instant::now();
-        metrics.record_expired(batcher.expire_overdue(now).len());
+        let expired = batcher.expire_overdue(now);
+        self.notify_expired(&expired);
+        metrics.record_expired(expired.len());
         for i in 0..self.lanes.len() {
             while self.lanes[i].is_none() {
                 // restore-to-front: parked preemption victims re-admit
@@ -634,7 +730,9 @@ impl<'a> Engine<'a> {
                     batcher.pop_ready(now).expect("peeked head vanished");
                 let mut lane = self.make_lane(id, &req, submitted, now, deadline);
                 if lane.max_new == 0 {
-                    out.push(Self::finish(lane, 0, now, metrics));
+                    let resp = Self::finish(lane, 0, now, metrics);
+                    self.notify_finish(&resp);
+                    out.push(resp);
                     continue;
                 }
                 lane.slot = slot;
@@ -691,7 +789,7 @@ impl<'a> Engine<'a> {
         let now = Instant::now();
         for (row, slot) in layout.iter().enumerate() {
             let Some(li) = slot else { continue };
-            {
+            let (id, index, token) = {
                 let lane = self.lanes[*li].as_mut().unwrap();
                 let pos = lane.seq.len() - 1;
                 let base = (row * t + pos) * vocab;
@@ -702,8 +800,18 @@ impl<'a> Engine<'a> {
                         .record_itl(now.duration_since(prev).as_secs_f64() * 1000.0);
                 }
                 lane.last_token_at = Some(now);
-            }
+                if lane.ttft_ms.is_none() {
+                    lane.ttft_ms = Some(
+                        now.duration_since(lane.admitted).as_secs_f64() * 1000.0,
+                    );
+                }
+                (lane.id, lane.seq.len() - lane.prompt_len - 1, next)
+            };
             metrics.record_tokens(1);
+            if !self.emit_live(id, index, token) {
+                self.cancel_lane(*li, metrics);
+                continue;
+            }
             if self.lane_done(*li) {
                 self.finish_lane(*li, now, metrics, out);
             }
@@ -863,13 +971,27 @@ impl<'a> Engine<'a> {
                 continue;
             }
             metrics.record_tokens(1);
-            {
+            let (id, index, token) = {
                 let lane = self.lanes[li].as_mut().unwrap();
                 if let Some(prev) = lane.last_token_at {
                     metrics
                         .record_itl(now.duration_since(prev).as_secs_f64() * 1000.0);
                 }
                 lane.last_token_at = Some(now);
+                if lane.ttft_ms.is_none() {
+                    lane.ttft_ms = Some(
+                        now.duration_since(lane.admitted).as_secs_f64() * 1000.0,
+                    );
+                }
+                (
+                    lane.id,
+                    lane.seq.len() - lane.prompt_len - 1,
+                    *lane.seq.last().unwrap(),
+                )
+            };
+            if !self.emit_live(id, index, token) {
+                self.cancel_lane(li, metrics);
+                continue;
             }
             if self.lane_done(li) {
                 self.finish_lane(li, now, metrics, out);
@@ -916,7 +1038,9 @@ impl<'a> Engine<'a> {
         let k0 = kernel_nanos();
         let mut step = 0usize;
         for _ in 0..self.cfg.max_steps {
+            self.sweep_cancelled(metrics);
             self.admit(batcher, metrics, &mut out);
+            self.publish_gauges();
             if self.active_lanes() == 0 {
                 if batcher.pending() == 0 {
                     break;
@@ -928,6 +1052,7 @@ impl<'a> Engine<'a> {
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
+            self.publish_gauges();
             step += 1;
             // torture-test hook: forced preemption every N steps
             if let Some(n) = self.cfg.preempt_every {
@@ -939,6 +1064,7 @@ impl<'a> Engine<'a> {
                 }
             }
         }
+        self.publish_gauges();
         metrics.record_kernel_ns(kernel_nanos() - k0);
         self.export_memory(metrics);
         Ok(out)
@@ -1037,7 +1163,9 @@ impl<'a> Engine<'a> {
         let worker =
             self.shard.as_ref().expect("sharded admission without ctx").worker;
         let now = Instant::now();
-        metrics.record_expired(queue.expire_overdue(now).len());
+        let expired = queue.expire_overdue(now);
+        self.notify_expired(&expired);
+        metrics.record_expired(expired.len());
         for i in 0..self.lanes.len() {
             while self.lanes[i].is_none() {
                 if self.cfg.use_kv_cache {
@@ -1109,7 +1237,9 @@ impl<'a> Engine<'a> {
                 let mut lane = self.make_lane(id, &req, submitted, now, deadline);
                 if lane.max_new == 0 {
                     self.deregister_in_flight(id);
-                    out.push(Self::finish(lane, 0, now, metrics));
+                    let resp = Self::finish(lane, 0, now, metrics);
+                    self.notify_finish(&resp);
+                    out.push(resp);
                     continue;
                 }
                 lane.slot = slot;
@@ -1124,6 +1254,12 @@ impl<'a> Engine<'a> {
     /// this worker's lanes has finished — siblings may still be decoding
     /// their own lanes. [`run_sharded`] drives one of these per worker;
     /// it is public so tests can run a single worker in isolation.
+    ///
+    /// **Live mode** (a hub attached via [`Engine::set_hub`]): the step
+    /// cap is ignored and an idle worker *waits* for mid-flight
+    /// submissions instead of exiting — the loop ends only when the hub
+    /// signals shutdown and nothing is queued or active. Client cancels
+    /// are swept each iteration and occupancy gauges published each step.
     pub fn run_worker(
         &mut self,
         queue: &ShardedQueue,
@@ -1132,16 +1268,31 @@ impl<'a> Engine<'a> {
         let mut out = Vec::new();
         self.export_memory(metrics);
         let k0 = kernel_nanos();
+        let live = self.hub.is_some();
         let mut step = 0usize;
-        for _ in 0..self.cfg.max_steps {
+        let mut steps_left = self.cfg.max_steps;
+        loop {
+            if !live {
+                if steps_left == 0 {
+                    break;
+                }
+                steps_left -= 1;
+            }
+            self.sweep_cancelled(metrics);
             self.admit_sharded(queue, metrics, &mut out);
+            self.publish_gauges();
             if self.active_lanes() == 0 {
                 if queue.pending() == 0 {
-                    break;
+                    if !live
+                        || self.hub.is_some_and(|h| h.shutting_down())
+                    {
+                        break;
+                    }
                 }
                 // queued work exists but nothing was admissible (raced
                 // with a sibling's claim, or our partition backpressured
-                // with every lane idle): back off briefly, then re-claim
+                // with every lane idle) — or a live worker is idling for
+                // the next submission: back off briefly, then re-claim
                 std::thread::sleep(
                     queue
                         .max_wait
@@ -1151,11 +1302,13 @@ impl<'a> Engine<'a> {
                 continue;
             }
             self.decode_step(false, metrics, &mut out)?;
+            self.publish_gauges();
             step += 1;
             if self.cfg.use_kv_cache {
                 self.forced_preempt_sharded(step, queue, metrics);
             }
         }
+        self.publish_gauges();
         metrics.record_kernel_ns(kernel_nanos() - k0);
         self.export_memory(metrics);
         Ok(out)
@@ -1274,6 +1427,23 @@ pub fn run_sharded(
     router: &PrefixRouter,
     spec: &ShardSpec,
 ) -> Result<ShardRun> {
+    run_sharded_live(pipe, model, cfg, queue, router, spec, None)
+}
+
+/// [`run_sharded`] with an optional live-streaming [`EmitHub`]: with a
+/// hub the workers run in long-lived server mode (mid-flight submission
+/// in, per-token emit channels out, shutdown-latched exit) — this is the
+/// engine half of the HTTP front door. Without one it is exactly
+/// [`run_sharded`].
+pub fn run_sharded_live(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    cfg: &EngineCfg,
+    queue: &ShardedQueue,
+    router: &PrefixRouter,
+    spec: &ShardSpec,
+    hub: Option<&EmitHub>,
+) -> Result<ShardRun> {
     let b_eval = pipe.cfg.b_eval;
     let workers = effective_workers(cfg.workers, b_eval);
     assert_eq!(
@@ -1314,6 +1484,9 @@ pub fn run_sharded(
                         in_flight,
                         preempt_armed,
                     });
+                    if let Some(hub) = hub {
+                        engine.set_hub(hub);
+                    }
                     let mut metrics = MetricsRegistry::new(&format!("worker{w}"));
                     let out = engine.run_worker(queue, &mut metrics)?;
                     Ok((out, metrics))
@@ -1340,8 +1513,14 @@ pub fn run_sharded(
                 // and stop routing new prompts at a dead partition
                 worker_panics += 1;
                 router.forget_worker(w);
-                failed_requests
-                    .extend(in_flight.lock().unwrap()[w].iter().copied());
+                let lost: Vec<u64> =
+                    in_flight.lock().unwrap()[w].iter().copied().collect();
+                if let Some(hub) = hub {
+                    for id in &lost {
+                        hub.fail(*id, "worker panic");
+                    }
+                }
+                failed_requests.extend(lost);
                 per_worker
                     .push((MetricsRegistry::new(&format!("worker{w}")), true));
             }

@@ -1,0 +1,407 @@
+//! Streaming HTTP front door: a hand-rolled, pure-std HTTP/1.1 server
+//! over the live sharded engine. `POST /generate` submits a request
+//! mid-flight into the running workers and streams each decoded token
+//! back as a server-sent event the step it is produced; `GET /stats`
+//! exposes live occupancy (the disconnect-teardown observable); and an
+//! overloaded queue answers `429` with a `Retry-After` hint instead of
+//! queueing unboundedly.
+//!
+//! Protocol surface (all JSON via [`crate::util::json`], no new deps):
+//!
+//! * `POST /generate` body `{"prompt": "...", "max_new_tokens": N}` →
+//!   `200 text/event-stream` of `event: token` frames (`{id, index,
+//!   token}` — raw token ids, because byte-level tokens split multi-byte
+//!   UTF-8 and only the full sequence decodes losslessly), terminated by
+//!   one `event: done` (the full [`GenResponse`]) or `event: error`.
+//!   Malformed body → `400`; queue at capacity → `429` + `Retry-After`.
+//! * `GET /stats` → live gauges: active lanes, KV live bytes, queue
+//!   depth, terminal-state counters.
+//! * `GET /healthz` → `{"ok": true}`.
+//!
+//! **Disconnect teardown**: a client that goes away mid-stream surfaces
+//! as a failed SSE write (or a dropped emit channel inside the engine);
+//! either path marks the request cancelled on the [`EmitHub`], and the
+//! owning worker sweeps the flag on its next step — freeing the lane and
+//! its KV pages without a response. `tests/http_serve.rs` asserts the
+//! `/stats` gauges return to zero.
+//!
+//! **Identity**: the engine pushes the same token ids it commits to the
+//! lane, so `decode(encode(prompt) ++ streamed_tokens)` equals the
+//! in-process response text byte-for-byte — test-gated at 1 and multi
+//! worker.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::Pipeline;
+use crate::eval::ModelEval;
+use crate::runtime::kv::PrefixRouter;
+use crate::util::json::{boolean, num, obj, s, Json};
+
+use super::engine::{
+    effective_workers, place_request, run_sharded_live, ShardRun, ShardSpec,
+};
+use super::stream::{EmitHub, TokenEvent};
+use super::{EngineCfg, GenRequest, ShardedQueue};
+
+/// Front-door tunables.
+#[derive(Debug, Clone)]
+pub struct HttpServerCfg {
+    /// admission cap: a `POST /generate` arriving with this many requests
+    /// already queued (not yet admitted to a lane — the visible surface
+    /// of page-budget backpressure) is answered `429` instead of queued
+    pub queue_cap: usize,
+    /// the `Retry-After` hint (seconds) sent with a `429`
+    pub retry_after_s: u64,
+    /// auto-shutdown after this many requests reach a terminal state
+    /// (done, failed, or cancelled) — how tests and the load harness run
+    /// a bounded server; `None` serves until the process dies
+    pub max_requests: Option<usize>,
+}
+
+impl Default for HttpServerCfg {
+    fn default() -> Self {
+        HttpServerCfg { queue_cap: 64, retry_after_s: 1, max_requests: None }
+    }
+}
+
+/// One parsed HTTP/1.1 request head plus its body.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+/// Read and parse one request from `conn`. `Ok(None)` is a connection
+/// that closed before sending anything (not an error); `Err(msg)` is a
+/// malformed request the caller answers with `400`.
+fn read_request(
+    conn: &mut TcpStream,
+) -> std::io::Result<std::result::Result<Option<Request>, String>> {
+    const HEAD_CAP: usize = 64 * 1024;
+    const BODY_CAP: usize = 1024 * 1024;
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) =
+            buf.windows(4).position(|w| w == b"\r\n\r\n")
+        {
+            break pos;
+        }
+        if buf.len() > HEAD_CAP {
+            return Ok(Err("request head too large".into()));
+        }
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Ok(Ok(None))
+            } else {
+                Ok(Err("connection closed mid-head".into()))
+            };
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h.to_string(),
+        Err(_) => return Ok(Err("non-UTF-8 request head".into())),
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (Some(method), Some(path), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return Ok(Err(format!("bad request line: {request_line:?}")));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Ok(Err(format!("unsupported version: {version:?}")));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Ok(Err(format!("bad header line: {line:?}")));
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            content_length = match value.trim().parse() {
+                Ok(n) if n <= BODY_CAP => n,
+                _ => return Ok(Err("bad content-length".into())),
+            };
+        }
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(Err("connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Ok(Some(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        body,
+    })))
+}
+
+/// Write a complete non-streaming response (`Content-Length` framed,
+/// `Connection: close`).
+fn write_response(
+    conn: &mut TcpStream,
+    status: &str,
+    extra_headers: &[(&str, String)],
+    body: &Json,
+) -> std::io::Result<()> {
+    let payload = body.dump();
+    let mut head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        payload.len()
+    );
+    for (name, value) in extra_headers {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("\r\n");
+    conn.write_all(head.as_bytes())?;
+    conn.write_all(payload.as_bytes())?;
+    conn.flush()
+}
+
+fn error_json(msg: &str) -> Json {
+    obj(vec![("error", s(msg))])
+}
+
+/// Write one SSE frame: `event: <event>\ndata: <json>\n\n`.
+fn write_sse(conn: &mut TcpStream, event: &str, data: &Json) -> std::io::Result<()> {
+    conn.write_all(
+        format!("event: {event}\ndata: {}\n\n", data.dump()).as_bytes(),
+    )?;
+    conn.flush()
+}
+
+/// Handle `POST /generate`: admission-cap check, mid-flight submission
+/// with the emit channel registered atomically, then stream the tokens.
+fn handle_generate(
+    conn: &mut TcpStream,
+    body: &[u8],
+    queue: &ShardedQueue,
+    router: &PrefixRouter,
+    hub: &EmitHub,
+    hcfg: &HttpServerCfg,
+) -> std::io::Result<()> {
+    let parsed = std::str::from_utf8(body)
+        .ok()
+        .and_then(|text| Json::parse(text).ok());
+    let Some(req_json) = parsed else {
+        return write_response(
+            conn,
+            "400 Bad Request",
+            &[],
+            &error_json("body is not valid JSON"),
+        );
+    };
+    let Some(prompt) = req_json.get("prompt").and_then(Json::as_str) else {
+        return write_response(
+            conn,
+            "400 Bad Request",
+            &[],
+            &error_json("missing string field \"prompt\""),
+        );
+    };
+    let max_new = req_json
+        .get("max_new_tokens")
+        .and_then(Json::as_usize)
+        .unwrap_or(16);
+    // backpressure surfaces here: page-budget admission keeps requests
+    // *queued*, so queue depth is the honest overload signal — past the
+    // cap, shed load with a retry hint instead of queueing unboundedly
+    if queue.pending() >= hcfg.queue_cap {
+        hub.record_rejected();
+        return write_response(
+            conn,
+            "429 Too Many Requests",
+            &[("Retry-After", hcfg.retry_after_s.to_string())],
+            &obj(vec![
+                ("error", s("overloaded")),
+                ("retry_after_s", num(hcfg.retry_after_s as f64)),
+            ]),
+        );
+    }
+    let gen_req =
+        GenRequest { prompt: prompt.to_string(), max_new_tokens: max_new };
+    let placed = place_request(router, &gen_req);
+    // `None` means shutdown won the race: the workers may already have
+    // drained, so an accepted channel could never be served — shed the
+    // request instead of handing back a stream that would hang open
+    let Some((id, rx)) =
+        hub.register(|| queue.submit_placed(gen_req.clone(), None, placed))
+    else {
+        return write_response(
+            conn,
+            "503 Service Unavailable",
+            &[],
+            &error_json("server shutting down"),
+        );
+    };
+    conn.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    conn.flush()?;
+    for event in rx {
+        let wrote = match &event {
+            TokenEvent::Token { id, index, token } => write_sse(
+                conn,
+                "token",
+                &obj(vec![
+                    ("id", num(*id as f64)),
+                    ("index", num(*index as f64)),
+                    ("token", num(*token as f64)),
+                ]),
+            ),
+            TokenEvent::Done(resp) => write_sse(
+                conn,
+                "done",
+                &obj(vec![
+                    ("id", num(resp.id as f64)),
+                    ("text", s(&resp.text)),
+                    ("new_tokens", num(resp.new_tokens as f64)),
+                    ("queue_ms", num(resp.queue_ms)),
+                    ("decode_ms", num(resp.decode_ms)),
+                    ("latency_ms", num(resp.latency_ms)),
+                ]),
+            ),
+            TokenEvent::Failed { id, reason } => write_sse(
+                conn,
+                "error",
+                &obj(vec![("id", num(*id as f64)), ("reason", s(reason))]),
+            ),
+        };
+        if wrote.is_err() {
+            // client went away mid-stream: flag the cancel so the
+            // owning worker frees the lane and its pages on its next
+            // sweep, then drop the channel
+            hub.cancel(id);
+            return wrote;
+        }
+        if matches!(event, TokenEvent::Done(_) | TokenEvent::Failed { .. }) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Serve one connection: parse, route, respond. Errors are per-connection
+/// (a broken client never wedges a lane — at worst its request is
+/// cancelled and swept).
+fn handle_connection(
+    mut conn: TcpStream,
+    queue: &ShardedQueue,
+    router: &PrefixRouter,
+    hub: &EmitHub,
+    hcfg: &HttpServerCfg,
+) {
+    conn.set_read_timeout(Some(Duration::from_secs(10))).ok();
+    let req = match read_request(&mut conn) {
+        Ok(Ok(Some(req))) => req,
+        Ok(Ok(None)) => return,
+        Ok(Err(msg)) => {
+            write_response(&mut conn, "400 Bad Request", &[], &error_json(&msg))
+                .ok();
+            return;
+        }
+        Err(_) => return,
+    };
+    let result = match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/generate") => {
+            handle_generate(&mut conn, &req.body, queue, router, hub, hcfg)
+        }
+        ("GET", "/healthz") => write_response(
+            &mut conn,
+            "200 OK",
+            &[],
+            &obj(vec![("ok", boolean(true))]),
+        ),
+        ("GET", "/stats") => write_response(
+            &mut conn,
+            "200 OK",
+            &[],
+            &hub.stats_json(queue.pending(), queue.parked()),
+        ),
+        _ => write_response(
+            &mut conn,
+            "404 Not Found",
+            &[],
+            &error_json("no such route"),
+        ),
+    };
+    result.ok();
+}
+
+/// Run the streaming front door over a live sharded engine deployment:
+/// `cfg.workers` engine threads (the same partitioned-lane/page geometry
+/// as [`super::engine::run_sharded`]) in long-running server mode, one
+/// accept loop, and one handler thread per connection — all inside a
+/// single scoped-thread region, pure std.
+///
+/// The caller binds the listener (bind to port 0 for an ephemeral test
+/// port) so the address is known before the server starts. The call
+/// blocks until shutdown: with `hcfg.max_requests = Some(n)` the server
+/// retires itself once `n` requests reach a terminal state and returns
+/// the deployment's [`ShardRun`] (merged metrics, responses sorted by
+/// id); with `None` it serves until the process dies.
+pub fn serve_http(
+    pipe: &Pipeline,
+    model: &ModelEval,
+    cfg: &EngineCfg,
+    spec: &ShardSpec,
+    hcfg: &HttpServerCfg,
+    listener: TcpListener,
+) -> Result<ShardRun> {
+    let workers = effective_workers(cfg.workers, pipe.cfg.b_eval);
+    let queue = ShardedQueue::new(workers);
+    let router = PrefixRouter::new(spec.page_size.clamp(1, pipe.cfg.seq));
+    let hub = EmitHub::new(workers);
+    listener.set_nonblocking(true)?;
+    thread::scope(|scope| -> Result<ShardRun> {
+        let (queue, router, hub) = (&queue, &router, &hub);
+        let engine = scope.spawn(move || {
+            run_sharded_live(pipe, model, cfg, queue, router, spec, Some(hub))
+        });
+        loop {
+            if let Some(n) = hcfg.max_requests {
+                if hub.completed() >= n {
+                    hub.request_shutdown();
+                }
+            }
+            if hub.shutting_down() {
+                break;
+            }
+            match listener.accept() {
+                Ok((conn, _peer)) => {
+                    scope.spawn(move || {
+                        handle_connection(conn, queue, router, hub, hcfg)
+                    });
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => {
+                    hub.request_shutdown();
+                    engine.join().expect("engine thread panicked").ok();
+                    return Err(e.into());
+                }
+            }
+        }
+        let run = engine.join().expect("engine thread panicked");
+        // stragglers that raced the shutdown (submitted after the last
+        // worker drained) still hold open emit channels: fail them so
+        // their handler threads terminate and the scope can exit
+        hub.fail_all("server shutting down");
+        run
+    })
+}

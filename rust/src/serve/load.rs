@@ -1,0 +1,547 @@
+//! Open-loop load harness for the HTTP front door: seeded-Poisson
+//! arrivals over a realistic prompt mix, driven by independent client
+//! threads so arrival times never depend on completions (the open-loop
+//! property — a saturated server keeps receiving load, which is exactly
+//! how queueing delay and overload tails become visible). Wall-clock
+//! TTFT and inter-token gaps are measured at the *client*, so the
+//! exported percentiles include network framing and queueing, not just
+//! engine time.
+//!
+//! The prompt mix mirrors the serving scenarios the scheduler optimizes
+//! for: shared-system-prompt chat (exercises the prefix cache and the
+//! placement router), long-context summarize (exercises chunked
+//! prefill), and short classify (latency-sensitive small requests).
+//!
+//! Determinism: [`schedule`] is a pure function of its seed — arrival
+//! offsets and prompts are identical run to run — while the measured
+//! latencies are, of course, wall clock.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Rng;
+
+use super::metrics::percentile;
+use super::GenRequest;
+
+/// Load-run shape: offered arrival rate, request count, seed, and the
+/// model's sequence window (sizes the summarize prompts).
+#[derive(Debug, Clone)]
+pub struct LoadCfg {
+    /// offered arrivals per second (Poisson intensity)
+    pub rate_hz: f64,
+    /// total requests to offer
+    pub requests: usize,
+    /// RNG seed — same seed, same schedule
+    pub seed: u64,
+    /// model sequence window (long-context prompts are sized against it)
+    pub seq: usize,
+}
+
+/// One scheduled arrival: when (ms from run start), which mix class, and
+/// the request itself.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    /// arrival offset from run start, ms
+    pub at_ms: f64,
+    /// mix class: "chat" | "summarize" | "classify"
+    pub class: &'static str,
+    /// the request to submit
+    pub req: GenRequest,
+}
+
+/// Build the deterministic arrival schedule: exponential inter-arrival
+/// gaps at `rate_hz` (cumulative, so the offsets are a Poisson process)
+/// and a 50/20/30 chat/summarize/classify mix.
+pub fn schedule(cfg: &LoadCfg) -> Vec<Arrival> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t_ms = 0.0f64;
+    let system = "You are a terse assistant for the PTQ1.61 serving demo. ";
+    (0..cfg.requests)
+        .map(|i| {
+            // inverse-CDF exponential gap; 1-u > 0 so ln is finite
+            let gap_s = -(1.0 - rng.f64()).ln() / cfg.rate_hz.max(1e-9);
+            t_ms += gap_s * 1000.0;
+            let u = rng.f64();
+            let (class, prompt, max_new) = if u < 0.5 {
+                // shared system prompt: every chat request carries the
+                // same prefix, so the prefix cache and placement router
+                // are exercised under live arrivals
+                (
+                    "chat",
+                    format!("{system}User {i} asks about topic {}.", rng.below(8)),
+                    12,
+                )
+            } else if u < 0.7 {
+                // long-context summarize: prompt sized to most of the
+                // window so chunked prefill has something to chunk
+                let body = "data ".repeat((cfg.seq * 2 / 3).max(10) / 5 + 1);
+                ("summarize", format!("Summarize: {body}"), 8)
+            } else {
+                ("classify", format!("label {}", rng.below(100)), 2)
+            };
+            Arrival {
+                at_ms: t_ms,
+                class,
+                req: GenRequest {
+                    prompt,
+                    max_new_tokens: max_new,
+                },
+            }
+        })
+        .collect()
+}
+
+/// What one streamed request yielded, measured at the client.
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// request id assigned by the server
+    pub id: u64,
+    /// streamed token ids, in arrival order
+    pub tokens: Vec<i32>,
+    /// the `done` event's full decoded text
+    pub text: String,
+    /// request-sent → first token event, wall clock ms
+    pub ttft_ms: f64,
+    /// client-observed gaps between consecutive token events, ms
+    pub itl_ms: Vec<f64>,
+    /// request-sent → terminal event, wall clock ms
+    pub total_ms: f64,
+    /// every token arrived with the expected contiguous `index`
+    pub in_order: bool,
+}
+
+/// One request's outcome at the HTTP edge.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// streamed to a terminal `done`
+    Stream(StreamResult),
+    /// shed with `429 Too Many Requests`
+    Overloaded {
+        /// the server's `Retry-After` hint, seconds
+        retry_after_s: f64,
+    },
+    /// any other failure: non-2xx status, `error` event, or I/O trouble
+    Error {
+        /// what went wrong
+        reason: String,
+    },
+}
+
+/// Reconstruct the response text a request's streamed token ids imply:
+/// the engine's own tokenization rules (window truncation, empty-prompt
+/// seeding) applied to the prompt, plus the streamed tokens, byte-
+/// decoded. Equal to the `done` event's text iff the stream carried
+/// exactly the tokens the engine committed — the identity gate.
+pub fn reconstruct_text(prompt: &str, tokens: &[i32], seq_window: usize) -> String {
+    let tk = ByteTokenizer;
+    let mut seq = tk.encode(prompt);
+    seq.truncate(seq_window - 1);
+    if seq.is_empty() {
+        seq.push(b' ' as i32);
+    }
+    seq.extend_from_slice(tokens);
+    tk.decode(&seq)
+}
+
+/// Blocking SSE client: POST one generate request to `addr` and consume
+/// the stream, timing TTFT/ITL at the socket.
+pub fn http_generate(addr: &str, req: &GenRequest) -> Outcome {
+    match try_generate(addr, req) {
+        Ok(outcome) => outcome,
+        Err(e) => Outcome::Error { reason: format!("io: {e}") },
+    }
+}
+
+fn try_generate(addr: &str, req: &GenRequest) -> std::io::Result<Outcome> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_read_timeout(Some(Duration::from_secs(60)))?;
+    let body = obj(vec![
+        ("prompt", s(&req.prompt)),
+        ("max_new_tokens", num(req.max_new_tokens as f64)),
+    ])
+    .dump();
+    let sent_at = Instant::now();
+    conn.write_all(
+        format!(
+            "POST /generate HTTP/1.1\r\nHost: {addr}\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\
+             Connection: close\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    )?;
+    // read the response head
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(Outcome::Error {
+                reason: "connection closed before response head".into(),
+            });
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let status: u16 = head
+        .lines()
+        .next()
+        .and_then(|l| l.split(' ').nth(1))
+        .and_then(|code| code.parse().ok())
+        .unwrap_or(0);
+    if status == 429 {
+        let retry = head
+            .lines()
+            .find_map(|l| {
+                l.split_once(':')
+                    .filter(|(k, _)| k.trim().eq_ignore_ascii_case("retry-after"))
+            })
+            .and_then(|(_, v)| v.trim().parse().ok())
+            .unwrap_or(0.0);
+        return Ok(Outcome::Overloaded { retry_after_s: retry });
+    }
+    if status != 200 {
+        return Ok(Outcome::Error { reason: format!("http status {status}") });
+    }
+    // SSE body: frames separated by a blank line, each `event:` + `data:`
+    let mut body_buf = buf[head_end + 4..].to_vec();
+    let mut result = StreamResult {
+        id: 0,
+        tokens: Vec::new(),
+        text: String::new(),
+        ttft_ms: 0.0,
+        itl_ms: Vec::new(),
+        total_ms: 0.0,
+        in_order: true,
+    };
+    let mut last_token_at: Option<Instant> = None;
+    loop {
+        while let Some(pos) = body_buf.windows(2).position(|w| w == b"\n\n") {
+            let frame = String::from_utf8_lossy(&body_buf[..pos]).to_string();
+            body_buf.drain(..pos + 2);
+            let mut event = "";
+            let mut data = String::new();
+            for line in frame.lines() {
+                if let Some(rest) = line.strip_prefix("event: ") {
+                    event = rest;
+                } else if let Some(rest) = line.strip_prefix("data: ") {
+                    data = rest.to_string();
+                }
+            }
+            let Ok(payload) = Json::parse(&data) else {
+                return Ok(Outcome::Error {
+                    reason: format!("unparseable SSE data: {data:?}"),
+                });
+            };
+            let now = Instant::now();
+            match event {
+                "token" => {
+                    let index =
+                        payload.get("index").and_then(Json::as_usize).unwrap_or(0);
+                    let token =
+                        payload.get("token").and_then(Json::as_f64).unwrap_or(0.0)
+                            as i32;
+                    if index != result.tokens.len() {
+                        result.in_order = false;
+                    }
+                    if result.tokens.is_empty() {
+                        result.ttft_ms =
+                            now.duration_since(sent_at).as_secs_f64() * 1000.0;
+                    }
+                    if let Some(prev) = last_token_at {
+                        result.itl_ms.push(
+                            now.duration_since(prev).as_secs_f64() * 1000.0,
+                        );
+                    }
+                    last_token_at = Some(now);
+                    result.tokens.push(token);
+                    result.id = payload
+                        .get("id")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0) as u64;
+                }
+                "done" => {
+                    result.text = payload
+                        .get("text")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string();
+                    result.id = payload
+                        .get("id")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(result.id as f64)
+                        as u64;
+                    result.total_ms =
+                        now.duration_since(sent_at).as_secs_f64() * 1000.0;
+                    return Ok(Outcome::Stream(result));
+                }
+                "error" => {
+                    let reason = payload
+                        .get("reason")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string();
+                    return Ok(Outcome::Error { reason });
+                }
+                _ => {}
+            }
+        }
+        let n = conn.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(Outcome::Error {
+                reason: "stream closed before a terminal event".into(),
+            });
+        }
+        body_buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// What an open-loop run measured, aggregated over its arrivals.
+#[derive(Debug)]
+pub struct LoadReport {
+    /// offered arrival rate (from the schedule)
+    pub rate_hz: f64,
+    /// requests offered
+    pub offered: usize,
+    /// requests streamed to `done`
+    pub ok: usize,
+    /// requests shed with `429`
+    pub rejected: usize,
+    /// requests that errored (I/O, non-2xx, `error` event)
+    pub errors: usize,
+    /// streams whose token indices arrived contiguous AND whose
+    /// reconstructed text matched the `done` text (the identity gate)
+    pub identity_ok: usize,
+    /// per-request client-observed TTFT (ok requests only), ms
+    pub ttft_ms: Vec<f64>,
+    /// client-observed inter-token gaps across ok requests, ms
+    pub itl_ms: Vec<f64>,
+    /// tokens streamed across ok requests
+    pub total_tokens: usize,
+    /// first arrival sent → last outcome, wall ms
+    pub wall_ms: f64,
+    /// per-class offered counts (deterministic order)
+    pub class_counts: BTreeMap<&'static str, usize>,
+    /// each arrival's outcome, schedule order
+    pub outcomes: Vec<Outcome>,
+}
+
+impl LoadReport {
+    /// Fraction of offered requests that got a terminal answer (stream
+    /// or explicit 429) — 1.0 means nothing was dropped on the floor.
+    pub fn completion(&self) -> f64 {
+        if self.offered == 0 {
+            return 1.0;
+        }
+        (self.ok + self.rejected) as f64 / self.offered as f64
+    }
+
+    /// Fraction of streamed requests that passed the identity gate.
+    pub fn identity(&self) -> f64 {
+        if self.ok == 0 {
+            return 1.0;
+        }
+        self.identity_ok as f64 / self.ok as f64
+    }
+
+    /// Tokens per second over the run's wall clock.
+    pub fn achieved_tok_s(&self) -> f64 {
+        1000.0 * self.total_tokens as f64 / self.wall_ms.max(1e-6)
+    }
+
+    /// The report as a JSON object (what `load` and bench part 8 export).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("rate_hz", num(self.rate_hz)),
+            ("offered", num(self.offered as f64)),
+            ("ok", num(self.ok as f64)),
+            ("rejected_429", num(self.rejected as f64)),
+            ("errors", num(self.errors as f64)),
+            ("completion", num(self.completion())),
+            ("identity", num(self.identity())),
+            ("ttft_p50_ms", num(percentile(&self.ttft_ms, 0.50))),
+            ("ttft_p95_ms", num(percentile(&self.ttft_ms, 0.95))),
+            ("ttft_p99_ms", num(percentile(&self.ttft_ms, 0.99))),
+            ("itl_p50_ms", num(percentile(&self.itl_ms, 0.50))),
+            ("itl_p99_ms", num(percentile(&self.itl_ms, 0.99))),
+            ("total_tokens", num(self.total_tokens as f64)),
+            ("wall_ms", num(self.wall_ms)),
+            ("achieved_tok_s", num(self.achieved_tok_s())),
+            (
+                "achieved_req_s",
+                num(1000.0 * self.ok as f64 / self.wall_ms.max(1e-6)),
+            ),
+            (
+                "classes",
+                obj(self
+                    .class_counts
+                    .iter()
+                    .map(|(k, v)| (*k, num(*v as f64)))
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Drive `arrivals` against the HTTP edge at `addr`, open-loop: one
+/// client thread per arrival, each sleeping until its scheduled offset
+/// and then issuing its request regardless of how the others are faring.
+/// `seq_window` is the served model's window (for the identity
+/// reconstruction).
+pub fn run_open_loop(
+    addr: &str,
+    arrivals: &[Arrival],
+    rate_hz: f64,
+    seq_window: usize,
+) -> LoadReport {
+    let t0 = Instant::now();
+    let slots: Mutex<Vec<Option<Outcome>>> =
+        Mutex::new(vec![None; arrivals.len()]);
+    thread::scope(|scope| {
+        for (i, a) in arrivals.iter().enumerate() {
+            let slots = &slots;
+            scope.spawn(move || {
+                let target = t0 + Duration::from_secs_f64(a.at_ms / 1000.0);
+                let wait = target.saturating_duration_since(Instant::now());
+                if !wait.is_zero() {
+                    thread::sleep(wait);
+                }
+                let outcome = http_generate(addr, &a.req);
+                slots.lock().unwrap()[i] = Some(outcome);
+            });
+        }
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let outcomes: Vec<Outcome> = slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("every arrival thread records an outcome"))
+        .collect();
+    let mut report = LoadReport {
+        rate_hz,
+        offered: arrivals.len(),
+        ok: 0,
+        rejected: 0,
+        errors: 0,
+        identity_ok: 0,
+        ttft_ms: Vec::new(),
+        itl_ms: Vec::new(),
+        total_tokens: 0,
+        wall_ms,
+        class_counts: BTreeMap::new(),
+        outcomes: Vec::new(),
+    };
+    for (a, outcome) in arrivals.iter().zip(&outcomes) {
+        *report.class_counts.entry(a.class).or_insert(0) += 1;
+        match outcome {
+            Outcome::Stream(sr) => {
+                report.ok += 1;
+                report.total_tokens += sr.tokens.len();
+                report.ttft_ms.push(sr.ttft_ms);
+                report.itl_ms.extend(sr.itl_ms.iter().copied());
+                let rebuilt =
+                    reconstruct_text(&a.req.prompt, &sr.tokens, seq_window);
+                if sr.in_order && rebuilt == sr.text {
+                    report.identity_ok += 1;
+                }
+            }
+            Outcome::Overloaded { .. } => report.rejected += 1,
+            Outcome::Error { .. } => report.errors += 1,
+        }
+    }
+    report.outcomes = outcomes;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(seed: u64) -> LoadCfg {
+        LoadCfg { rate_hz: 50.0, requests: 40, seed, seq: 48 }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_under_a_seed() {
+        let a = schedule(&cfg(7));
+        let b = schedule(&cfg(7));
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ms, y.at_ms);
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.req.prompt, y.req.prompt);
+            assert_eq!(x.req.max_new_tokens, y.req.max_new_tokens);
+        }
+        // a different seed yields a different schedule
+        let c = schedule(&cfg(8));
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.at_ms != y.at_ms
+                || x.req.prompt != y.req.prompt),
+            "seeds must differentiate the schedule"
+        );
+    }
+
+    #[test]
+    fn schedule_arrivals_increase_and_mix_covers_classes() {
+        let arrivals = schedule(&cfg(3));
+        for w in arrivals.windows(2) {
+            assert!(w[1].at_ms > w[0].at_ms, "Poisson offsets are cumulative");
+        }
+        let classes: std::collections::HashSet<&str> =
+            arrivals.iter().map(|a| a.class).collect();
+        assert!(classes.contains("chat"));
+        assert!(classes.contains("summarize"));
+        assert!(classes.contains("classify"));
+        // shared-system-prompt chat requests really share a prefix
+        let chats: Vec<&Arrival> =
+            arrivals.iter().filter(|a| a.class == "chat").collect();
+        assert!(chats.len() >= 2);
+        let prefix = &chats[0].req.prompt[..40];
+        assert!(chats.iter().all(|a| a.req.prompt.starts_with(prefix)));
+    }
+
+    #[test]
+    fn reconstruct_text_applies_engine_tokenization_rules() {
+        // empty prompt seeds a space, long prompts truncate to seq-1 —
+        // identical to Engine::make_lane
+        let text = reconstruct_text("", &[b'h' as i32, b'i' as i32], 16);
+        assert_eq!(text, " hi");
+        let long = "x".repeat(100);
+        let text = reconstruct_text(&long, &[b'!' as i32], 8);
+        assert_eq!(text, format!("{}!", "x".repeat(7)));
+    }
+
+    #[test]
+    fn empty_report_is_vacuously_complete() {
+        let r = LoadReport {
+            rate_hz: 1.0,
+            offered: 0,
+            ok: 0,
+            rejected: 0,
+            errors: 0,
+            identity_ok: 0,
+            ttft_ms: vec![],
+            itl_ms: vec![],
+            total_tokens: 0,
+            wall_ms: 1.0,
+            class_counts: BTreeMap::new(),
+            outcomes: vec![],
+        };
+        assert_eq!(r.completion(), 1.0);
+        assert_eq!(r.identity(), 1.0);
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(j.get("completion").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("ttft_p99_ms").and_then(Json::as_f64), Some(0.0));
+    }
+}

@@ -81,6 +81,10 @@ pub struct RequestMetric {
     pub decode_ms: f64,
     /// submit -> last token
     pub total_ms: f64,
+    /// lane admission -> first emitted token, wall clock (0.0 for
+    /// zero-token requests, which never emit; carried across preemption
+    /// so a victim's TTFT stays its *first* first-token time)
+    pub ttft_ms: f64,
     /// tokens generated for this request
     pub new_tokens: usize,
     /// high-water mark of KV-cached positions held by this request's slot
@@ -108,6 +112,10 @@ pub struct MetricsRegistry {
     pub requests: Vec<RequestMetric>,
     /// requests dropped because their queue deadline lapsed
     pub expired: usize,
+    /// requests torn down mid-flight because their client disconnected
+    /// (streaming front door): the lane and its pages were freed without
+    /// a response
+    pub cancelled: usize,
     /// wall time of each decode step, in recording order
     pub step_ms: Vec<f64>,
     /// weight representation the engine decoded from (dense/fused/packed)
@@ -192,6 +200,7 @@ impl MetricsRegistry {
             total_tokens: 0,
             requests: Vec::new(),
             expired: 0,
+            cancelled: 0,
             step_ms: Vec::new(),
             backend: None,
             kv_reserved_bytes: None,
@@ -383,6 +392,38 @@ impl MetricsRegistry {
         self.expired += n;
     }
 
+    /// Count one mid-flight client-disconnect teardown.
+    pub fn record_cancelled(&mut self) {
+        self.cancelled += 1;
+    }
+
+    fn ttfts_ms(&self) -> Vec<f64> {
+        // zero-token requests never emit: exclude their placeholder 0.0
+        // so the percentiles describe requests that actually streamed
+        self.requests
+            .iter()
+            .filter(|r| r.new_tokens > 0)
+            .map(|r| r.ttft_ms)
+            .collect()
+    }
+
+    /// Median admission→first-token latency (ms). Like the end-to-end
+    /// percentiles, exact over the merged per-request rows of a sharded
+    /// run — no pre-binned approximation.
+    pub fn ttft_p50_ms(&self) -> f64 {
+        percentile(&self.ttfts_ms(), 0.50)
+    }
+
+    /// 95th-percentile admission→first-token latency (ms).
+    pub fn ttft_p95_ms(&self) -> f64 {
+        percentile(&self.ttfts_ms(), 0.95)
+    }
+
+    /// 99th-percentile admission→first-token latency (ms).
+    pub fn ttft_p99_ms(&self) -> f64 {
+        percentile(&self.ttfts_ms(), 0.99)
+    }
+
     /// Wall-clock of the decode loop in ms (first step -> now-ish).
     pub fn decode_window_ms(&self) -> f64 {
         match (self.first_step, self.last_step) {
@@ -460,6 +501,7 @@ impl MetricsRegistry {
             out.capacity += m.capacity;
             out.total_tokens += m.total_tokens;
             out.expired += m.expired;
+            out.cancelled += m.cancelled;
             out.requests.extend(m.requests.iter().cloned());
             out.step_ms.extend(m.step_ms.iter().copied());
             out.prefill_positions += m.prefill_positions;
@@ -552,6 +594,7 @@ impl MetricsRegistry {
             ("label", s(&self.label)),
             ("requests", num(self.requests.len() as f64)),
             ("expired", num(self.expired as f64)),
+            ("cancelled", num(self.cancelled as f64)),
             ("total_new_tokens", num(self.total_tokens as f64)),
             ("decode_steps", num(self.steps as f64)),
             ("lane_capacity", num(self.capacity as f64)),
@@ -579,6 +622,9 @@ impl MetricsRegistry {
             ("prefill_chunks", num(self.prefill_chunks as f64)),
             ("restored_positions", num(self.restored_positions as f64)),
             ("p99_itl_ms", num(self.p99_itl_ms())),
+            ("ttft_p50_ms", num(self.ttft_p50_ms())),
+            ("ttft_p95_ms", num(self.ttft_p95_ms())),
+            ("ttft_p99_ms", num(self.ttft_p99_ms())),
         ];
         if let Some(b) = &self.backend {
             fields.push(("backend", s(b)));
@@ -649,6 +695,7 @@ impl MetricsRegistry {
                     ("queue_ms", num(r.queue_ms)),
                     ("decode_ms", num(r.decode_ms)),
                     ("total_ms", num(r.total_ms)),
+                    ("ttft_ms", num(r.ttft_ms)),
                     ("new_tokens", num(r.new_tokens as f64)),
                     ("cached_positions", num(r.cached_positions as f64)),
                 ])
@@ -727,6 +774,7 @@ mod tests {
             queue_ms: 10.0,
             decode_ms: 30.0,
             total_ms: 40.0,
+            ttft_ms: 15.0,
             new_tokens: 6,
             cached_positions: 9,
         });
@@ -814,6 +862,7 @@ mod tests {
                 queue_ms: 1.0,
                 decode_ms: total_ms - 1.0,
                 total_ms,
+                ttft_ms: total_ms / 2.0,
                 new_tokens: 2,
                 cached_positions: 4,
             });
@@ -911,6 +960,53 @@ mod tests {
         let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
         assert_eq!(empty.get("preemptions").and_then(Json::as_usize), Some(0));
         assert_eq!(empty.get("p99_itl_ms").and_then(Json::as_f64), Some(0.0));
+    }
+
+    #[test]
+    fn ttft_and_cancelled_merge_and_export() {
+        // worker_part stamps ttft = total/2 on each request
+        let a = worker_part(2, 1, &[(0, 10.0), (2, 30.0)]);
+        let mut b = worker_part(2, 1, &[(1, 20.0)]);
+        b.record_cancelled();
+        b.record_cancelled();
+        let m = MetricsRegistry::merge_workers("ttft", vec![(a, false), (b, false)]);
+        assert_eq!(m.cancelled, 2);
+        // exact percentiles over the merged union {5, 15, 10}
+        assert_eq!(m.ttft_p50_ms(), 10.0);
+        assert_eq!(m.ttft_p99_ms(), 15.0);
+        let back = Json::parse(&m.snapshot().dump()).unwrap();
+        assert_eq!(back.get("cancelled").and_then(Json::as_usize), Some(2));
+        assert_eq!(back.get("ttft_p50_ms").and_then(Json::as_f64), Some(10.0));
+        assert_eq!(back.get("ttft_p95_ms").and_then(Json::as_f64), Some(15.0));
+        assert_eq!(back.get("ttft_p99_ms").and_then(Json::as_f64), Some(15.0));
+        let per = back.get("per_request").and_then(Json::as_arr).unwrap();
+        assert_eq!(per[0].get("ttft_ms").and_then(Json::as_f64), Some(5.0));
+        // zero-token requests never emit: their placeholder 0.0 must not
+        // drag the percentiles down
+        let mut z = MetricsRegistry::new("z");
+        z.record_request(RequestMetric {
+            id: 0,
+            queue_ms: 0.0,
+            decode_ms: 0.0,
+            total_ms: 0.0,
+            ttft_ms: 0.0,
+            new_tokens: 0,
+            cached_positions: 0,
+        });
+        z.record_request(RequestMetric {
+            id: 1,
+            queue_ms: 0.0,
+            decode_ms: 8.0,
+            total_ms: 8.0,
+            ttft_ms: 4.0,
+            new_tokens: 1,
+            cached_positions: 0,
+        });
+        assert_eq!(z.ttft_p50_ms(), 4.0);
+        // always-present keys: an empty run exports zeros
+        let empty = Json::parse(&MetricsRegistry::new("x").snapshot().dump()).unwrap();
+        assert_eq!(empty.get("cancelled").and_then(Json::as_usize), Some(0));
+        assert_eq!(empty.get("ttft_p99_ms").and_then(Json::as_f64), Some(0.0));
     }
 
     #[test]

@@ -36,15 +36,22 @@
 
 pub mod batcher;
 pub mod engine;
+pub mod http;
+pub mod load;
 pub mod metrics;
+pub mod stream;
 
 use anyhow::Result;
 
 pub use batcher::{Batcher, ShardedQueue};
 pub use engine::{
-    effective_workers, place_request, run_sharded, Engine, EngineCfg, ShardRun, ShardSpec,
+    effective_workers, place_request, run_sharded, run_sharded_live, Engine,
+    EngineCfg, ShardRun, ShardSpec,
 };
+pub use http::{serve_http, HttpServerCfg};
+pub use load::{run_open_loop, schedule, Arrival, LoadCfg, LoadReport};
 pub use metrics::{percentile, MetricsRegistry, RequestMetric, WorkerStat};
+pub use stream::{EmitHub, TokenEvent};
 
 use crate::coordinator::Pipeline;
 use crate::eval::ModelEval;

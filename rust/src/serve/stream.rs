@@ -1,0 +1,403 @@
+//! Live-streaming glue between the engine and the HTTP front door: an
+//! [`EmitHub`] carries per-request token channels (engine side in the
+//! decode loop, consumer side in the connection handler), client-cancel
+//! flags, per-worker occupancy gauges, and the shutdown latch that turns
+//! the run-to-completion worker loops into long-running servers.
+//!
+//! The hub is deliberately engine-agnostic: the engine only ever calls
+//! [`EmitHub::emit_token`] / [`EmitHub::finish`] / [`EmitHub::fail`] and
+//! polls [`EmitHub::is_cancelled`] / [`EmitHub::shutting_down`], so the
+//! same decode loops serve pre-queued benchmark workloads (no hub) and
+//! live HTTP traffic (hub attached) with byte-identical token streams.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use crate::util::json::{num, obj, Json};
+
+use super::GenResponse;
+
+/// One event on a request's emit channel, in stream order: zero or more
+/// `Token`s followed by exactly one `Done` or `Failed` — unless the
+/// request was cancelled, in which case the channel just closes.
+#[derive(Debug, Clone)]
+pub enum TokenEvent {
+    /// One decoded token. `index` counts from 0 within the request, so a
+    /// consumer can assert it never missed a step; `token` is the raw
+    /// token id (byte-level vocab) — ids, not text, because byte tokens
+    /// split multi-byte UTF-8 and only the full sequence decodes
+    /// losslessly.
+    Token {
+        /// request id
+        id: u64,
+        /// 0-based position of this token within the request's output
+        index: usize,
+        /// token id as sampled by the engine
+        token: i32,
+    },
+    /// Terminal: the finished response (full decoded text, latency split).
+    Done(GenResponse),
+    /// Terminal: the request died without a response (deadline expiry,
+    /// worker panic, shutdown).
+    Failed {
+        /// request id
+        id: u64,
+        /// why the request failed
+        reason: String,
+    },
+}
+
+/// Per-worker occupancy gauges published by live worker loops so the
+/// `/stats` endpoint (and the disconnect-teardown tests) can observe lane
+/// and KV-page release without stopping the engine.
+#[derive(Debug)]
+struct WorkerGauge {
+    active: AtomicUsize,
+    live_bytes: AtomicUsize,
+}
+
+/// The shared emit/cancel/shutdown hub for one live engine deployment.
+#[derive(Debug)]
+pub struct EmitHub {
+    shutdown: AtomicBool,
+    sinks: Mutex<HashMap<u64, mpsc::Sender<TokenEvent>>>,
+    cancelled: Mutex<HashSet<u64>>,
+    gauges: Vec<WorkerGauge>,
+    done: AtomicUsize,
+    failed: AtomicUsize,
+    cancels: AtomicUsize,
+    rejected: AtomicUsize,
+}
+
+impl EmitHub {
+    /// A hub for a deployment of `workers` live worker loops.
+    pub fn new(workers: usize) -> EmitHub {
+        EmitHub {
+            shutdown: AtomicBool::new(false),
+            sinks: Mutex::new(HashMap::new()),
+            cancelled: Mutex::new(HashSet::new()),
+            gauges: (0..workers.max(1))
+                .map(|_| WorkerGauge {
+                    active: AtomicUsize::new(0),
+                    live_bytes: AtomicUsize::new(0),
+                })
+                .collect(),
+            done: AtomicUsize::new(0),
+            failed: AtomicUsize::new(0),
+            cancels: AtomicUsize::new(0),
+            rejected: AtomicUsize::new(0),
+        }
+    }
+
+    /// Submit a request and open its emit channel atomically: `submit`
+    /// runs (enqueue into the live queue, returning the assigned id)
+    /// *while the sink table is locked*, so an engine thread that claims
+    /// the request instantly still blocks on its first emit until the
+    /// sink is in place — no token can slip past an unregistered
+    /// consumer. (Safe against deadlock: the engine never takes the
+    /// queue lock while emitting.)
+    ///
+    /// `None` once shutdown was requested: the workers may already have
+    /// drained and exited, so a late submission could never be served —
+    /// and because the check happens under the same sink-table lock that
+    /// [`EmitHub::fail_all`] sweeps, every accepted registration is
+    /// guaranteed a terminal event (served, or failed at teardown),
+    /// never a channel that hangs open.
+    pub fn register<F: FnOnce() -> u64>(
+        &self,
+        submit: F,
+    ) -> Option<(u64, mpsc::Receiver<TokenEvent>)> {
+        let mut sinks = self.sinks.lock().unwrap();
+        if self.shutting_down() {
+            return None;
+        }
+        let id = submit();
+        let (tx, rx) = mpsc::channel();
+        sinks.insert(id, tx);
+        Some((id, rx))
+    }
+
+    /// Engine side: push one decoded token to the request's consumer.
+    /// Returns `false` when the consumer is gone (receiver dropped or
+    /// already cancelled) — the engine treats that as a client
+    /// disconnect and tears the lane down.
+    pub fn emit_token(&self, id: u64, index: usize, token: i32) -> bool {
+        let sinks = self.sinks.lock().unwrap();
+        match sinks.get(&id) {
+            Some(tx) => tx.send(TokenEvent::Token { id, index, token }).is_ok(),
+            None => false,
+        }
+    }
+
+    /// Consumer side: the client went away. Marks the request cancelled
+    /// (the engine sweeps the flag each step and frees the lane + pages)
+    /// and closes the emit channel. Idempotent; counted once.
+    pub fn cancel(&self, id: u64) {
+        let newly = self.cancelled.lock().unwrap().insert(id);
+        self.sinks.lock().unwrap().remove(&id);
+        if newly {
+            self.cancels.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Engine side: was this request cancelled by its consumer?
+    pub fn is_cancelled(&self, id: u64) -> bool {
+        self.cancelled.lock().unwrap().contains(&id)
+    }
+
+    /// Engine side: the request finished; deliver the terminal `Done`
+    /// event and retire the channel. A concurrently-cancelled request is
+    /// not double-counted.
+    pub fn finish(&self, resp: GenResponse) {
+        let id = resp.id;
+        let tx = self.sinks.lock().unwrap().remove(&id);
+        if self.cancelled.lock().unwrap().contains(&id) {
+            return;
+        }
+        if let Some(tx) = tx {
+            tx.send(TokenEvent::Done(resp)).ok();
+        }
+        self.done.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Engine side: the request died (expiry, worker panic, shutdown);
+    /// deliver the terminal `Failed` event and retire the channel.
+    pub fn fail(&self, id: u64, reason: &str) {
+        let tx = self.sinks.lock().unwrap().remove(&id);
+        if self.cancelled.lock().unwrap().contains(&id) {
+            return;
+        }
+        if let Some(tx) = tx {
+            tx.send(TokenEvent::Failed { id, reason: reason.to_string() })
+                .ok();
+        }
+        self.failed.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// HTTP edge: one request shed with `429` before it ever reached the
+    /// queue. Counted so a bounded server (`max_requests`) still retires
+    /// when part of its offered load was rejected.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Fail every request that still holds an open emit channel (server
+    /// teardown): stragglers that submitted during the shutdown race get
+    /// a terminal `Failed` instead of a channel that never closes.
+    pub fn fail_all(&self, reason: &str) {
+        let ids: Vec<u64> =
+            self.sinks.lock().unwrap().keys().copied().collect();
+        for id in ids {
+            self.fail(id, reason);
+        }
+    }
+
+    /// Ask the live worker loops to exit once their queues drain.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Has shutdown been requested?
+    pub fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Worker `w`'s live occupancy: active lanes and KV live bytes.
+    /// Published once per engine step so `/stats` observes teardown.
+    pub fn publish(&self, worker: usize, active: usize, live_bytes: usize) {
+        if let Some(g) = self.gauges.get(worker) {
+            g.active.store(active, Ordering::SeqCst);
+            g.live_bytes.store(live_bytes, Ordering::SeqCst);
+        }
+    }
+
+    /// Sum of published per-worker active-lane gauges.
+    pub fn active_lanes(&self) -> usize {
+        self.gauges.iter().map(|g| g.active.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Sum of published per-worker KV live-byte gauges.
+    pub fn kv_live_bytes(&self) -> usize {
+        self.gauges
+            .iter()
+            .map(|g| g.live_bytes.load(Ordering::SeqCst))
+            .sum()
+    }
+
+    /// Requests that reached a terminal state (done, failed, cancelled,
+    /// or shed at the edge) — the auto-shutdown counter for bounded
+    /// servers.
+    pub fn completed(&self) -> usize {
+        self.done.load(Ordering::SeqCst)
+            + self.failed.load(Ordering::SeqCst)
+            + self.cancels.load(Ordering::SeqCst)
+            + self.rejected.load(Ordering::SeqCst)
+    }
+
+    /// Requests finished with a response.
+    pub fn done_count(&self) -> usize {
+        self.done.load(Ordering::SeqCst)
+    }
+
+    /// The `/stats` payload: live occupancy plus terminal-state counters.
+    /// `pending`/`parked` come from the queue (the hub does not own it).
+    pub fn stats_json(&self, pending: usize, parked: usize) -> Json {
+        obj(vec![
+            ("active", num(self.active_lanes() as f64)),
+            ("kv_live_bytes", num(self.kv_live_bytes() as f64)),
+            ("pending", num(pending as f64)),
+            ("parked", num(parked as f64)),
+            ("done", num(self.done.load(Ordering::SeqCst) as f64)),
+            ("failed", num(self.failed.load(Ordering::SeqCst) as f64)),
+            ("cancelled", num(self.cancels.load(Ordering::SeqCst) as f64)),
+            ("rejected", num(self.rejected.load(Ordering::SeqCst) as f64)),
+            (
+                "shutting_down",
+                num(if self.shutting_down() { 1.0 } else { 0.0 }),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64) -> GenResponse {
+        GenResponse {
+            id,
+            text: format!("r{id}"),
+            new_tokens: 2,
+            queue_ms: 1.0,
+            decode_ms: 2.0,
+            latency_ms: 3.0,
+        }
+    }
+
+    #[test]
+    fn register_emit_finish_round_trip() {
+        let hub = EmitHub::new(2);
+        let (id, rx) = hub.register(|| 7).unwrap();
+        assert_eq!(id, 7);
+        assert!(hub.emit_token(7, 0, 42));
+        assert!(hub.emit_token(7, 1, 43));
+        hub.finish(resp(7));
+        let got: Vec<TokenEvent> = rx.iter().collect();
+        assert_eq!(got.len(), 3, "two tokens then Done, channel closes");
+        match &got[0] {
+            TokenEvent::Token { id, index, token } => {
+                assert_eq!((*id, *index, *token), (7, 0, 42));
+            }
+            other => panic!("expected Token, got {other:?}"),
+        }
+        match &got[2] {
+            TokenEvent::Done(r) => assert_eq!(r.id, 7),
+            other => panic!("expected Done, got {other:?}"),
+        }
+        assert_eq!(hub.done_count(), 1);
+        assert_eq!(hub.completed(), 1);
+    }
+
+    #[test]
+    fn emit_to_unknown_or_dropped_receiver_reports_disconnect() {
+        let hub = EmitHub::new(1);
+        assert!(!hub.emit_token(99, 0, 1), "no sink registered");
+        let (id, rx) = hub.register(|| 3).unwrap();
+        drop(rx);
+        assert!(!hub.emit_token(id, 0, 1), "receiver dropped");
+    }
+
+    #[test]
+    fn cancel_is_idempotent_and_suppresses_terminal_counters() {
+        let hub = EmitHub::new(1);
+        let (id, rx) = hub.register(|| 5).unwrap();
+        hub.cancel(id);
+        hub.cancel(id);
+        assert!(hub.is_cancelled(id));
+        assert_eq!(hub.completed(), 1, "cancel counted once");
+        // a racing finish/fail after cancel must not double-count
+        hub.finish(resp(id));
+        hub.fail(id, "late");
+        assert_eq!(hub.done_count(), 0);
+        assert_eq!(hub.completed(), 1);
+        assert_eq!(rx.iter().count(), 0, "channel closed without events");
+    }
+
+    #[test]
+    fn fail_delivers_reason() {
+        let hub = EmitHub::new(1);
+        let (id, rx) = hub.register(|| 9).unwrap();
+        hub.fail(id, "expired");
+        match rx.iter().next().unwrap() {
+            TokenEvent::Failed { id: got, reason } => {
+                assert_eq!(got, id);
+                assert_eq!(reason, "expired");
+            }
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(hub.completed(), 1);
+    }
+
+    #[test]
+    fn register_after_shutdown_is_rejected() {
+        let hub = EmitHub::new(1);
+        let (id, rx) = hub.register(|| 1).unwrap();
+        hub.request_shutdown();
+        assert!(
+            hub.register(|| 2).is_none(),
+            "late submissions are shed, not left with a hanging channel"
+        );
+        // pre-shutdown registrations still get their terminal event
+        hub.fail_all("teardown");
+        match rx.iter().next().unwrap() {
+            TokenEvent::Failed { id: got, .. } => assert_eq!(got, id),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+        assert_eq!(hub.completed(), 1);
+    }
+
+    #[test]
+    fn gauges_sum_across_workers_and_stats_export() {
+        let hub = EmitHub::new(2);
+        hub.publish(0, 3, 1000);
+        hub.publish(1, 1, 500);
+        assert_eq!(hub.active_lanes(), 4);
+        assert_eq!(hub.kv_live_bytes(), 1500);
+        hub.request_shutdown();
+        let j = Json::parse(&hub.stats_json(2, 1).dump()).unwrap();
+        assert_eq!(j.get("active").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("kv_live_bytes").and_then(Json::as_usize), Some(1500));
+        assert_eq!(j.get("pending").and_then(Json::as_usize), Some(2));
+        assert_eq!(j.get("parked").and_then(Json::as_usize), Some(1));
+        assert_eq!(j.get("shutting_down").and_then(Json::as_usize), Some(1));
+    }
+
+    #[test]
+    fn register_blocks_emit_until_sink_installed() {
+        // the admission race: a worker that claims the request the
+        // instant submit returns must still deliver its first token —
+        // while the sink table is locked inside register, an emit from
+        // another thread parks on the mutex instead of dropping the token
+        let hub = std::sync::Arc::new(EmitHub::new(1));
+        let mut emitter = None;
+        let reg = hub.register(|| {
+            let h = hub.clone();
+            let t = std::thread::spawn(move || h.emit_token(11, 0, 7));
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(!t.is_finished(), "emit must wait for the sink");
+            emitter = Some(t);
+            11
+        });
+        let (id, rx) = reg.unwrap();
+        assert_eq!(id, 11);
+        assert!(
+            emitter.unwrap().join().unwrap(),
+            "the parked emit lands once the sink is installed"
+        );
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            TokenEvent::Token { token, .. } => assert_eq!(token, 7),
+            other => panic!("expected Token, got {other:?}"),
+        }
+    }
+}

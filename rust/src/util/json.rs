@@ -163,6 +163,10 @@ pub fn s(x: &str) -> Json {
     Json::Str(x.to_string())
 }
 
+pub fn boolean(b: bool) -> Json {
+    Json::Bool(b)
+}
+
 pub fn arr<I: IntoIterator<Item = Json>>(it: I) -> Json {
     Json::Arr(it.into_iter().collect())
 }

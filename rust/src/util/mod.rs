@@ -7,3 +7,4 @@ pub mod cli;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod runid;

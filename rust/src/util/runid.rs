@@ -1,0 +1,45 @@
+//! Run identifiers for metrics files. Concurrent or repeated runs used
+//! to clobber each other's `runs/*.json`; suffixing each export with a
+//! run id keeps every run's artifact while a stable-named copy stays in
+//! place for tooling that hardcodes the path.
+
+use std::process;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// A short, practically-unique id for this run: unix seconds + pid, both
+/// hex. Two runs collide only if the same pid is reused within a second.
+pub fn run_id() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    format!("{secs:x}-{:x}", process::id())
+}
+
+/// `name.json` -> `name_<rid>.json` (appends when there is no extension).
+pub fn suffixed(file_name: &str, rid: &str) -> String {
+    match file_name.rsplit_once('.') {
+        Some((stem, ext)) => format!("{stem}_{rid}.{ext}"),
+        None => format!("{file_name}_{rid}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_id_is_hex_pair() {
+        let rid = run_id();
+        let (a, b) = rid.split_once('-').expect("secs-pid shape");
+        assert!(u64::from_str_radix(a, 16).is_ok());
+        assert!(u64::from_str_radix(b, 16).is_ok());
+    }
+
+    #[test]
+    fn suffix_goes_before_the_extension() {
+        assert_eq!(suffixed("serve_metrics.json", "ab-1"),
+                   "serve_metrics_ab-1.json");
+        assert_eq!(suffixed("noext", "ab-1"), "noext_ab-1");
+    }
+}

@@ -1,0 +1,287 @@
+//! HTTP front-door integration tests (tier-1, std `TcpStream` clients,
+//! no artifacts): the SSE stream must carry exactly the token ids the
+//! engine commits — reassembling byte-identical to the in-process
+//! single-loop engine at 1 and 2 workers; a malformed request must get a
+//! `400` without wedging a lane; a client that disconnects mid-stream
+//! must have its lane and KV pages freed (observed via the `/stats`
+//! gauges returning to zero); and a full queue must shed load with `429`
+//! + `Retry-After` instead of queueing unboundedly.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use ptq161::coordinator::Pipeline;
+use ptq161::eval::ModelEval;
+use ptq161::runtime::Runtime;
+use ptq161::serve::batcher::Batcher;
+use ptq161::serve::load::{http_generate, reconstruct_text, Outcome};
+use ptq161::serve::{
+    serve_http, Engine, EngineCfg, GenRequest, HttpServerCfg,
+    MetricsRegistry, ShardRun, ShardSpec,
+};
+use ptq161::util::json::Json;
+
+/// Single-loop in-process engine run — the identity baseline. Texts in
+/// submit order (ids are assigned in submit order on both paths).
+fn baseline(pipe: &Pipeline, me: &ModelEval, reqs: &[GenRequest]) -> Vec<String> {
+    let mut batcher = Batcher::new(pipe.cfg.b_eval);
+    for r in reqs {
+        batcher.submit(r.clone());
+    }
+    let mut metrics = MetricsRegistry::new("baseline");
+    let mut engine = Engine::new(pipe, me);
+    let mut resps = engine.run(&mut batcher, &mut metrics).unwrap();
+    resps.sort_by_key(|r| r.id);
+    resps.into_iter().map(|r| r.text).collect()
+}
+
+/// Send raw bytes, read the full response (the server closes after each
+/// response, so read-to-end terminates).
+fn raw(addr: &str, request: &[u8]) -> String {
+    let mut conn = TcpStream::connect(addr).unwrap();
+    conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    conn.write_all(request).unwrap();
+    let mut out = Vec::new();
+    conn.read_to_end(&mut out).unwrap();
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// The `/stats` gauges as parsed JSON.
+fn stats(addr: &str) -> Json {
+    let resp = raw(addr, b"GET /stats HTTP/1.1\r\n\r\n");
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("{}");
+    Json::parse(body).unwrap()
+}
+
+fn gauge(j: &Json, key: &str) -> usize {
+    j.get(key).and_then(Json::as_usize).unwrap_or(usize::MAX)
+}
+
+/// Spawn a bounded front door, run `client` against it, return what the
+/// server's engine deployment produced.
+fn with_server<T>(
+    workers: usize,
+    hcfg: &HttpServerCfg,
+    seed: u64,
+    client: impl FnOnce(&str, &Pipeline) -> T,
+) -> (ShardRun, T) {
+    let rt = Runtime::native();
+    let pipe = Pipeline::new(&rt, "micro").unwrap();
+    let params = pipe.init_params(seed);
+    let me = ModelEval::Dense(&params);
+    let ecfg = EngineCfg { workers, ..EngineCfg::default() };
+    let spec = ShardSpec { label: "http-test", page_size: 16, kv_pages: None };
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    thread::scope(|scope| {
+        let (p, m, e, sp, h) = (&pipe, &me, &ecfg, &spec, hcfg);
+        let server =
+            scope.spawn(move || serve_http(p, m, e, sp, h, listener).unwrap());
+        let out = client(&addr, &pipe);
+        let run = server.join().expect("server thread panicked");
+        assert_eq!(run.worker_panics, 0, "a worker panicked under HTTP load");
+        (run, out)
+    })
+}
+
+#[test]
+fn sse_stream_is_byte_identical_to_in_process_engine() {
+    // micro has b_eval = 2, so 2 is the max effective worker count
+    for workers in [1usize, 2] {
+        let reqs: Vec<GenRequest> = (0..4)
+            .map(|i| GenRequest {
+                prompt: format!("SYSTEM: be terse. req {i}"),
+                max_new_tokens: [3, 1, 4, 2][i % 4],
+            })
+            .collect();
+        let hcfg = HttpServerCfg {
+            max_requests: Some(reqs.len()),
+            ..HttpServerCfg::default()
+        };
+        let (run, streamed) = with_server(workers, &hcfg, 91, |addr, pipe| {
+            let mut streamed = Vec::new();
+            for r in &reqs {
+                match http_generate(addr, r) {
+                    Outcome::Stream(sr) => {
+                        assert!(sr.in_order, "token indices out of order");
+                        // streamed token ids must reassemble to the done
+                        // text byte-for-byte
+                        assert_eq!(
+                            reconstruct_text(&r.prompt, &sr.tokens, pipe.cfg.seq),
+                            sr.text,
+                            "stream does not reassemble its own response"
+                        );
+                        assert_eq!(sr.tokens.len(), r.max_new_tokens);
+                        streamed.push(sr.text);
+                    }
+                    other => panic!("expected a stream, got {other:?}"),
+                }
+            }
+            let base = baseline(pipe, &ModelEval::Dense(&pipe.init_params(91)), &reqs);
+            assert_eq!(
+                streamed, base,
+                "w{workers}: streamed tokens diverge from in-process engine"
+            );
+            streamed
+        });
+        assert_eq!(run.responses.len(), streamed.len());
+        // engine-side TTFT must be recorded for every emitting request
+        let snap = Json::parse(&run.metrics.snapshot().dump()).unwrap();
+        assert!(
+            snap.get("ttft_p99_ms").and_then(Json::as_f64).unwrap() > 0.0,
+            "w{workers}: ttft percentiles missing from metrics"
+        );
+    }
+}
+
+#[test]
+fn malformed_request_gets_400_without_wedging_a_lane() {
+    let hcfg = HttpServerCfg { max_requests: Some(1), ..HttpServerCfg::default() };
+    let (_run, ()) = with_server(1, &hcfg, 92, |addr, pipe| {
+        // not JSON at all
+        let body = "this is not json";
+        let resp = raw(
+            addr,
+            format!(
+                "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // JSON but missing the prompt field
+        let body = r#"{"max_new_tokens": 4}"#;
+        let resp = raw(
+            addr,
+            format!(
+                "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        );
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // a broken request line
+        let resp = raw(addr, b"NONSENSE\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 400"), "got: {resp}");
+        // unknown route
+        let resp = raw(addr, b"GET /nope HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+        // after all of that, a valid request must still stream fine
+        let req = GenRequest { prompt: "still alive".into(), max_new_tokens: 2 };
+        match http_generate(addr, &req) {
+            Outcome::Stream(sr) => {
+                assert_eq!(
+                    reconstruct_text(&req.prompt, &sr.tokens, pipe.cfg.seq),
+                    sr.text
+                );
+            }
+            other => panic!("expected a stream, got {other:?}"),
+        }
+    });
+}
+
+#[test]
+fn client_disconnect_mid_stream_frees_lane_and_kv_pages() {
+    // one cancel + one final request retire the server
+    let hcfg = HttpServerCfg { max_requests: Some(2), ..HttpServerCfg::default() };
+    let (run, ()) = with_server(1, &hcfg, 93, |addr, _pipe| {
+        // start a long stream, read until the first token event, vanish
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let body = r#"{"prompt": "disconnect me", "max_new_tokens": 40}"#;
+        conn.write_all(
+            format!(
+                "POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut seen = Vec::new();
+        let mut chunk = [0u8; 1024];
+        while !String::from_utf8_lossy(&seen).contains("event: token") {
+            let n = conn.read(&mut chunk).unwrap();
+            assert!(n > 0, "stream ended before the first token");
+            seen.extend_from_slice(&chunk[..n]);
+        }
+        drop(conn);
+        // the owning worker must sweep the cancel: lane freed, KV pages
+        // freed, the cancellation counted — all observable via /stats
+        let deadline = Instant::now() + Duration::from_secs(60);
+        loop {
+            let j = stats(addr);
+            if gauge(&j, "active") == 0
+                && gauge(&j, "kv_live_bytes") == 0
+                && gauge(&j, "cancelled") == 1
+            {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "lane/pages never freed after disconnect: {}",
+                j.dump()
+            );
+            thread::sleep(Duration::from_millis(25));
+        }
+        // the freed capacity must be reusable
+        let req = GenRequest { prompt: "after the storm".into(), max_new_tokens: 2 };
+        match http_generate(addr, &req) {
+            Outcome::Stream(sr) => assert_eq!(sr.tokens.len(), 2),
+            other => panic!("expected a stream, got {other:?}"),
+        }
+    });
+    assert_eq!(run.metrics.cancelled, 1, "cancel missing from merged metrics");
+    // only the surviving request has a response
+    assert_eq!(run.responses.len(), 1);
+}
+
+#[test]
+fn full_queue_sheds_load_with_429_and_retry_after() {
+    // queue_cap 0: every generate is shed — deterministic backpressure
+    let hcfg = HttpServerCfg {
+        queue_cap: 0,
+        retry_after_s: 3,
+        max_requests: Some(2),
+    };
+    let (run, ()) = with_server(1, &hcfg, 94, |addr, _pipe| {
+        for _ in 0..2 {
+            let req = GenRequest { prompt: "shed me".into(), max_new_tokens: 2 };
+            match http_generate(addr, &req) {
+                Outcome::Overloaded { retry_after_s } => {
+                    assert_eq!(retry_after_s, 3.0, "Retry-After hint wrong");
+                }
+                other => panic!("expected 429, got {other:?}"),
+            }
+        }
+    });
+    assert_eq!(run.responses.len(), 0);
+}
+
+#[test]
+fn healthz_and_stats_respond() {
+    let hcfg = HttpServerCfg { max_requests: Some(1), ..HttpServerCfg::default() };
+    let (_run, ()) = with_server(1, &hcfg, 95, |addr, pipe| {
+        let resp = raw(addr, b"GET /healthz HTTP/1.1\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200"), "got: {resp}");
+        assert!(resp.contains("\"ok\":true"), "got: {resp}");
+        let j = stats(addr);
+        for key in
+            ["active", "kv_live_bytes", "pending", "done", "cancelled", "rejected"]
+        {
+            assert!(j.get(key).is_some(), "missing /stats key {key}");
+        }
+        // retire the server
+        let req = GenRequest { prompt: "bye".into(), max_new_tokens: 1 };
+        match http_generate(addr, &req) {
+            Outcome::Stream(sr) => {
+                assert_eq!(
+                    reconstruct_text(&req.prompt, &sr.tokens, pipe.cfg.seq),
+                    sr.text
+                );
+            }
+            other => panic!("expected a stream, got {other:?}"),
+        }
+    });
+}
